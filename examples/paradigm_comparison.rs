@@ -1,0 +1,54 @@
+//! Per-semantic vs semantics-complete, on all five datasets: memory
+//! expansion and feature-access redundancy at the trace level (the §III
+//! motivation study), then simulated cycles for both paradigms.
+
+use tlv_hgnn::datasets::Dataset;
+use tlv_hgnn::engine::{
+    walk_per_semantic, walk_semantics_complete, AccessCounter, MemoryTracker,
+};
+use tlv_hgnn::model::{ModelConfig, ModelKind};
+use tlv_hgnn::sim::{AccelConfig, ExecMode, Simulator};
+use tlv_hgnn::util::table::{f2, pct, Table};
+
+fn main() {
+    let m = ModelConfig::new(ModelKind::Rgcn);
+    let mut t = Table::new(&[
+        "dataset", "exp_per_sem", "exp_sem_complete", "target_access_saving", "cycles_B", "cycles_S", "speedup",
+    ]);
+    for d in Dataset::ALL {
+        let scale = if d.is_large() { d.bench_scale() * 0.25 } else { d.bench_scale() };
+        let g = d.load(scale);
+        let init = g.initial_footprint_bytes() as f64;
+
+        let mut ps_mem = MemoryTracker::default();
+        let mut ps_acc = AccessCounter::default();
+        {
+            let mut tee = tlv_hgnn::engine::TeeSink(&mut ps_mem, &mut ps_acc);
+            walk_per_semantic(&g, &m, &mut tee);
+        }
+        let mut sc_mem = MemoryTracker::default();
+        let mut sc_acc = AccessCounter::default();
+        {
+            let order = g.target_vertices();
+            let mut tee = tlv_hgnn::engine::TeeSink(&mut sc_mem, &mut sc_acc);
+            walk_semantics_complete(&g, &m, &order, &mut tee);
+        }
+
+        let cfg = AccelConfig::tlv_default();
+        let sim = Simulator::new(cfg, &g, m.clone());
+        let b = sim.run(ExecMode::PerSemanticBaseline);
+        let s = sim.run(ExecMode::SemanticsComplete);
+
+        t.row(&[
+            d.name().into(),
+            f2((init + ps_mem.peak_bytes as f64) / init),
+            f2((init + sc_mem.peak_bytes as f64) / init),
+            pct(1.0 - sc_acc.total as f64 / ps_acc.total as f64),
+            b.cycles.to_string(),
+            s.cycles.to_string(),
+            f2(b.cycles as f64 / s.cycles as f64),
+        ]);
+    }
+    println!("=== Per-semantic (-B) vs semantics-complete (-S) ===");
+    println!("{}", t.render());
+}

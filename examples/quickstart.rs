@@ -1,0 +1,42 @@
+//! Quickstart: load a dataset, run the TLV-HGNN simulator in its full
+//! configuration (-O), and print the headline metrics.
+//!
+//!     cargo run --release --example quickstart
+
+use tlv_hgnn::datasets::Dataset;
+use tlv_hgnn::energy::{chip_area_mm2, chip_power_w, tlv_energy, EnergyTable};
+use tlv_hgnn::hetgraph::stats;
+use tlv_hgnn::model::{ModelConfig, ModelKind};
+use tlv_hgnn::sim::{AccelConfig, ExecMode, Simulator};
+use tlv_hgnn::util::table::{human_bytes, human_count};
+
+fn main() {
+    let dataset = Dataset::Acm;
+    let g = dataset.load(dataset.bench_scale());
+    let s = stats::compute(&g);
+    println!("dataset {} — {} vertices, {} edges, {} semantics", s.name, s.vertices, s.edges, s.semantics);
+    println!("  redundant feature accesses: {:.1}%", s.redundant_access_fraction * 100.0);
+    println!("  top-15% targets hold {:.1}% of edges\n", s.top15_edge_share * 100.0);
+
+    let cfg = AccelConfig::tlv_default();
+    println!(
+        "TLV-HGNN: {} channels x {} RPEs, {:.2} TFLOPS peak, {:.2} mm^2, {:.2} W",
+        cfg.channels,
+        cfg.rpes_per_channel,
+        cfg.peak_tflops(),
+        chip_area_mm2(&cfg),
+        chip_power_w(&cfg)
+    );
+
+    let m = ModelConfig::new(ModelKind::Rgcn);
+    let sim = Simulator::new(cfg.clone(), &g, m.clone());
+    let r = sim.run(ExecMode::OverlapGrouped);
+    let e = tlv_energy(&r, &cfg, &m, &EnergyTable::default());
+    println!("\nRGCN inference (semantics-complete, overlap-grouped):");
+    println!("  cycles            {}", human_count(r.cycles));
+    println!("  wall @1GHz        {:.3} ms", r.time_ms(&cfg));
+    println!("  DRAM accesses     {}", human_count(r.dram.accesses));
+    println!("  DRAM traffic      {}", human_bytes(r.dram.bytes));
+    println!("  cache hit rate    {:.1}%", r.cache_hit_rate() * 100.0);
+    println!("  energy            {:.2} mJ ({:.0}% DRAM)", e.total_mj(), e.dram_fraction() * 100.0);
+}

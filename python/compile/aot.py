@@ -1,0 +1,128 @@
+"""AOT compile path: lower the L2 block functions to HLO *text* artifacts
+the Rust runtime loads through the `xla` crate's PJRT CPU client.
+
+HLO text (NOT `lowered.compile()` / serialized protos) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids that
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    cd python && python -m compile.aot --out ../artifacts
+
+Emits, per runtime profile:
+    artifacts/fp_block.hlo.txt
+    artifacts/{rgcn,rgat,nars}_block.hlo.txt
+    artifacts/manifest.json      (shapes the Rust executor must honor)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile.model import make_block_fn, make_fp_fn
+
+# Runtime profile: the block geometry the Rust coordinator pads requests
+# to. S=6 covers every dataset's per-type semantic fan-in after the
+# coordinator's semantic bucketing; K=16 neighbors per semantic per block
+# row (long lists are split across rows and partially aggregated — exact
+# because weighted sums are associative); Din capped at 64 via the hashing
+# trick (matches ReferenceEngine::new(max_in_dim=64)).
+PROFILE = {
+    "block": 32,  # B: targets per block
+    "semantics": 6,  # S
+    "max_neighbors": 16,  # K
+    "in_dim": 64,  # Din (capped raw dim)
+    "hidden": 64,  # D
+}
+
+MODELS = ("rgcn", "rgat", "nars")
+
+
+def to_hlo(lowered):
+    """Returns (hlo_text, input_shapes, output_shapes).
+
+    Shapes come from the XlaComputation's program shape because XLA prunes
+    unused entry parameters (e.g. attention vectors in the rgcn block) —
+    the manifest must describe what the artifact *actually* takes.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    ps = comp.program_shape()
+    ins = [["f32", list(p.dimensions())] for p in ps.parameter_shapes()]
+    outs = [
+        ["f32", list(t.dimensions())]
+        for t in ps.result_shape().tuple_shapes()
+    ]
+    return comp.as_hlo_text(), ins, outs
+
+
+# Canonical argument names per artifact, in lowering order, BEFORE pruning.
+ARG_NAMES = {
+    "fp_block": ["x", "w"],
+    "rgcn_block": ["h_tgt", "h_nbr", "mask", "betas"],  # a_l/a_r pruned
+    "nars_block": ["h_tgt", "h_nbr", "mask", "betas"],
+    "rgat_block": ["h_tgt", "h_nbr", "mask", "a_l", "a_r", "betas"],
+}
+
+
+def lower_fp(p):
+    fn = make_fp_fn()
+    x = jax.ShapeDtypeStruct((p["block"], p["in_dim"]), jnp.float32)
+    w = jax.ShapeDtypeStruct((p["in_dim"], p["hidden"]), jnp.float32)
+    return to_hlo(jax.jit(fn).lower(x, w))
+
+
+def lower_block(kind: str, p):
+    fn = make_block_fn(kind)
+    b, s, k, d = p["block"], p["semantics"], p["max_neighbors"], p["hidden"]
+    args = (
+        jax.ShapeDtypeStruct((b, d), jnp.float32),  # h_tgt
+        jax.ShapeDtypeStruct((b, s, k, d), jnp.float32),  # h_nbr
+        jax.ShapeDtypeStruct((b, s, k), jnp.float32),  # mask
+        jax.ShapeDtypeStruct((s, d), jnp.float32),  # a_l
+        jax.ShapeDtypeStruct((s, d), jnp.float32),  # a_r
+        jax.ShapeDtypeStruct((s,), jnp.float32),  # betas
+    )
+    return to_hlo(jax.jit(fn).lower(*args))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"profile": PROFILE, "artifacts": {}}
+
+    entries = [("fp_block", lower_fp(PROFILE))]
+    entries += [(f"{kind}_block", lower_block(kind, PROFILE)) for kind in MODELS]
+    for name, (text, ins, outs) in entries:
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        names = ARG_NAMES[name]
+        assert len(names) == len(ins), f"{name}: {len(names)} names vs {len(ins)} params"
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "arg_names": names,
+            "inputs": ins,
+            "outputs": outs,
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

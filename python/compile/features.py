@@ -1,0 +1,60 @@
+"""Deterministic parameter/feature generation, bit-identical to the Rust
+side (`engine::functional::det_f32`).
+
+Both layers derive raw features, projection weights, attention vectors and
+fusion weights from the same SplitMix64-style hash, so the PJRT-executed
+artifact can be cross-validated against the Rust CPU reference without
+shipping parameter files.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+_M1 = np.uint64(0x9E3779B97F4A7C15)
+_M2 = np.uint64(0xBF58476D1CE4E5B9)
+_M3 = np.uint64(0x94D049BB133111EB)
+
+
+def det_f32(tag: int, i, j) -> np.ndarray:
+    """Vectorized port of Rust `det_f32(tag, i, j)` -> f32 in [-1, 1).
+
+    `i` and `j` may be scalars or integer arrays (broadcast together).
+    """
+    i = np.asarray(i, dtype=np.uint64)
+    j = np.asarray(j, dtype=np.uint64)
+    tag_u = np.uint64(tag)
+    with np.errstate(over="ignore"):
+        z = tag_u * _M1 + i * _M2 + j * _M3
+        z = (z ^ (z >> np.uint64(30))) * _M2
+        z = (z ^ (z >> np.uint64(27))) * _M3
+        z = z ^ (z >> np.uint64(31))
+    top24 = (z >> np.uint64(40)).astype(np.float64)
+    return (top24 / float(1 << 24) * 2.0 - 1.0).astype(np.float32)
+
+
+def projection_weight(type_idx: int, in_dim: int, hidden: int) -> np.ndarray:
+    """W_t [in_dim, hidden] — matches ReferenceEngine::new (tag 0x57AA+t)."""
+    ii, jj = np.meshgrid(np.arange(in_dim), np.arange(hidden), indexing="ij")
+    return det_f32(0x57AA + type_idx, ii, jj) * np.float32(0.2)
+
+
+def raw_feature(vids: np.ndarray, in_dim: int) -> np.ndarray:
+    """Raw features [len(vids), in_dim] — tag 0xFEA7, i=vid, j=col."""
+    vids = np.asarray(vids, dtype=np.uint64)
+    ii, jj = np.meshgrid(vids, np.arange(in_dim), indexing="ij")
+    return det_f32(0xFEA7, ii, jj)
+
+
+def attention_vectors(sem_idx: int, hidden: int) -> tuple[np.ndarray, np.ndarray]:
+    """(a_l, a_r) per semantic — tag 0xA77+s, i in {0,1}."""
+    cols = np.arange(hidden)
+    al = det_f32(0xA77 + sem_idx, np.zeros(hidden, dtype=np.uint64), cols) * np.float32(0.3)
+    ar = det_f32(0xA77 + sem_idx, np.ones(hidden, dtype=np.uint64), cols) * np.float32(0.3)
+    return al, ar
+
+
+def fusion_weights(num_semantics: int) -> np.ndarray:
+    """beta_r = 0.5 + 0.5*|det_f32(0xF05E, s, 0)| — matches the Rust side."""
+    s = np.arange(num_semantics)
+    return (0.5 + 0.5 * np.abs(det_f32(0xF05E, s, np.zeros_like(s)))).astype(np.float32)

@@ -1,0 +1,59 @@
+"""L1 Pallas kernel: weighted neighbor aggregation (NA stage) — the RPE
+*aggregation mode* (paper Fig. 4b) rethought for TPU.
+
+Hardware adaptation (DESIGN.md §7): the paper reduces neighbor vectors
+pairwise through an MOA tree with a feedback path for odd vectors. On TPU
+the natural analogue is VPU element-wise FMA over (8,128)-shaped vregs
+with the neighbor axis reduced by a fori_loop accumulator held in VMEM —
+the weighted sum is contraction-free (no MXU needed) and the BlockSpec
+expresses the per-target streaming the paper's dispatcher does per group.
+
+The kernel processes one target block per grid step: feats [BK, D] and
+weights [BK] reduce to [D]. Padding neighbors carry weight 0, so the
+reduction is exact without masking inside the kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# One target's neighbor list per grid step; D tiled to the VPU lane width.
+BLOCK_D = 128
+
+
+def _agg_kernel(w_ref, f_ref, o_ref):
+    """o[d] = sum_k w[k] * f[k, d] for one (target, D-tile)."""
+    w = w_ref[0, :]  # [K]
+    f = f_ref[0]  # [K, BLOCK_D]
+    o_ref[0, :] = jnp.sum(w[:, None] * f, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d",))
+def aggregate(feats, weights, *, block_d: int = BLOCK_D):
+    """Weighted reduction over neighbors.
+
+    feats   [B, K, D]
+    weights [B, K]   (0 where padded)
+    ->      [B, D]
+    """
+    b, k, d = feats.shape
+    bd = min(block_d, max(8, d))
+    pd = (d + bd - 1) // bd * bd
+    fp = jnp.pad(feats, ((0, 0), (0, 0), (0, pd - d)))
+
+    out = pl.pallas_call(
+        _agg_kernel,
+        grid=(b, pd // bd),
+        in_specs=[
+            pl.BlockSpec((1, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, k, bd), lambda i, j: (i, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bd), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, pd), jnp.float32),
+        interpret=True,
+    )(weights, fp)
+    return out[:, :d]

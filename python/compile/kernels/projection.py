@@ -1,0 +1,66 @@
+"""L1 Pallas kernel: feature projection (FP stage) — the RPE *linear
+transformation mode* (paper Fig. 4a) rethought for TPU.
+
+Hardware adaptation (DESIGN.md §7): the paper maps matmul onto MOA
+reduction trees with the A-operand held in a register; on TPU the analogue
+is the 128x128 MXU systolic tile with both operands staged in VMEM. The
+BlockSpec grid expresses the HBM->VMEM schedule the paper's dispatcher
+performs: x tiles stream along M, W tiles stay resident along N, the K
+reduction runs inside the kernel (accumulator in VMEM scratch, f32).
+
+interpret=True everywhere: real-TPU lowering emits a Mosaic custom call
+the CPU PJRT plugin cannot execute (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-shaped tiles. Block sizes keep the working set (x-tile + w-tile +
+# accumulator) at 128*K + K*128 + 128*128 floats — well under the 6 MB
+# feature-cache budget the paper gives a channel (Table II).
+BLOCK_M = 128
+BLOCK_N = 128
+
+
+def _proj_kernel(x_ref, w_ref, o_ref):
+    """One (BLOCK_M, BLOCK_N) output tile: full-K dot in f32."""
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def projection(x, w, *, block_m: int = BLOCK_M, block_n: int = BLOCK_N):
+    """[B, Din] @ [Din, D] -> [B, D] via a Pallas grid.
+
+    Shapes need not be tile-multiples: inputs are zero-padded up to the
+    grid and the result is sliced back (zero rows/cols are exact under
+    matmul).
+    """
+    b, k = x.shape
+    k2, d = w.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    bm = min(block_m, max(8, b))
+    bn = min(block_n, max(8, d))
+    pb = (b + bm - 1) // bm * bm
+    pd = (d + bn - 1) // bn * bn
+    xp = jnp.pad(x, ((0, pb - b), (0, 0)))
+    wp = jnp.pad(w, ((0, 0), (0, pd - d)))
+
+    out = pl.pallas_call(
+        _proj_kernel,
+        grid=(pb // bm, pd // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pb, pd), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    return out[:b, :d]

@@ -1,0 +1,64 @@
+"""AOT path: lowering must produce parseable HLO text with the expected
+entry signature (what the Rust PJRT loader consumes)."""
+
+import json
+
+from compile.aot import ARG_NAMES, MODELS, PROFILE, lower_block, lower_fp
+
+
+class TestLowering:
+    def test_fp_block_entry(self):
+        text, ins, outs = lower_fp(PROFILE)
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+        assert ins == [
+            ["f32", [PROFILE["block"], PROFILE["in_dim"]]],
+            ["f32", [PROFILE["in_dim"], PROFILE["hidden"]]],
+        ]
+        assert outs == [["f32", [PROFILE["block"], PROFILE["hidden"]]]]
+
+    def test_all_models_lower(self):
+        b, s, k, d = (
+            PROFILE["block"],
+            PROFILE["semantics"],
+            PROFILE["max_neighbors"],
+            PROFILE["hidden"],
+        )
+        for kind in MODELS:
+            text, ins, outs = lower_block(kind, PROFILE)
+            assert text.startswith("HloModule"), kind
+            assert len(ins) == len(ARG_NAMES[f"{kind}_block"]), kind
+            # First three params are always h_tgt / h_nbr / mask.
+            assert ins[0] == ["f32", [b, d]]
+            assert ins[1] == ["f32", [b, s, k, d]]
+            assert ins[2] == ["f32", [b, s, k]]
+            assert outs == [["f32", [b, d]]]
+
+    def test_rgat_keeps_attention_params(self):
+        _, ins, _ = lower_block("rgat", PROFILE)
+        s, d = PROFILE["semantics"], PROFILE["hidden"]
+        assert ["f32", [s, d]] in ins, "a_l/a_r must survive lowering for rgat"
+
+    def test_manifest_roundtrip(self, tmp_path):
+        import os
+        import subprocess
+        import sys
+
+        out = tmp_path / "artifacts"
+        # Run from the python/ package root regardless of pytest's cwd.
+        pkg_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out", str(out)],
+            check=True,
+            cwd=pkg_root,
+        )
+        manifest = json.loads((out / "manifest.json").read_text())
+        assert set(manifest["artifacts"]) == {
+            "fp_block",
+            "rgcn_block",
+            "rgat_block",
+            "nars_block",
+        }
+        for meta in manifest["artifacts"].values():
+            assert (out / meta["file"]).exists()
+            assert len(meta["arg_names"]) == len(meta["inputs"])

@@ -1,0 +1,103 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes; every case asserts allclose against ref.py —
+the core correctness signal for the compile path.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.aggregate import aggregate
+from compile.kernels.projection import projection
+from compile.kernels.ref import ref_aggregate, ref_projection
+
+RTOL = 1e-5
+ATOL = 1e-5
+
+
+def rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(shape, dtype=np.float32)
+
+
+class TestProjection:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        b=st.integers(1, 200),
+        k=st.integers(1, 96),
+        d=st.integers(1, 200),
+        seed=st.integers(0, 2**31),
+    )
+    def test_matches_ref_swept(self, b, k, d, seed):
+        x = rand((b, k), seed)
+        w = rand((k, d), seed + 1)
+        got = projection(x, w)
+        want = ref_projection(x, w)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    @pytest.mark.parametrize("b,k,d", [(128, 64, 128), (256, 128, 256), (1, 1, 1), (7, 3, 5)])
+    def test_matches_ref_fixed(self, b, k, d):
+        x = rand((b, k), 0)
+        w = rand((k, d), 1)
+        np.testing.assert_allclose(projection(x, w), ref_projection(x, w), rtol=RTOL, atol=ATOL)
+
+    def test_zero_inputs(self):
+        x = jnp.zeros((16, 32), jnp.float32)
+        w = jnp.zeros((32, 8), jnp.float32)
+        assert jnp.all(projection(x, w) == 0)
+
+    def test_identity_weight(self):
+        x = rand((10, 16), 3)
+        w = np.eye(16, dtype=np.float32)
+        np.testing.assert_allclose(projection(x, w), x, rtol=RTOL, atol=ATOL)
+
+    def test_tile_boundary_exact_multiple(self):
+        x = rand((128, 128), 4)
+        w = rand((128, 128), 5)
+        np.testing.assert_allclose(projection(x, w), ref_projection(x, w), rtol=RTOL, atol=1e-4)
+
+
+class TestAggregate:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        b=st.integers(1, 64),
+        k=st.integers(1, 48),
+        d=st.integers(1, 160),
+        seed=st.integers(0, 2**31),
+    )
+    def test_matches_ref_swept(self, b, k, d, seed):
+        f = rand((b, k, d), seed)
+        w = rand((b, k), seed + 1)
+        got = aggregate(f, w)
+        want = ref_aggregate(f, w)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    def test_zero_weights_give_zero(self):
+        f = rand((4, 8, 32), 7)
+        w = np.zeros((4, 8), np.float32)
+        assert jnp.all(aggregate(f, w) == 0)
+
+    def test_one_hot_weights_select_row(self):
+        f = rand((2, 5, 16), 9)
+        w = np.zeros((2, 5), np.float32)
+        w[0, 3] = 1.0
+        w[1, 0] = 1.0
+        got = aggregate(f, w)
+        np.testing.assert_allclose(got[0], f[0, 3], rtol=RTOL, atol=ATOL)
+        np.testing.assert_allclose(got[1], f[1, 0], rtol=RTOL, atol=ATOL)
+
+    def test_mean_weights(self):
+        f = rand((3, 6, 64), 11)
+        w = np.full((3, 6), 1.0 / 6.0, np.float32)
+        np.testing.assert_allclose(aggregate(f, w), f.mean(axis=1), rtol=RTOL, atol=ATOL)
+
+    def test_padding_zero_weight_neighbors_exact(self):
+        # Padded neighbor rows with w=0 must not change the result even if
+        # features are garbage.
+        f = rand((2, 8, 32), 13)
+        w = rand((2, 8), 14)
+        f2 = np.concatenate([f, rand((2, 4, 32), 15) * 1e6], axis=1)
+        w2 = np.concatenate([w, np.zeros((2, 4), np.float32)], axis=1)
+        np.testing.assert_allclose(aggregate(f2, w2), aggregate(f, w), rtol=RTOL, atol=1e-3)

@@ -1,0 +1,17 @@
+//! Fig. 7(b): DRAM access reduction of TLV-HGNN vs A100 and HiHGNN.
+
+use tlv_hgnn::datasets::Dataset;
+use tlv_hgnn::model::ModelKind;
+use tlv_hgnn::report::{fig7b_dram, run_platforms};
+
+fn main() {
+    println!("=== Fig. 7(b): DRAM traffic reduction ===");
+    let mut rows = Vec::new();
+    for kind in ModelKind::ALL {
+        for d in Dataset::ALL {
+            rows.push(run_platforms(kind, d));
+        }
+    }
+    println!("{}", fig7b_dram(&rows).render());
+    println!("paper: -76.46% vs A100, -49.63% vs HiHGNN on average.");
+}

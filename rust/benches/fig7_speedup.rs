@@ -1,0 +1,27 @@
+//! Fig. 7(a): end-to-end speedup of TLV-HGNN over A100 and HiHGNN across
+//! 3 models × 5 datasets (bench scale; see DESIGN.md §2). Also times the
+//! simulator itself (the measurable hot path on this host).
+
+use tlv_hgnn::datasets::Dataset;
+use tlv_hgnn::model::ModelKind;
+use tlv_hgnn::report::{fig7a_speedup, run_platforms};
+use tlv_hgnn::util::bench::bench;
+
+fn main() {
+    println!("=== Fig. 7(a): Speedup (TLV-HGNN vs A100 / HiHGNN) ===");
+    let mut rows = Vec::new();
+    for kind in ModelKind::ALL {
+        for d in Dataset::ALL {
+            rows.push(run_platforms(kind, d));
+        }
+    }
+    println!("{}", fig7a_speedup(&rows).render());
+    println!("paper: GM 7.85x vs A100, 1.41x vs HiHGNN; up to 4.62x on large graphs;");
+    println!("       slightly below HiHGNN on small datasets (grouping overhead).");
+
+    // Host-side wall-clock of the full-platform sweep for one cell.
+    let s = bench("sim ACM/RGCN overlap-grouped (host wallclock)", 5, || {
+        run_platforms(ModelKind::Rgcn, Dataset::Acm)
+    });
+    s.print();
+}

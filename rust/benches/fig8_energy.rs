@@ -1,0 +1,13 @@
+//! Fig. 8: (a) energy on ACM + AM per platform; (b) TLV-HGNN breakdown.
+
+use tlv_hgnn::report::fig8_energy;
+
+fn main() {
+    let (a, b) = fig8_energy();
+    println!("=== Fig. 8(a): Energy (mJ) ===");
+    println!("{}", a.render());
+    println!("paper: -98.79% vs A100, -32.61% vs HiHGNN on average.\n");
+    println!("=== Fig. 8(b): TLV-HGNN energy breakdown (AM, RGCN) ===");
+    println!("{}", b.render());
+    println!("paper: off-chip DRAM dominates, then RPEs.");
+}

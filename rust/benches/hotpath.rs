@@ -1,0 +1,76 @@
+//! Host-side performance of the library's hot paths (the §Perf targets in
+//! EXPERIMENTS.md): simulator throughput, grouping, cache, DRAM model and
+//! trace walks. Criterion is not vendored offline; `util::bench` provides
+//! warmup + repeated timing with min/median/max.
+
+use tlv_hgnn::datasets::Dataset;
+use tlv_hgnn::engine::{walk_per_semantic, walk_semantics_complete, AccessCounter};
+use tlv_hgnn::grouping::{default_n_max, group_overlap_driven, OverlapHypergraph};
+use tlv_hgnn::hetgraph::VId;
+use tlv_hgnn::model::{ModelConfig, ModelKind};
+use tlv_hgnn::sim::{AccelConfig, ExecMode, FifoCache, Hbm, HbmConfig, Simulator};
+use tlv_hgnn::util::bench::{bench, black_box};
+
+fn main() {
+    let g = Dataset::Am.load(0.05);
+    let m = ModelConfig::new(ModelKind::Rgcn);
+    let edges = g.num_edges() as f64;
+    println!("workload: AM@0.05 V={} E={} S={}", g.num_vertices(), g.num_edges(), g.num_semantics());
+
+    let s = bench("walk_semantics_complete (trace only)", 10, || {
+        let mut c = AccessCounter::default();
+        walk_semantics_complete(&g, &m, &g.target_vertices(), &mut c);
+        c.total
+    });
+    s.print();
+    println!("  -> {:.1} M edge-events/s", edges / s.median.as_secs_f64() / 1e6);
+
+    bench("walk_per_semantic (trace only)", 10, || {
+        let mut c = AccessCounter::default();
+        walk_per_semantic(&g, &m, &mut c);
+        c.total
+    })
+    .print();
+
+    let h = OverlapHypergraph::build(&g, 0.01);
+    bench("hypergraph build (top-15%, jaccard)", 5, || {
+        black_box(OverlapHypergraph::build(&g, 0.01)).num_supers()
+    })
+    .print();
+    bench("louvain grouping (algorithm 2)", 5, || {
+        group_overlap_driven(&h, default_n_max(g.target_vertices().len(), 4), 4).groups.len()
+    })
+    .print();
+
+    let cfg = AccelConfig::tlv_default();
+    let sim = Simulator::new(cfg, &g, m.clone());
+    let s = bench("full cycle-sim, overlap-grouped (-O)", 5, || sim.run(ExecMode::OverlapGrouped).cycles);
+    s.print();
+    println!("  -> {:.1} M edges simulated/s", edges / s.median.as_secs_f64() / 1e6);
+    bench("full cycle-sim, per-semantic (-B)", 5, || {
+        sim.run(ExecMode::PerSemanticBaseline).cycles
+    })
+    .print();
+
+    // Micro: cache + DRAM models.
+    bench("fifo cache 1M accesses (50% resident)", 10, || {
+        let mut c = FifoCache::with_entries(32 * 1024);
+        let mut acc = 0u64;
+        for i in 0..1_000_000u32 {
+            if c.access(VId(i % 65536)) {
+                acc += 1;
+            }
+        }
+        acc
+    })
+    .print();
+    bench("hbm model 1M accesses", 10, || {
+        let mut hbm = Hbm::new(HbmConfig::hbm1_512gbps());
+        let mut t = 0;
+        for i in 0..1_000_000u64 {
+            t = hbm.access(t, (i * 256) % (1 << 28), 256);
+        }
+        t
+    })
+    .print();
+}

@@ -1,0 +1,10 @@
+//! Table III: memory expansion ratios on the AM dataset.
+
+use tlv_hgnn::report::table3_expansion;
+
+fn main() {
+    println!("=== Table III: Memory expansion ratios on AM ===");
+    println!("{}", table3_expansion().render());
+    println!("paper: A100 {{14.76, OOM, 13.64}}, HiHGNN {{8.21, 18.27, 7.52}},");
+    println!("       TVL-HGNN {{1.64, 2.38, 1.59}} for RGCN/RGAT/NARS.");
+}

@@ -1,0 +1,10 @@
+//! Table IV: area and power characteristics (TSMC 12nm-calibrated model).
+
+use tlv_hgnn::report::table4_area_power;
+
+fn main() {
+    println!("=== Table IV: Characteristics of TVL-HGNN ===");
+    println!("{}", table4_area_power().render());
+    println!("paper: 16.56 mm^2, 10613.71 mW total; memory 47.33% area / 8.34% power;");
+    println!("       computing module 43.11% area / 82.73% power.");
+}

@@ -1,0 +1,201 @@
+//! NVIDIA A100 baseline model.
+//!
+//! The paper measures DGL 1.0.2 on an A100-80GB with Nsight Compute
+//! (Table II: 19.5 TFLOPS FP32, 2039 GB/s HBM2e, 40 MB L2, 80 GB).
+//! Without the physical GPU we model the per-semantic DGL execution with a
+//! calibrated roofline over the same access streams the simulator counts —
+//! per DESIGN.md §2, this preserves what Fig. 7 measures about the A100:
+//! NA is memory-bound, redundant traffic is filtered only by the 40 MB L2,
+//! per-semantic partials are materialized in HBM, and framework overhead
+//! inflates peak memory (Fig. 2a / Table III, including OOM).
+
+use crate::engine::{walk_per_semantic, MemoryTracker, StreamSink, TeeSink};
+use crate::hetgraph::HetGraph;
+use crate::model::{ModelConfig, Workload};
+use crate::sim::cache::FifoCache;
+
+/// A100 platform parameters (Table II).
+#[derive(Debug, Clone)]
+pub struct GpuConfig {
+    pub peak_tflops: f64,
+    pub mem_bw_gbps: f64,
+    pub l2_bytes: u64,
+    pub hbm_bytes: u64,
+    /// Achievable fraction of peak FLOPs on dense GEMM (FP stage).
+    pub gemm_efficiency: f64,
+    /// Achievable fraction of peak FLOPs on sparse gather-scatter (NA).
+    pub spmm_efficiency: f64,
+    /// Achievable fraction of peak bandwidth on irregular access.
+    pub bw_efficiency: f64,
+    /// Framework memory overhead multiplier (PyTorch/DGL allocator,
+    /// autograd workspace): calibrated so AM/RGCN lands near the paper's
+    /// 14.76 expansion ratio.
+    pub framework_mem_factor: f64,
+    /// Fraction of L2 effectively available to vertex features: the rest
+    /// is continuously polluted by partial-tensor, workspace and weight
+    /// streams that share the cache (hardware-managed, unlike HiHGNN's
+    /// dedicated NA buffer).
+    pub l2_feature_share: f64,
+    /// Per-semantic kernel-launch + graph-prep overhead (µs).
+    pub per_semantic_overhead_us: f64,
+}
+
+impl GpuConfig {
+    pub fn a100_80g() -> Self {
+        GpuConfig {
+            peak_tflops: 19.5,
+            mem_bw_gbps: 2039.0,
+            l2_bytes: 40 * 1024 * 1024,
+            hbm_bytes: 80 * 1024 * 1024 * 1024,
+            gemm_efficiency: 0.65,
+            spmm_efficiency: 0.12,
+            bw_efficiency: 0.55,
+            framework_mem_factor: 1.8,
+            l2_feature_share: 0.35,
+            per_semantic_overhead_us: 100.0,
+        }
+    }
+}
+
+/// Result of the analytical GPU run.
+#[derive(Debug, Clone)]
+pub struct GpuResult {
+    pub time_ms: f64,
+    /// Bytes moved from HBM (after L2 filtering).
+    pub dram_bytes: u64,
+    pub dram_accesses: u64,
+    pub peak_mem_bytes: u64,
+    pub expansion_ratio: f64,
+    pub oom: bool,
+}
+
+/// Model one full-graph inference pass under the per-semantic paradigm.
+pub fn run_a100(g: &HetGraph, m: &ModelConfig, cfg: &GpuConfig) -> GpuResult {
+    let w = Workload::of(g, m);
+    let hb = m.hidden_bytes();
+
+    // --- Memory traffic: replay the per-semantic access stream through an
+    // L2-sized cache (GPU L2 ~ LRU; FIFO is a close proxy at this scale).
+    let mut stream = StreamSink::default();
+    let mut mem = MemoryTracker::default();
+    {
+        let mut tee = TeeSink(&mut stream, &mut mem);
+        walk_per_semantic(g, m, &mut tee);
+    }
+    let eff_l2 = (cfg.l2_bytes as f64 * cfg.l2_feature_share) as u64;
+    let mut l2 = FifoCache::with_bytes(eff_l2, hb);
+    let mut feature_misses = 0u64;
+    for &v in &stream.accesses {
+        if !l2.access(v) {
+            feature_misses += 1;
+        }
+    }
+    // Per-semantic partials: written to HBM during NA, re-read at SF.
+    let partial_bytes = 2 * w.per_semantic_partials * hb;
+    // Graph-structure traffic: CSR indices read per edge each NA pass
+    // (src id + offset walk ~ 8 B/edge), which the accelerators stage in
+    // dedicated adjacency buffers instead.
+    let index_bytes = w.edges * 8;
+    // DGL's per-relation pipeline materializes per-edge message tensors
+    // (gather -> message -> reduce): one hidden-width round trip per edge
+    // for mean models, two (plus per-head logits) for attention models —
+    // traffic the accelerators' fused datapaths never emit.
+    let message_bytes = if m.edge_attention {
+        w.edges * (2 * m.hidden_dim as u64 * 4 + m.heads as u64 * 4 * 2)
+    } else {
+        w.edges * m.hidden_dim as u64 * 4
+    };
+    // FP traffic + embedding writes.
+    let fp_bytes = w.fp_read_bytes + w.fp_write_bytes + w.weight_bytes;
+    let emb_bytes = w.targets * hb;
+    let dram_bytes =
+        feature_misses * hb + partial_bytes + index_bytes + message_bytes + fp_bytes + emb_bytes;
+    let dram_accesses = dram_bytes / 64; // 64B GPU memory transactions
+
+    // --- Time: per-stage roofline, stages serialized (DGL does not fuse
+    // across relation kernels).
+    let flops_per_s = cfg.peak_tflops * 1e12;
+    let bw = cfg.mem_bw_gbps * 1e9 * cfg.bw_efficiency;
+    let fp_time = (w.fp_flops as f64 / (flops_per_s * cfg.gemm_efficiency))
+        .max(fp_bytes as f64 / bw);
+    let na_compute = w.na_flops as f64 / (flops_per_s * cfg.spmm_efficiency);
+    let na_mem =
+        (feature_misses * hb + partial_bytes / 2 + index_bytes + message_bytes) as f64 / bw;
+    let na_time = na_compute.max(na_mem);
+    let sf_time = (w.sf_flops as f64 / (flops_per_s * cfg.gemm_efficiency))
+        .max((partial_bytes / 2 + emb_bytes) as f64 / bw);
+    let launch = w.semantics as f64 * cfg.per_semantic_overhead_us * 1e-6;
+    let time_s = fp_time + na_time + sf_time + launch;
+
+    // --- Peak memory: graph + raw feats + projected + live partials at the
+    // SF barrier, inflated by the framework factor. RGAT additionally
+    // materializes per-edge, per-head attention workspace.
+    let base = g.initial_footprint_bytes() as f64
+        + (g.num_vertices() as u64 * hb) as f64
+        + mem.peak_bytes as f64;
+    // Typed graph storage (per-relation CSR/COO copies) and, for attention
+    // models, the materialized per-edge message + logit tensors.
+    let graph_ws = (w.edges * 24) as f64;
+    let attn_ws = if m.edge_attention {
+        (w.edges * (m.hidden_dim as u64 * 4 + m.heads as u64 * 4 * 3)) as f64
+    } else {
+        0.0
+    };
+    let peak = ((base + graph_ws + attn_ws) * cfg.framework_mem_factor) as u64;
+    let expansion = peak as f64 / g.initial_footprint_bytes().max(1) as f64;
+
+    GpuResult {
+        time_ms: time_s * 1e3,
+        dram_bytes,
+        dram_accesses,
+        peak_mem_bytes: peak,
+        expansion_ratio: expansion,
+        oom: peak > cfg.hbm_bytes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::Dataset;
+    use crate::model::ModelKind;
+
+    #[test]
+    fn produces_sane_numbers() {
+        let g = Dataset::Acm.load(0.08);
+        let r = run_a100(&g, &ModelConfig::new(ModelKind::Rgcn), &GpuConfig::a100_80g());
+        assert!(r.time_ms > 0.0);
+        assert!(r.dram_bytes > 0);
+        assert!(r.expansion_ratio > 1.0);
+        assert!(!r.oom, "small graph cannot OOM");
+    }
+
+    #[test]
+    fn rgat_uses_more_memory_than_rgcn() {
+        let g = Dataset::Acm.load(0.08);
+        let cfg = GpuConfig::a100_80g();
+        let rgcn = run_a100(&g, &ModelConfig::new(ModelKind::Rgcn), &cfg);
+        let rgat = run_a100(&g, &ModelConfig::new(ModelKind::Rgat), &cfg);
+        assert!(rgat.peak_mem_bytes > rgcn.peak_mem_bytes);
+        assert!(rgat.time_ms > rgcn.time_ms);
+    }
+
+    #[test]
+    fn oom_on_tiny_capacity() {
+        let g = Dataset::Acm.load(0.08);
+        let cfg = GpuConfig { hbm_bytes: 1 << 20, ..GpuConfig::a100_80g() };
+        let r = run_a100(&g, &ModelConfig::new(ModelKind::Rgcn), &cfg);
+        assert!(r.oom);
+    }
+
+    #[test]
+    fn l2_filters_some_redundancy() {
+        let g = Dataset::Acm.load(0.08);
+        let cfg = GpuConfig::a100_80g();
+        let r = run_a100(&g, &ModelConfig::new(ModelKind::Rgcn), &cfg);
+        // A tiny (feature-free) L2 must produce strictly more traffic.
+        let no_l2 = GpuConfig { l2_feature_share: 1e-9, ..cfg };
+        let r2 = run_a100(&g, &ModelConfig::new(ModelKind::Rgcn), &no_l2);
+        assert!(r.dram_bytes < r2.dram_bytes);
+    }
+}

@@ -1,0 +1,9 @@
+//! Baseline platform models: NVIDIA A100 (roofline + trace-filtered
+//! traffic) and the HiHGNN accelerator (per-semantic paradigm with stage
+//! fusion, similarity scheduling, and bitmap attention reuse).
+
+pub mod a100;
+pub mod hihgnn;
+
+pub use a100::{run_a100, GpuConfig, GpuResult};
+pub use hihgnn::{run_hihgnn, similarity_schedule, HiHgnnConfig, HiHgnnResult};

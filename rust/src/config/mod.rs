@@ -1,0 +1,161 @@
+//! Typed configuration: load `AccelConfig` / server settings from a
+//! TOML-subset file with CLI-style overrides (no TOML crate is vendored;
+//! the subset covers `[section]`, `key = value` with ints, floats, bools
+//! and strings — everything the accelerator config needs).
+
+use crate::grouping::GrouperConfig;
+use crate::sim::{AccelConfig, HbmConfig, RpeConfig};
+use anyhow::{anyhow, bail, Result};
+use rustc_hash::FxHashMap;
+use std::path::Path;
+
+/// Parsed flat config: `section.key -> raw value`.
+#[derive(Debug, Clone, Default)]
+pub struct ConfigFile {
+    values: FxHashMap<String, String>,
+}
+
+impl ConfigFile {
+    /// Parse TOML-subset text.
+    pub fn parse(text: &str) -> Result<ConfigFile> {
+        let mut values = FxHashMap::default();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("line {}: expected key = value", ln + 1);
+            };
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            values.insert(key, v.trim().trim_matches('"').to_string());
+        }
+        Ok(ConfigFile { values })
+    }
+
+    pub fn load(path: &Path) -> Result<ConfigFile> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("read {}: {e}", path.display()))?;
+        ConfigFile::parse(&text)
+    }
+
+    /// Apply `key=value` CLI overrides on top of the file.
+    pub fn with_overrides<'a>(mut self, overrides: impl IntoIterator<Item = &'a str>) -> Result<Self> {
+        for o in overrides {
+            let Some((k, v)) = o.split_once('=') else {
+                bail!("override '{o}': expected key=value");
+            };
+            self.values.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(self)
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("config {key}: bad value '{v}'")),
+        }
+    }
+
+    /// Materialize an accelerator config, defaults = Table II/IV.
+    pub fn accel_config(&self) -> Result<AccelConfig> {
+        let d = AccelConfig::tlv_default();
+        let hbm_d = HbmConfig::hbm1_512gbps();
+        Ok(AccelConfig {
+            channels: self.get("accel.channels", d.channels)?,
+            rpes_per_channel: self.get("accel.rpes_per_channel", d.rpes_per_channel)?,
+            rpe: RpeConfig {
+                moa_units: self.get("rpe.moa_units", d.rpe.moa_units)?,
+                pipeline_depth: self.get("rpe.pipeline_depth", d.rpe.pipeline_depth)?,
+                reconfig_cycles: self.get("rpe.reconfig_cycles", d.rpe.reconfig_cycles)?,
+            },
+            local_cache_bytes: self.get("cache.local_bytes", d.local_cache_bytes)?,
+            global_cache_bytes: self.get("cache.global_bytes", d.global_cache_bytes)?,
+            hbm: HbmConfig {
+                channels: self.get("hbm.channels", hbm_d.channels)?,
+                banks_per_channel: self.get("hbm.banks_per_channel", hbm_d.banks_per_channel)?,
+                row_bytes: self.get("hbm.row_bytes", hbm_d.row_bytes)?,
+                t_rcd: self.get("hbm.t_rcd", hbm_d.t_rcd)?,
+                t_rp: self.get("hbm.t_rp", hbm_d.t_rp)?,
+                t_cas: self.get("hbm.t_cas", hbm_d.t_cas)?,
+                bytes_per_cycle: self.get("hbm.bytes_per_cycle", hbm_d.bytes_per_cycle)?,
+            },
+            grouper: GrouperConfig {
+                mac_units: self.get("grouper.mac_units", d.grouper.mac_units)?,
+                adj_entries_per_cycle: self
+                    .get("grouper.adj_entries_per_cycle", d.grouper.adj_entries_per_cycle)?,
+                update_cycles: self.get("grouper.update_cycles", d.grouper.update_cycles)?,
+                seed_scan_cycles: self.get("grouper.seed_scan_cycles", d.grouper.seed_scan_cycles)?,
+            },
+            freq_ghz: self.get("accel.freq_ghz", d.freq_ghz)?,
+            local_hit_cycles: self.get("cache.local_hit_cycles", d.local_hit_cycles)?,
+            global_hit_cycles: self.get("cache.global_hit_cycles", d.global_hit_cycles)?,
+            fetch_ports: self.get("accel.fetch_ports", d.fetch_ports)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# TLV-HGNN config
+[accel]
+channels = 8          # scale-out study
+freq_ghz = 1.2
+
+[cache]
+global_bytes = 8388608
+
+[grouper]
+mac_units = 1024
+"#;
+
+    #[test]
+    fn parses_and_materializes() {
+        let c = ConfigFile::parse(SAMPLE).unwrap();
+        let a = c.accel_config().unwrap();
+        assert_eq!(a.channels, 8);
+        assert_eq!(a.freq_ghz, 1.2);
+        assert_eq!(a.global_cache_bytes, 8 * 1024 * 1024);
+        assert_eq!(a.grouper.mac_units, 1024);
+        // Untouched fields keep Table II defaults.
+        assert_eq!(a.rpes_per_channel, 512);
+    }
+
+    #[test]
+    fn overrides_win() {
+        let c = ConfigFile::parse(SAMPLE)
+            .unwrap()
+            .with_overrides(["accel.channels=2", "rpe.moa_units=8"])
+            .unwrap();
+        let a = c.accel_config().unwrap();
+        assert_eq!(a.channels, 2);
+        assert_eq!(a.rpe.moa_units, 8);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(ConfigFile::parse("no equals here\n").is_err());
+        let c = ConfigFile::parse("[accel]\nchannels = lots\n").unwrap();
+        assert!(c.accel_config().is_err());
+    }
+
+    #[test]
+    fn empty_is_defaults() {
+        let a = ConfigFile::default().accel_config().unwrap();
+        let d = AccelConfig::tlv_default();
+        assert_eq!(a.channels, d.channels);
+        assert_eq!(a.hbm.channels, d.hbm.channels);
+    }
+}

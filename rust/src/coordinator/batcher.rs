@@ -1,0 +1,86 @@
+//! Dynamic block batcher: fills fixed-geometry vertex blocks (the artifact
+//! profile's B) from an incoming stream of (request, target) pairs, so
+//! several small requests share one PJRT execution — the serving analogue
+//! of the dispatcher packing aggregation workloads onto a channel's RPEs.
+
+use crate::hetgraph::VId;
+
+/// One target tagged with the request it belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Tagged {
+    pub req: u64,
+    pub target: VId,
+}
+
+/// Accumulates tagged targets; emits full blocks eagerly.
+#[derive(Debug)]
+pub struct BlockBatcher {
+    block_size: usize,
+    pending: Vec<Tagged>,
+}
+
+impl BlockBatcher {
+    pub fn new(block_size: usize) -> Self {
+        assert!(block_size > 0);
+        BlockBatcher { block_size, pending: Vec::with_capacity(block_size * 2) }
+    }
+
+    /// Add targets; returns any full blocks formed.
+    pub fn push(&mut self, req: u64, targets: &[VId]) -> Vec<Vec<Tagged>> {
+        self.pending.extend(targets.iter().map(|&t| Tagged { req, target: t }));
+        let mut out = Vec::new();
+        while self.pending.len() >= self.block_size {
+            out.push(self.pending.drain(..self.block_size).collect());
+        }
+        out
+    }
+
+    /// Flush a partial block (end of queue / deadline hit).
+    pub fn flush(&mut self) -> Option<Vec<Tagged>> {
+        if self.pending.is_empty() {
+            None
+        } else {
+            Some(std::mem::take(&mut self.pending))
+        }
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emits_full_blocks_eagerly() {
+        let mut b = BlockBatcher::new(4);
+        assert!(b.push(1, &[VId(0), VId(1)]).is_empty());
+        let blocks = b.push(2, &[VId(2), VId(3), VId(4)]);
+        assert_eq!(blocks.len(), 1);
+        assert_eq!(blocks[0].len(), 4);
+        // Requests interleave within a block.
+        assert_eq!(blocks[0][0].req, 1);
+        assert_eq!(blocks[0][3].req, 2);
+        assert_eq!(b.pending_len(), 1);
+    }
+
+    #[test]
+    fn flush_drains_partial() {
+        let mut b = BlockBatcher::new(8);
+        b.push(7, &[VId(1)]);
+        let f = b.flush().unwrap();
+        assert_eq!(f.len(), 1);
+        assert!(b.flush().is_none());
+    }
+
+    #[test]
+    fn large_push_multiple_blocks() {
+        let mut b = BlockBatcher::new(2);
+        let targets: Vec<VId> = (0..7).map(VId).collect();
+        let blocks = b.push(1, &targets);
+        assert_eq!(blocks.len(), 3);
+        assert_eq!(b.pending_len(), 1);
+    }
+}

@@ -1,0 +1,94 @@
+//! Serving metrics: counters and latency percentiles.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Shared metrics registry (cheaply cloneable behind an Arc by the server).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub targets: AtomicU64,
+    pub blocks_executed: AtomicU64,
+    pub padded_slots: AtomicU64,
+    latencies_us: Mutex<Vec<u64>>,
+}
+
+impl Metrics {
+    pub fn record_request(&self, targets: usize) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.targets.fetch_add(targets as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_block(&self, used: usize, block_size: usize) {
+        self.blocks_executed.fetch_add(1, Ordering::Relaxed);
+        self.padded_slots.fetch_add((block_size - used) as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_latency(&self, d: Duration) {
+        self.latencies_us.lock().unwrap().push(d.as_micros() as u64);
+    }
+
+    /// (p50, p95, p99) latencies in microseconds.
+    pub fn latency_percentiles(&self) -> (u64, u64, u64) {
+        let mut v = self.latencies_us.lock().unwrap().clone();
+        if v.is_empty() {
+            return (0, 0, 0);
+        }
+        v.sort_unstable();
+        let q = |p: f64| v[((v.len() as f64 - 1.0) * p).ceil() as usize];
+        (q(0.50), q(0.95), q(0.99))
+    }
+
+    /// Fraction of block slots wasted on padding (batcher efficiency).
+    pub fn padding_fraction(&self, block_size: usize) -> f64 {
+        let blocks = self.blocks_executed.load(Ordering::Relaxed);
+        if blocks == 0 {
+            return 0.0;
+        }
+        self.padded_slots.load(Ordering::Relaxed) as f64 / (blocks * block_size as u64) as f64
+    }
+
+    pub fn summary(&self) -> String {
+        let (p50, p95, p99) = self.latency_percentiles();
+        format!(
+            "requests={} targets={} blocks={} p50={}us p95={}us p99={}us",
+            self.requests.load(Ordering::Relaxed),
+            self.targets.load(Ordering::Relaxed),
+            self.blocks_executed.load(Ordering::Relaxed),
+            p50,
+            p95,
+            p99
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles() {
+        let m = Metrics::default();
+        for us in [100u64, 200, 300, 400, 1000] {
+            m.record_latency(Duration::from_micros(us));
+        }
+        let (p50, _, p99) = m.latency_percentiles();
+        assert_eq!(p50, 300);
+        assert_eq!(p99, 1000);
+    }
+
+    #[test]
+    fn padding_fraction() {
+        let m = Metrics::default();
+        m.record_block(30, 32);
+        m.record_block(32, 32);
+        assert!((m.padding_fraction(32) - 2.0 / 64.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_percentiles_zero() {
+        let m = Metrics::default();
+        assert_eq!(m.latency_percentiles(), (0, 0, 0));
+    }
+}

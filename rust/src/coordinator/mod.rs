@@ -1,0 +1,14 @@
+//! L3 serving coordinator: request router (group affinity), dynamic block
+//! batcher, multi-channel worker pool over PJRT, and serving metrics.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod server;
+
+pub use batcher::{BlockBatcher, Tagged};
+pub use metrics::Metrics;
+pub use request::{InferenceRequest, InferenceResponse};
+pub use router::Router;
+pub use server::{Server, ServerConfig};

@@ -1,0 +1,44 @@
+//! Inference request/response types for the serving coordinator.
+
+use crate::hetgraph::VId;
+use std::time::Duration;
+
+/// A client request: embed these target vertices.
+#[derive(Debug, Clone)]
+pub struct InferenceRequest {
+    pub id: u64,
+    pub targets: Vec<VId>,
+}
+
+/// Embedding rows come back tagged with their vertex, because the router
+/// may split one request across channels and the batcher may interleave
+/// requests within a block.
+#[derive(Debug, Clone)]
+pub struct InferenceResponse {
+    pub id: u64,
+    pub embeddings: Vec<(VId, Vec<f32>)>,
+    pub latency: Duration,
+}
+
+impl InferenceResponse {
+    /// Embedding for a specific vertex, if present.
+    pub fn embedding_of(&self, v: VId) -> Option<&[f32]> {
+        self.embeddings.iter().find(|(u, _)| *u == v).map(|(_, e)| e.as_slice())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup() {
+        let r = InferenceResponse {
+            id: 1,
+            embeddings: vec![(VId(3), vec![1.0]), (VId(5), vec![2.0])],
+            latency: Duration::from_millis(1),
+        };
+        assert_eq!(r.embedding_of(VId(5)), Some(&[2.0][..]));
+        assert_eq!(r.embedding_of(VId(4)), None);
+    }
+}

@@ -1,0 +1,91 @@
+//! Group-affinity router (the serving analogue of the accelerator's
+//! Scheduler): target vertices are routed to the channel that owns their
+//! vertex group, so a channel's working set stays within the locality the
+//! overlap-driven grouping established (§IV-C).
+
+use crate::grouping::Grouping;
+use crate::hetgraph::{HetGraph, VId};
+
+/// Maps every target vertex to a channel.
+#[derive(Debug, Clone)]
+pub struct Router {
+    channel_of: Vec<u16>,
+    channels: usize,
+}
+
+impl Router {
+    /// Build from a grouping: groups are assigned to channels round-robin
+    /// (same policy as the simulator), members inherit the assignment.
+    pub fn from_grouping(g: &HetGraph, grouping: &Grouping, channels: usize) -> Router {
+        let mut channel_of = vec![0u16; g.num_vertices()];
+        for (gi, group) in grouping.groups.iter().enumerate() {
+            let ch = (gi % channels) as u16;
+            for &v in group {
+                channel_of[v.idx()] = ch;
+            }
+        }
+        Router { channel_of, channels }
+    }
+
+    /// Round-robin fallback (no grouping — the -P analogue).
+    pub fn round_robin(g: &HetGraph, channels: usize) -> Router {
+        let mut channel_of = vec![0u16; g.num_vertices()];
+        for (i, slot) in channel_of.iter_mut().enumerate() {
+            *slot = (i % channels) as u16;
+        }
+        Router { channel_of, channels }
+    }
+
+    pub fn channels(&self) -> usize {
+        self.channels
+    }
+
+    #[inline]
+    pub fn channel_of(&self, v: VId) -> usize {
+        self.channel_of[v.idx()] as usize
+    }
+
+    /// Split a target list into per-channel sublists (order preserved).
+    pub fn split(&self, targets: &[VId]) -> Vec<Vec<VId>> {
+        let mut out = vec![Vec::new(); self.channels];
+        for &t in targets {
+            out[self.channel_of(t)].push(t);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::Dataset;
+    use crate::grouping::{default_n_max, group_overlap_driven, OverlapHypergraph};
+
+    #[test]
+    fn grouped_router_keeps_groups_together() {
+        let g = Dataset::Acm.load(0.05);
+        let h = OverlapHypergraph::build(&g, 0.0);
+        let grouping =
+            group_overlap_driven(&h, default_n_max(g.target_vertices().len(), 4), 4);
+        let r = Router::from_grouping(&g, &grouping, 4);
+        for group in &grouping.groups {
+            let ch = r.channel_of(group[0]);
+            assert!(group.iter().all(|&v| r.channel_of(v) == ch), "group split across channels");
+        }
+    }
+
+    #[test]
+    fn split_preserves_all_targets() {
+        let g = Dataset::Acm.load(0.05);
+        let r = Router::round_robin(&g, 3);
+        let targets = g.target_vertices();
+        let parts = r.split(&targets);
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        assert_eq!(total, targets.len());
+        assert_eq!(parts.len(), 3);
+        // Round-robin is balanced within 1.
+        let max = parts.iter().map(|p| p.len()).max().unwrap();
+        let min = parts.iter().map(|p| p.len()).min().unwrap();
+        assert!(max - min <= g.num_vertices() / 3 + 1);
+    }
+}

@@ -1,0 +1,246 @@
+//! The serving coordinator: multi-channel worker pool executing AOT
+//! artifacts through PJRT, fed by a group-affinity router and per-channel
+//! dynamic block batchers.
+//!
+//! Threading model (std threads — the environment vendors no async
+//! runtime, and the workload is CPU-bound PJRT execution):
+//!
+//! * `Server::start` computes the FP pass once (projected features are
+//!   shared read-only, like the accelerator's feature cache), builds the
+//!   router from the overlap-driven grouping, and spawns one worker per
+//!   channel. Each worker owns its own PJRT client + compiled executable
+//!   (clients are not shared across threads).
+//! * `submit` splits a request by channel affinity, enqueues the parts,
+//!   and assembles the response; rows come back tagged by vertex.
+
+use super::batcher::BlockBatcher;
+use super::metrics::Metrics;
+use super::request::{InferenceRequest, InferenceResponse};
+use super::router::Router;
+use crate::engine::Matrix;
+use crate::grouping::{default_n_max, group_overlap_driven, OverlapHypergraph};
+use crate::hetgraph::{HetGraph, VId};
+use crate::model::ModelKind;
+use crate::runtime::{BlockExecutor, Manifest};
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// A unit of routed work: targets for one channel, tagged with the request
+/// and a reply path.
+struct WorkItem {
+    req: u64,
+    targets: Vec<VId>,
+    reply: Sender<(u64, Vec<(VId, Vec<f32>)>)>,
+}
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub channels: usize,
+    pub kind: ModelKind,
+    pub artifacts_dir: PathBuf,
+    /// Use overlap-driven routing (false = round-robin, the -P analogue).
+    pub overlap_routing: bool,
+}
+
+impl ServerConfig {
+    pub fn new(kind: ModelKind) -> Self {
+        ServerConfig {
+            channels: 4,
+            kind,
+            artifacts_dir: Manifest::default_dir(),
+            overlap_routing: true,
+        }
+    }
+}
+
+/// The running coordinator.
+pub struct Server {
+    router: Router,
+    queues: Vec<Sender<WorkItem>>,
+    workers: Vec<JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+    next_id: std::sync::atomic::AtomicU64,
+}
+
+impl Server {
+    /// Build everything and spawn workers. Blocking: includes the FP pass.
+    pub fn start(g: Arc<HetGraph>, cfg: ServerConfig) -> Result<Server> {
+        // FP pass once, in the caller's thread, with a throwaway executor.
+        let fp_exec = BlockExecutor::load(&cfg.artifacts_dir, cfg.kind)
+            .context("load artifacts for FP pass")?;
+        let projected = Arc::new(fp_exec.project_graph(&g).context("FP pass")?);
+        drop(fp_exec);
+
+        // Grouping → router (the streaming grouper runs up front here; the
+        // cycle-level pipelining is modeled in sim::accel).
+        let router = if cfg.overlap_routing {
+            let h = OverlapHypergraph::build(&g, 0.01);
+            let n_max = default_n_max(g.target_vertices().len(), cfg.channels);
+            let grouping = group_overlap_driven(&h, n_max, cfg.channels);
+            Router::from_grouping(&g, &grouping, cfg.channels)
+        } else {
+            Router::round_robin(&g, cfg.channels)
+        };
+
+        let metrics = Arc::new(Metrics::default());
+        let mut queues = Vec::new();
+        let mut workers = Vec::new();
+        // Readiness barrier: each worker compiles its PJRT executable up
+        // front and signals before start() returns, so the first request
+        // never pays compilation latency (it showed up as a seconds-scale
+        // p99 outlier; EXPERIMENTS.md §Perf).
+        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        for ch in 0..cfg.channels {
+            let (tx, rx) = channel::<WorkItem>();
+            queues.push(tx);
+            let g = Arc::clone(&g);
+            let projected = Arc::clone(&projected);
+            let metrics = Arc::clone(&metrics);
+            let dir = cfg.artifacts_dir.clone();
+            let kind = cfg.kind;
+            let ready = ready_tx.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("tlv-worker-{ch}"))
+                    .spawn(move || worker_loop(rx, g, projected, dir, kind, metrics, ready))
+                    .context("spawn worker")?,
+            );
+        }
+        drop(ready_tx);
+        for _ in 0..cfg.channels {
+            ready_rx
+                .recv()
+                .context("worker died during startup")?
+                .map_err(|e| anyhow::anyhow!("worker failed to load artifacts: {e}"))?;
+        }
+        Ok(Server {
+            router,
+            queues,
+            workers,
+            metrics,
+            next_id: std::sync::atomic::AtomicU64::new(1),
+        })
+    }
+
+    /// Synchronously serve one request (parts execute in parallel across
+    /// channel workers; this thread assembles the response).
+    pub fn submit(&self, targets: Vec<VId>) -> Result<InferenceResponse> {
+        let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.submit_as(InferenceRequest { id, targets })
+    }
+
+    pub fn submit_as(&self, req: InferenceRequest) -> Result<InferenceResponse> {
+        let t0 = Instant::now();
+        let expected = req.targets.len();
+        self.metrics.record_request(expected);
+        let (reply_tx, reply_rx): (Sender<(u64, Vec<(VId, Vec<f32>)>)>, Receiver<_>) = channel();
+        for (ch, part) in self.router.split(&req.targets).into_iter().enumerate() {
+            if part.is_empty() {
+                continue;
+            }
+            self.queues[ch]
+                .send(WorkItem { req: req.id, targets: part, reply: reply_tx.clone() })
+                .map_err(|_| anyhow::anyhow!("worker {ch} gone"))?;
+        }
+        drop(reply_tx);
+        let mut rows = Vec::with_capacity(expected);
+        while rows.len() < expected {
+            let (rid, mut part) = reply_rx.recv().context("workers disconnected")?;
+            debug_assert_eq!(rid, req.id);
+            rows.append(&mut part);
+        }
+        let latency = t0.elapsed();
+        self.metrics.record_latency(latency);
+        Ok(InferenceResponse { id: req.id, embeddings: rows, latency })
+    }
+
+    /// Stop workers and join them.
+    pub fn shutdown(mut self) {
+        self.queues.clear(); // disconnects
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    rx: Receiver<WorkItem>,
+    g: Arc<HetGraph>,
+    projected: Arc<Matrix>,
+    dir: PathBuf,
+    kind: ModelKind,
+    metrics: Arc<Metrics>,
+    ready: Sender<Result<(), String>>,
+) {
+    let exec = match BlockExecutor::load(&dir, kind) {
+        Ok(e) => {
+            let _ = ready.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let _ = ready.send(Err(format!("{e:#}")));
+            return;
+        }
+    };
+    let block_size = exec.manifest.profile.block;
+    let mut batcher = BlockBatcher::new(block_size);
+    // (req, target) -> reply sender, keyed by insertion order alongside the
+    // batcher's tags.
+    let mut replies: rustc_hash::FxHashMap<u64, Sender<(u64, Vec<(VId, Vec<f32>)>)>> =
+        rustc_hash::FxHashMap::default();
+
+    let run_block = |tags: &[super::batcher::Tagged],
+                     replies: &rustc_hash::FxHashMap<u64, Sender<(u64, Vec<(VId, Vec<f32>)>)>>,
+                     batcher_used: usize| {
+        let targets: Vec<VId> = tags.iter().map(|t| t.target).collect();
+        match exec.embed_all(&g, &projected, &targets) {
+            Ok(m) => {
+                metrics.record_block(batcher_used, block_size);
+                // Group rows back by request.
+                let mut by_req: rustc_hash::FxHashMap<u64, Vec<(VId, Vec<f32>)>> =
+                    rustc_hash::FxHashMap::default();
+                for (i, tag) in tags.iter().enumerate() {
+                    by_req.entry(tag.req).or_default().push((tag.target, m.row(i).to_vec()));
+                }
+                for (req, rows) in by_req {
+                    if let Some(tx) = replies.get(&req) {
+                        let _ = tx.send((req, rows));
+                    }
+                }
+            }
+            Err(e) => eprintln!("block execution failed: {e:#}"),
+        }
+    };
+
+    loop {
+        // Block for the next item; drain whatever else is queued to batch.
+        let first = match rx.recv() {
+            Ok(w) => w,
+            Err(_) => break, // all senders dropped → shutdown
+        };
+        replies.insert(first.req, first.reply.clone());
+        let mut blocks = batcher.push(first.req, &first.targets);
+        while let Ok(w) = rx.try_recv() {
+            replies.insert(w.req, w.reply.clone());
+            blocks.extend(batcher.push(w.req, &w.targets));
+        }
+        for b in &blocks {
+            run_block(b, &replies, b.len());
+        }
+        // Queue empty: flush the partial block rather than waiting (keeps
+        // tail latency bounded without a timer thread).
+        if let Some(b) = batcher.flush() {
+            run_block(&b, &replies, b.len());
+        }
+    }
+    // Drain-on-shutdown: flush anything left.
+    if let Some(b) = batcher.flush() {
+        run_block(&b, &replies, b.len());
+    }
+}

@@ -1,0 +1,5 @@
+//! Dataset registry for the paper's five evaluation graphs.
+
+pub mod registry;
+
+pub use registry::Dataset;

@@ -1,0 +1,11 @@
+//! Energy, area and power models calibrated to the paper's Table IV and
+//! 7 pJ/bit HBM assumption.
+
+pub mod model;
+pub mod tables;
+
+pub use model::{
+    area_power_report, chip_area_mm2, chip_power_w, gpu_energy, hihgnn_energy, tlv_energy,
+    AreaPowerRow, EnergyBreakdown,
+};
+pub use tables::{AreaPowerTable, BufferSpec, EnergyTable};

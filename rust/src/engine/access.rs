@@ -1,0 +1,75 @@
+//! Feature-access counting → the paper's redundancy metric (Fig. 2b) and
+//! the logical access streams consumed by the cache/DRAM models.
+
+use super::trace::TraceSink;
+use crate::hetgraph::{SemanticId, VId};
+use rustc_hash::FxHashSet;
+
+
+/// Counts total vs unique feature accesses during a paradigm walk.
+#[derive(Debug, Default)]
+pub struct AccessCounter {
+    pub total: u64,
+    seen: FxHashSet<VId>,
+}
+
+impl AccessCounter {
+    pub fn unique(&self) -> u64 {
+        self.seen.len() as u64
+    }
+
+    /// Fraction of accesses that re-touch an already-fetched feature.
+    pub fn redundant_fraction(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        (self.total - self.unique()) as f64 / self.total as f64
+    }
+
+    pub fn report(&self) -> AccessReport {
+        AccessReport {
+            total_accesses: self.total,
+            unique_vertices: self.unique(),
+            redundant_fraction: self.redundant_fraction(),
+        }
+    }
+}
+
+impl TraceSink for AccessCounter {
+    fn feature_access(&mut self, v: VId) {
+        self.total += 1;
+        self.seen.insert(v);
+    }
+    fn partial_alloc(&mut self, _t: VId, _s: SemanticId, _b: u64) {}
+    fn partial_free(&mut self, _t: VId, _s: SemanticId, _b: u64) {}
+    fn embedding_write(&mut self, _v: VId, _b: u64) {}
+}
+
+#[derive(Debug, Clone)]
+pub struct AccessReport {
+    pub total_accesses: u64,
+    pub unique_vertices: u64,
+    pub redundant_fraction: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn redundancy_counts_repeats() {
+        let mut c = AccessCounter::default();
+        for v in [1u32, 2, 1, 1, 3] {
+            c.feature_access(VId(v));
+        }
+        assert_eq!(c.total, 5);
+        assert_eq!(c.unique(), 3);
+        assert!((c.redundant_fraction() - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let c = AccessCounter::default();
+        assert_eq!(c.redundant_fraction(), 0.0);
+    }
+}

@@ -1,0 +1,121 @@
+//! Batch-wise per-semantic execution (paper §III-B): the conventional
+//! OOM-mitigation — split targets into batches, run the per-semantic
+//! paradigm per batch so only one batch's partials are live — "doing so
+//! significantly degrades inference efficiency". This module quantifies
+//! both sides of that trade-off, completing the motivation analysis.
+
+use super::trace::TraceSink;
+use crate::hetgraph::HetGraph;
+use crate::model::ModelConfig;
+
+/// Walk the per-semantic paradigm in target batches of `batch_size`.
+///
+/// Peak memory shrinks to one batch's partials, but every semantic pass
+/// is re-run per batch: shared neighbors are re-fetched across batches
+/// (the efficiency loss the paper points at), and per-pass setup is paid
+/// `ceil(targets/batch) * semantics` times.
+pub fn walk_per_semantic_batched<S: TraceSink>(
+    g: &HetGraph,
+    m: &ModelConfig,
+    batch_size: usize,
+    sink: &mut S,
+) {
+    let hb = m.hidden_bytes();
+    let targets = g.target_vertices();
+    for batch in targets.chunks(batch_size.max(1)) {
+        // NA per semantic, restricted to this batch.
+        for csr in &g.csrs {
+            for &t in batch {
+                let ns = csr.neighbors(t);
+                if ns.is_empty() {
+                    continue;
+                }
+                sink.begin_target(t);
+                sink.feature_access(t);
+                sink.partial_alloc(t, csr.semantic, hb);
+                for &u in ns {
+                    sink.feature_access(u);
+                }
+            }
+        }
+        // SF for the batch; partials die here.
+        for &t in batch {
+            let mut any = false;
+            for csr in &g.csrs {
+                if csr.position_of(t).is_some() {
+                    sink.partial_free(t, csr.semantic, hb);
+                    any = true;
+                }
+            }
+            if any {
+                sink.embedding_write(t, hb);
+            }
+        }
+    }
+}
+
+/// Number of semantic passes a batched run performs (launch-overhead
+/// proxy: DGL launches its per-relation kernel pipeline once per pass).
+pub fn batched_semantic_passes(g: &HetGraph, batch_size: usize) -> u64 {
+    let batches = g.target_vertices().len().div_ceil(batch_size.max(1)) as u64;
+    batches * g.num_semantics() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::Dataset;
+    use crate::engine::{walk_per_semantic, AccessCounter, MemoryTracker};
+    use crate::model::{ModelConfig, ModelKind};
+
+    #[test]
+    fn batching_caps_peak_memory() {
+        let g = Dataset::Acm.load(0.05);
+        let m = ModelConfig::new(ModelKind::Rgcn);
+        let mut full = MemoryTracker::default();
+        walk_per_semantic(&g, &m, &mut full);
+        let mut batched = MemoryTracker::default();
+        walk_per_semantic_batched(&g, &m, 32, &mut batched);
+        let live = |t: &MemoryTracker| t.peak_bytes - t.embedding_bytes;
+        assert!(
+            live(&batched) < live(&full) / 2,
+            "batched {} !<< full {}",
+            live(&batched),
+            live(&full)
+        );
+    }
+
+    #[test]
+    fn batching_increases_accesses_never_decreases() {
+        let g = Dataset::Acm.load(0.05);
+        let m = ModelConfig::new(ModelKind::Rgcn);
+        let mut full = AccessCounter::default();
+        walk_per_semantic(&g, &m, &mut full);
+        let mut batched = AccessCounter::default();
+        walk_per_semantic_batched(&g, &m, 32, &mut batched);
+        // Same logical access count (the trace is per-target), but unique
+        // footprint identical — cache-level reuse differs, which the
+        // ablation bench measures through the L2/feature-cache model.
+        assert_eq!(batched.total, full.total);
+        assert_eq!(batched.unique(), full.unique());
+    }
+
+    #[test]
+    fn smaller_batches_more_passes() {
+        let g = Dataset::Acm.load(0.05);
+        assert!(batched_semantic_passes(&g, 16) > batched_semantic_passes(&g, 256));
+        let one_batch = batched_semantic_passes(&g, usize::MAX);
+        assert_eq!(one_batch, g.num_semantics() as u64);
+    }
+
+    #[test]
+    fn batched_embeddings_complete() {
+        let g = Dataset::Imdb.load(0.05);
+        let m = ModelConfig::new(ModelKind::Rgcn);
+        let mut full = MemoryTracker::default();
+        walk_per_semantic(&g, &m, &mut full);
+        let mut batched = MemoryTracker::default();
+        walk_per_semantic_batched(&g, &m, 17, &mut batched);
+        assert_eq!(batched.embedding_bytes, full.embedding_bytes);
+    }
+}

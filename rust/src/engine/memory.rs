@@ -1,0 +1,108 @@
+//! Peak-memory accounting → the paper's *memory expansion ratio*
+//! (§III-B, Fig. 2a, Table III): peak live memory during inference divided
+//! by the initial footprint of the dataset.
+
+use super::trace::TraceSink;
+use crate::hetgraph::{HetGraph, SemanticId, VId};
+
+
+/// Tracks live intermediate bytes and their peak over the run.
+#[derive(Debug, Default)]
+pub struct MemoryTracker {
+    pub live_bytes: u64,
+    pub peak_bytes: u64,
+    /// Constant overhead counted as live for the whole run (graph
+    /// structure, projected features resident, weights).
+    pub resident_bytes: u64,
+    pub embedding_bytes: u64,
+}
+
+impl MemoryTracker {
+    pub fn with_resident(resident_bytes: u64) -> Self {
+        MemoryTracker {
+            live_bytes: resident_bytes,
+            peak_bytes: resident_bytes,
+            resident_bytes,
+            embedding_bytes: 0,
+        }
+    }
+
+    fn bump(&mut self) {
+        if self.live_bytes > self.peak_bytes {
+            self.peak_bytes = self.live_bytes;
+        }
+    }
+}
+
+impl TraceSink for MemoryTracker {
+    fn feature_access(&mut self, _v: VId) {}
+
+    fn partial_alloc(&mut self, _t: VId, _s: SemanticId, bytes: u64) {
+        self.live_bytes += bytes;
+        self.bump();
+    }
+
+    fn partial_free(&mut self, _t: VId, _s: SemanticId, bytes: u64) {
+        debug_assert!(self.live_bytes >= bytes, "free exceeds live");
+        self.live_bytes -= bytes;
+    }
+
+    fn embedding_write(&mut self, _v: VId, bytes: u64) {
+        // Final embeddings stay live to the end of the pass.
+        self.embedding_bytes += bytes;
+        self.live_bytes += bytes;
+        self.bump();
+    }
+}
+
+/// Result of a memory characterization run.
+#[derive(Debug, Clone)]
+pub struct MemoryReport {
+    pub initial_bytes: u64,
+    pub peak_bytes: u64,
+    pub expansion_ratio: f64,
+    /// Whether peak exceeds the platform memory capacity (OOM, Fig. 2a).
+    pub oom_at_bytes: Option<u64>,
+}
+
+impl MemoryReport {
+    pub fn new(g: &HetGraph, tracker: &MemoryTracker, capacity_bytes: Option<u64>) -> Self {
+        let initial = g.initial_footprint_bytes().max(1);
+        let peak = tracker.peak_bytes;
+        MemoryReport {
+            initial_bytes: initial,
+            peak_bytes: peak,
+            expansion_ratio: peak as f64 / initial as f64,
+            oom_at_bytes: capacity_bytes.filter(|&cap| peak > cap),
+        }
+    }
+
+    pub fn is_oom(&self) -> bool {
+        self.oom_at_bytes.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_tracks_high_watermark() {
+        let mut t = MemoryTracker::with_resident(100);
+        t.partial_alloc(VId(0), SemanticId(0), 50);
+        t.partial_alloc(VId(1), SemanticId(0), 50);
+        assert_eq!(t.peak_bytes, 200);
+        t.partial_free(VId(0), SemanticId(0), 50);
+        t.partial_free(VId(1), SemanticId(0), 50);
+        assert_eq!(t.live_bytes, 100);
+        assert_eq!(t.peak_bytes, 200);
+    }
+
+    #[test]
+    fn embeddings_accumulate() {
+        let mut t = MemoryTracker::default();
+        t.embedding_write(VId(0), 10);
+        t.embedding_write(VId(1), 10);
+        assert_eq!(t.peak_bytes, 20);
+    }
+}

@@ -1,0 +1,20 @@
+//! Execution engine: trace-walk paradigms (per-semantic vs
+//! semantics-complete), CPU reference numerics, and the memory/access
+//! accounting behind the paper's motivation and evaluation metrics.
+
+pub mod access;
+pub mod batchwise;
+pub mod functional;
+pub mod multilayer;
+pub mod memory;
+pub mod paradigm;
+pub mod tensor;
+pub mod trace;
+
+pub use access::{AccessCounter, AccessReport};
+pub use batchwise::{batched_semantic_passes, walk_per_semantic_batched};
+pub use functional::ReferenceEngine;
+pub use memory::{MemoryReport, MemoryTracker};
+pub use paradigm::{walk_per_semantic, walk_semantics_complete};
+pub use tensor::Matrix;
+pub use trace::{NullSink, StreamSink, TeeSink, TraceSink};

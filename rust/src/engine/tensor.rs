@@ -1,0 +1,129 @@
+//! Minimal row-major f32 matrix used by the CPU reference engine.
+//!
+//! This is deliberately small: the production numeric path is the AOT
+//! JAX/Pallas artifact executed through PJRT (`runtime::executor`); this
+//! type only backs the pure-Rust oracle used for cross-validation.
+
+
+
+/// Dense row-major matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// `self @ other`.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "shape mismatch");
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.data[i * self.cols + k];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &other.data[k * other.cols..(k + 1) * other.cols];
+                let out_row = &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for (o, &b) in out_row.iter_mut().zip(orow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+}
+
+/// Vector helpers used by aggregation.
+pub fn axpy(acc: &mut [f32], x: &[f32], a: f32) {
+    debug_assert_eq!(acc.len(), x.len());
+    for (o, &v) in acc.iter_mut().zip(x) {
+        *o += a * v;
+    }
+}
+
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+pub fn leaky_relu(x: &mut [f32], slope: f32) {
+    for v in x.iter_mut() {
+        if *v < 0.0 {
+            *v *= slope;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Matrix::from_fn(3, 3, |r, c| if r == c { 1.0 } else { 0.0 });
+        let b = Matrix::from_fn(3, 2, |r, c| (r * 2 + c) as f32);
+        assert_eq!(a.matmul(&b), b);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Matrix { rows: 2, cols: 2, data: vec![1.0, 2.0, 3.0, 4.0] };
+        let b = Matrix { rows: 2, cols: 2, data: vec![1.0, 1.0, 1.0, 1.0] };
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn axpy_accumulates() {
+        let mut acc = vec![1.0, 1.0];
+        axpy(&mut acc, &[2.0, 3.0], 0.5);
+        assert_eq!(acc, vec![2.0, 2.5]);
+    }
+
+    #[test]
+    fn leaky() {
+        let mut v = vec![-2.0, 3.0];
+        leaky_relu(&mut v, 0.01);
+        assert_eq!(v, vec![-0.02, 3.0]);
+    }
+
+    #[test]
+    fn dot_product() {
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+    }
+}

@@ -1,0 +1,95 @@
+//! Execution-trace sinks: the paradigms in `paradigm.rs` walk the exact
+//! access/allocation pattern of an inference pass and report events here.
+//! Different sinks turn the same walk into memory-expansion numbers
+//! (Fig. 2a, Table III), redundancy numbers (Fig. 2b), cache/DRAM traffic
+//! (Fig. 7b), or nothing at all (pure numerics).
+
+use crate::hetgraph::{SemanticId, VId};
+
+/// Receiver of paradigm execution events.
+pub trait TraceSink {
+    /// A projected feature vector of `v` is consumed by the NA stage.
+    fn feature_access(&mut self, v: VId);
+    /// A per-(target, semantic) partial aggregation buffer goes live.
+    fn partial_alloc(&mut self, target: VId, semantic: SemanticId, bytes: u64);
+    /// A partial buffer is retired (fused into the final embedding).
+    fn partial_free(&mut self, target: VId, semantic: SemanticId, bytes: u64);
+    /// Final embedding of `v` written.
+    fn embedding_write(&mut self, v: VId, bytes: u64);
+    /// A new aggregation workload (target vertex) begins. Lets cache models
+    /// align group boundaries.
+    fn begin_target(&mut self, _v: VId) {}
+}
+
+/// No-op sink (pure-numerics runs).
+pub struct NullSink;
+
+impl TraceSink for NullSink {
+    fn feature_access(&mut self, _v: VId) {}
+    fn partial_alloc(&mut self, _t: VId, _s: SemanticId, _b: u64) {}
+    fn partial_free(&mut self, _t: VId, _s: SemanticId, _b: u64) {}
+    fn embedding_write(&mut self, _v: VId, _b: u64) {}
+}
+
+/// Fan-out to two sinks.
+pub struct TeeSink<'a, A: TraceSink, B: TraceSink>(pub &'a mut A, pub &'a mut B);
+
+impl<A: TraceSink, B: TraceSink> TraceSink for TeeSink<'_, A, B> {
+    fn feature_access(&mut self, v: VId) {
+        self.0.feature_access(v);
+        self.1.feature_access(v);
+    }
+    fn partial_alloc(&mut self, t: VId, s: SemanticId, b: u64) {
+        self.0.partial_alloc(t, s, b);
+        self.1.partial_alloc(t, s, b);
+    }
+    fn partial_free(&mut self, t: VId, s: SemanticId, b: u64) {
+        self.0.partial_free(t, s, b);
+        self.1.partial_free(t, s, b);
+    }
+    fn embedding_write(&mut self, v: VId, b: u64) {
+        self.0.embedding_write(v, b);
+        self.1.embedding_write(v, b);
+    }
+    fn begin_target(&mut self, v: VId) {
+        self.0.begin_target(v);
+        self.1.begin_target(v);
+    }
+}
+
+/// Records the full ordered feature-access stream (feeds cache models).
+#[derive(Default)]
+pub struct StreamSink {
+    pub accesses: Vec<VId>,
+    pub group_boundaries: Vec<usize>,
+}
+
+impl TraceSink for StreamSink {
+    fn feature_access(&mut self, v: VId) {
+        self.accesses.push(v);
+    }
+    fn partial_alloc(&mut self, _t: VId, _s: SemanticId, _b: u64) {}
+    fn partial_free(&mut self, _t: VId, _s: SemanticId, _b: u64) {}
+    fn embedding_write(&mut self, _v: VId, _b: u64) {}
+    fn begin_target(&mut self, _v: VId) {
+        self.group_boundaries.push(self.accesses.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tee_duplicates() {
+        let mut a = StreamSink::default();
+        let mut b = StreamSink::default();
+        {
+            let mut t = TeeSink(&mut a, &mut b);
+            t.feature_access(VId(1));
+            t.feature_access(VId(2));
+        }
+        assert_eq!(a.accesses, b.accesses);
+        assert_eq!(a.accesses.len(), 2);
+    }
+}

@@ -1,0 +1,184 @@
+//! Overlap-driven vertex grouping (paper §IV-C2, Algorithm 2).
+//!
+//! A streaming, Louvain-inspired greedy: seed a group with an unassigned
+//! super vertex, repeatedly add the frontier vertex with the highest
+//! modularity gain while the gain is positive and the group is below
+//! `n_max`, then emit the group (it can be dispatched to a channel
+//! immediately — the streaming workflow that pipelines group generation
+//! with processing).
+
+use super::hypergraph::OverlapHypergraph;
+use crate::hetgraph::VId;
+use rustc_hash::FxHashMap;
+
+/// Result of grouping: hub groups (overlap-driven) followed by sequential
+/// groups of the low-degree remainder.
+#[derive(Debug, Clone)]
+pub struct Grouping {
+    pub groups: Vec<Vec<VId>>,
+    /// Number of groups that came from the overlap-driven phase.
+    pub hub_groups: usize,
+    /// Achieved modularity-ish score: Σ intra-group weight / total weight.
+    pub intra_weight_fraction: f64,
+}
+
+impl Grouping {
+    /// Flat target order = concatenation of groups (the order the
+    /// semantics-complete walk processes targets).
+    pub fn flat_order(&self) -> Vec<VId> {
+        self.groups.iter().flatten().copied().collect()
+    }
+
+    /// Round-robin assignment of groups to `channels` channels.
+    pub fn channel_assignment(&self, channels: usize) -> Vec<Vec<usize>> {
+        let mut out = vec![Vec::new(); channels];
+        for (i, _) in self.groups.iter().enumerate() {
+            out[i % channels].push(i);
+        }
+        out
+    }
+
+    pub fn total_vertices(&self) -> usize {
+        self.groups.iter().map(|g| g.len()).sum()
+    }
+}
+
+/// Algorithm 2 with the modularity gain of the weighted overlap graph:
+/// `ΔQ(v, C) = k_in(v,C)/(2m) − Σ_tot(C)·k(v)/(2m)²`.
+pub fn group_overlap_driven(h: &OverlapHypergraph, n_max: usize, channels: usize) -> Grouping {
+    let n = h.num_supers();
+    let m2 = (h.total_weight * 2.0).max(1e-12); // 2m
+    let k: Vec<f64> = (0..n).map(|i| h.weighted_degree(i)).collect();
+
+    let mut assigned = vec![false; n];
+    let mut groups: Vec<Vec<VId>> = Vec::new();
+    let mut intra_w = 0.0f64;
+
+    // Seed selection order: descending degree (supers are already sorted by
+    // graph degree; we keep that order — highest-workload vertices seed
+    // groups first, matching the hardware's Seed Vertex Selector scanning
+    // the visit bitmask).
+    for seed in 0..n {
+        if assigned[seed] {
+            continue;
+        }
+        let mut group_idx: Vec<u32> = vec![seed as u32];
+        assigned[seed] = true;
+        let mut sigma_tot = k[seed];
+
+        // k_in map: candidate super -> total weight to current group.
+        let mut k_in: FxHashMap<u32, f64> = FxHashMap::default();
+        for &(nb, w) in &h.adj[seed] {
+            if !assigned[nb as usize] {
+                *k_in.entry(nb).or_default() += w as f64;
+            }
+        }
+
+        while group_idx.len() < n_max {
+            // argmax ΔQ over frontier (lines 7-12).
+            let mut best: Option<(u32, f64, f64)> = None; // (v, dq, k_in_v)
+            for (&v, &kin) in k_in.iter() {
+                let dq = kin / m2 - sigma_tot * k[v as usize] / (m2 * m2);
+                match best {
+                    // Deterministic tie-break on smaller index.
+                    Some((bv, bdq, _)) if dq < bdq || (dq == bdq && v > bv) => {}
+                    _ => best = Some((v, dq, kin)),
+                }
+            }
+            match best {
+                Some((v, dq, kin)) if dq > 0.0 => {
+                    group_idx.push(v);
+                    assigned[v as usize] = true;
+                    sigma_tot += k[v as usize];
+                    intra_w += kin;
+                    k_in.remove(&v);
+                    for &(nb, w) in &h.adj[v as usize] {
+                        if !assigned[nb as usize] {
+                            *k_in.entry(nb).or_default() += w as f64;
+                        }
+                    }
+                }
+                _ => break, // line 17: no positive gain
+            }
+        }
+        groups.push(group_idx.iter().map(|&i| h.supers[i as usize]).collect());
+    }
+
+    let hub_groups = groups.len();
+
+    // Low-degree remainder: simple sequential strategy (paper §IV-C1).
+    for chunk in h.rest.chunks(n_max.max(1)) {
+        groups.push(chunk.to_vec());
+    }
+
+    let _ = channels;
+    Grouping {
+        groups,
+        hub_groups,
+        intra_weight_fraction: if h.total_weight > 0.0 { intra_w / h.total_weight } else { 0.0 },
+    }
+}
+
+/// Paper's group-size bound: total targets / parallel channels.
+pub fn default_n_max(num_targets: usize, channels: usize) -> usize {
+    (num_targets / channels.max(1)).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::Dataset;
+    use crate::grouping::hypergraph::OverlapHypergraph;
+    use rustc_hash::FxHashSet;
+
+    fn grouping_for(d: Dataset) -> (Grouping, OverlapHypergraph, usize) {
+        let g = d.load(0.05);
+        let h = OverlapHypergraph::build(&g, 0.0);
+        let n_targets = g.target_vertices().len();
+        let n_max = default_n_max(n_targets, 4);
+        (group_overlap_driven(&h, n_max, 4), h, n_targets)
+    }
+
+    #[test]
+    fn covers_all_targets_exactly_once() {
+        let (gr, _, n_targets) = grouping_for(Dataset::Acm);
+        assert_eq!(gr.total_vertices(), n_targets);
+        let mut seen = FxHashSet::default();
+        for g in &gr.groups {
+            for &v in g {
+                assert!(seen.insert(v), "duplicate {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn respects_size_bound() {
+        let (gr, _, n_targets) = grouping_for(Dataset::Imdb);
+        let n_max = default_n_max(n_targets, 4);
+        for g in &gr.groups {
+            assert!(g.len() <= n_max);
+        }
+    }
+
+    #[test]
+    fn captures_positive_intra_weight() {
+        let (gr, _, _) = grouping_for(Dataset::Acm);
+        assert!(gr.intra_weight_fraction > 0.0);
+        assert!(gr.intra_weight_fraction <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn channel_assignment_partitions_groups() {
+        let (gr, _, _) = grouping_for(Dataset::Dblp);
+        let asg = gr.channel_assignment(4);
+        let total: usize = asg.iter().map(|c| c.len()).sum();
+        assert_eq!(total, gr.groups.len());
+    }
+
+    #[test]
+    fn deterministic() {
+        let (a, _, _) = grouping_for(Dataset::Acm);
+        let (b, _, _) = grouping_for(Dataset::Acm);
+        assert_eq!(a.groups, b.groups);
+    }
+}

@@ -1,0 +1,14 @@
+//! Overlap-driven vertex grouping (paper §IV-C): hypergraph modeling of
+//! cross-semantic neighborhood overlap, the streaming Louvain-style
+//! grouping algorithm, baseline strategies for ablations, and the cycle
+//! model of the hardware Vertex Grouper.
+
+pub mod grouper_sim;
+pub mod hypergraph;
+pub mod louvain;
+pub mod sequential;
+
+pub use grouper_sim::{simulate_grouper, GrouperConfig, GrouperStats};
+pub use hypergraph::{OverlapHypergraph, HUB_FRACTION};
+pub use louvain::{default_n_max, group_overlap_driven, Grouping};
+pub use sequential::{group_random, group_sequential};

@@ -1,0 +1,153 @@
+//! Edge-list → `HetGraph` construction: the Semantic Graph Build (SGB)
+//! stage of the HGNN pipeline (paper §II-B ①).
+
+use super::csr::SemanticCsr;
+use super::hetgraph::HetGraph;
+use super::types::{SemanticId, SemanticSpec, VId, VertexTypeId, VertexTypeSpec};
+use rustc_hash::FxHashMap;
+
+/// Incremental builder. Declare vertex types and semantics first, then add
+/// edges; `build()` partitions the edge list into per-semantic CSRs.
+pub struct HetGraphBuilder {
+    name: String,
+    vertex_types: Vec<VertexTypeSpec>,
+    semantics: Vec<SemanticSpec>,
+    edges: Vec<(VId, VId, SemanticId)>,
+    target_type: Option<VertexTypeId>,
+}
+
+impl HetGraphBuilder {
+    pub fn new(name: impl Into<String>) -> Self {
+        HetGraphBuilder {
+            name: name.into(),
+            vertex_types: Vec::new(),
+            semantics: Vec::new(),
+            edges: Vec::new(),
+            target_type: None,
+        }
+    }
+
+    /// Declare a vertex type; returns its id. Global VIds are assigned
+    /// contiguously in declaration order.
+    pub fn add_vertex_type(&mut self, name: &str, count: u32, feat_dim: u32) -> VertexTypeId {
+        let id = VertexTypeId(self.vertex_types.len() as u16);
+        self.vertex_types.push(VertexTypeSpec { name: name.to_string(), count, feat_dim });
+        id
+    }
+
+    /// Declare a semantic (relation type) `src_type -> dst_type`.
+    pub fn add_semantic(
+        &mut self,
+        name: &str,
+        src_type: VertexTypeId,
+        dst_type: VertexTypeId,
+    ) -> SemanticId {
+        let id = SemanticId(self.semantics.len() as u16);
+        self.semantics.push(SemanticSpec { name: name.to_string(), src_type, dst_type });
+        id
+    }
+
+    /// Add a directed edge `src --semantic--> dst` (global VIds).
+    pub fn add_edge(&mut self, src: VId, dst: VId, semantic: SemanticId) {
+        self.edges.push((src, dst, semantic));
+    }
+
+    /// Mark the vertex type whose embeddings the model produces.
+    pub fn set_target_type(&mut self, t: VertexTypeId) {
+        self.target_type = Some(t);
+    }
+
+    /// Global VId base offsets per type (same rule `build` uses).
+    pub fn type_bases(&self) -> Vec<u32> {
+        let mut bases = Vec::with_capacity(self.vertex_types.len());
+        let mut acc = 0u32;
+        for t in &self.vertex_types {
+            bases.push(acc);
+            acc += t.count;
+        }
+        bases
+    }
+
+    /// Partition edges by semantic and build CSRs (SGB).
+    pub fn build(self) -> Result<HetGraph, String> {
+        let target_type = self.target_type.ok_or("target type not set")?;
+        let type_base = {
+            let mut bases = Vec::with_capacity(self.vertex_types.len());
+            let mut acc = 0u32;
+            for t in &self.vertex_types {
+                bases.push(acc);
+                acc += t.count;
+            }
+            bases
+        };
+
+        // Bucket edges per semantic, then group by target.
+        let mut per_sem: Vec<FxHashMap<VId, Vec<VId>>> =
+            vec![FxHashMap::default(); self.semantics.len()];
+        for (src, dst, sem) in self.edges {
+            let bucket = per_sem
+                .get_mut(sem.0 as usize)
+                .ok_or_else(|| format!("edge references undeclared semantic {sem}"))?;
+            bucket.entry(dst).or_default().push(src);
+        }
+
+        let csrs: Vec<SemanticCsr> = per_sem
+            .into_iter()
+            .enumerate()
+            .map(|(i, m)| {
+                SemanticCsr::from_pairs(SemanticId(i as u16), m.into_iter().collect())
+            })
+            .collect();
+
+        let g = HetGraph {
+            name: self.name,
+            vertex_types: self.vertex_types,
+            semantics: self.semantics,
+            type_base,
+            csrs,
+            target_type,
+        };
+        g.validate()?;
+        Ok(g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_and_partitions_semantics() {
+        let mut b = HetGraphBuilder::new("g");
+        let a = b.add_vertex_type("A", 2, 4);
+        let p = b.add_vertex_type("P", 3, 4);
+        let ap = b.add_semantic("AP", a, p);
+        let pp = b.add_semantic("PP", p, p);
+        b.set_target_type(p);
+        // A = {0,1}, P = {2,3,4}
+        b.add_edge(VId(0), VId(2), ap);
+        b.add_edge(VId(1), VId(2), ap);
+        b.add_edge(VId(3), VId(2), pp);
+        let g = b.build().unwrap();
+        assert_eq!(g.csrs[0].num_edges(), 2);
+        assert_eq!(g.csrs[1].num_edges(), 1);
+        assert_eq!(g.neighbors(VId(2), ap), &[VId(0), VId(1)]);
+    }
+
+    #[test]
+    fn missing_target_type_errors() {
+        let b = HetGraphBuilder::new("g");
+        assert!(b.build().is_err());
+    }
+
+    #[test]
+    fn out_of_range_edge_fails_validation() {
+        let mut b = HetGraphBuilder::new("g");
+        let a = b.add_vertex_type("A", 2, 4);
+        let p = b.add_vertex_type("P", 2, 4);
+        let ap = b.add_semantic("AP", a, p);
+        b.set_target_type(p);
+        b.add_edge(VId(3), VId(2), ap); // src 3 is a P vertex, not A
+        assert!(b.build().is_err());
+    }
+}

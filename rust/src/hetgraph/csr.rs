@@ -1,0 +1,152 @@
+//! Compressed sparse row storage for one semantic graph.
+//!
+//! A semantic graph in an HGNN is bipartite: edges go from source vertices
+//! of one type to target vertices of another (possibly the same) type. The
+//! NA stage only ever walks target→sources, so we store the *reverse*
+//! adjacency: for each target vertex, the list of its source neighbors.
+
+use super::types::{SemanticId, VId};
+
+
+/// Reverse-CSR adjacency of one semantic graph: `neighbors(target) -> [src]`.
+#[derive(Debug, Clone)]
+pub struct SemanticCsr {
+    pub semantic: SemanticId,
+    /// Sorted list of target vertices that have at least one in-edge under
+    /// this semantic. Indexes `offsets`.
+    pub targets: Vec<VId>,
+    /// `offsets[i]..offsets[i+1]` is the neighbor range of `targets[i]`.
+    pub offsets: Vec<u32>,
+    /// Concatenated source-neighbor lists.
+    pub sources: Vec<VId>,
+}
+
+impl SemanticCsr {
+    /// Build from (target, sources) pairs. Pairs need not be sorted.
+    pub fn from_pairs(semantic: SemanticId, mut pairs: Vec<(VId, Vec<VId>)>) -> Self {
+        pairs.sort_by_key(|(t, _)| *t);
+        let mut targets = Vec::with_capacity(pairs.len());
+        let mut offsets = Vec::with_capacity(pairs.len() + 1);
+        let mut sources = Vec::new();
+        offsets.push(0u32);
+        for (t, mut srcs) in pairs {
+            srcs.sort();
+            srcs.dedup(); // parallel edges add nothing to NA
+            targets.push(t);
+            sources.extend_from_slice(&srcs);
+            offsets.push(sources.len() as u32);
+        }
+        SemanticCsr { semantic, targets, offsets, sources }
+    }
+
+    /// Number of target vertices with in-edges under this semantic.
+    #[inline]
+    pub fn num_targets(&self) -> usize {
+        self.targets.len()
+    }
+
+    /// Total edge count.
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.sources.len()
+    }
+
+    /// Neighbor slice of the i-th target (by position, not VId).
+    #[inline]
+    pub fn neighbors_at(&self, i: usize) -> &[VId] {
+        let lo = self.offsets[i] as usize;
+        let hi = self.offsets[i + 1] as usize;
+        &self.sources[lo..hi]
+    }
+
+    /// Binary-search a target's position; `None` if it has no in-edges here.
+    #[inline]
+    pub fn position_of(&self, target: VId) -> Option<usize> {
+        self.targets.binary_search(&target).ok()
+    }
+
+    /// Neighbor slice of a target vertex, empty if absent.
+    #[inline]
+    pub fn neighbors(&self, target: VId) -> &[VId] {
+        match self.position_of(target) {
+            Some(i) => self.neighbors_at(i),
+            None => &[],
+        }
+    }
+
+    /// In-degree of a target under this semantic.
+    #[inline]
+    pub fn degree(&self, target: VId) -> usize {
+        self.neighbors(target).len()
+    }
+
+    /// Iterate `(target, neighbors)`.
+    pub fn iter(&self) -> impl Iterator<Item = (VId, &[VId])> + '_ {
+        self.targets.iter().enumerate().map(|(i, t)| (*t, self.neighbors_at(i)))
+    }
+
+    /// Structural invariant check (used by tests and the builder).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.offsets.len() != self.targets.len() + 1 {
+            return Err("offsets length mismatch".into());
+        }
+        if *self.offsets.last().unwrap_or(&0) as usize != self.sources.len() {
+            return Err("last offset != sources.len()".into());
+        }
+        if !self.targets.windows(2).all(|w| w[0] < w[1]) {
+            return Err("targets not strictly sorted".into());
+        }
+        if !self.offsets.windows(2).all(|w| w[0] <= w[1]) {
+            return Err("offsets not monotone".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn csr() -> SemanticCsr {
+        SemanticCsr::from_pairs(
+            SemanticId(0),
+            vec![
+                (VId(5), vec![VId(1), VId(2)]),
+                (VId(3), vec![VId(2)]),
+                (VId(9), vec![VId(1), VId(2), VId(4)]),
+            ],
+        )
+    }
+
+    #[test]
+    fn builds_sorted() {
+        let c = csr();
+        c.validate().unwrap();
+        assert_eq!(c.targets, vec![VId(3), VId(5), VId(9)]);
+        assert_eq!(c.num_edges(), 6);
+    }
+
+    #[test]
+    fn neighbor_lookup() {
+        let c = csr();
+        assert_eq!(c.neighbors(VId(5)), &[VId(1), VId(2)]);
+        assert_eq!(c.neighbors(VId(9)).len(), 3);
+        assert!(c.neighbors(VId(4)).is_empty());
+        assert_eq!(c.degree(VId(3)), 1);
+    }
+
+    #[test]
+    fn iter_covers_all() {
+        let c = csr();
+        let total: usize = c.iter().map(|(_, ns)| ns.len()).sum();
+        assert_eq!(total, c.num_edges());
+    }
+
+    #[test]
+    fn empty_is_valid() {
+        let c = SemanticCsr::from_pairs(SemanticId(1), vec![]);
+        c.validate().unwrap();
+        assert_eq!(c.num_targets(), 0);
+        assert_eq!(c.num_edges(), 0);
+    }
+}

@@ -1,0 +1,205 @@
+//! The heterogeneous graph: vertex types, semantics, and per-semantic CSRs.
+
+use super::csr::SemanticCsr;
+use super::types::{SemanticId, SemanticSpec, TypedEdge, VId, VertexTypeId, VertexTypeSpec};
+use rustc_hash::FxHashSet;
+
+
+/// A heterogeneous graph `G = (V, E, S^v, S^e)` (paper §II-A), stored as one
+/// reverse-CSR per semantic (the output of the SGB stage, §II-B ①).
+#[derive(Debug, Clone)]
+pub struct HetGraph {
+    pub name: String,
+    pub vertex_types: Vec<VertexTypeSpec>,
+    pub semantics: Vec<SemanticSpec>,
+    /// `type_base[t] .. type_base[t] + vertex_types[t].count` is the global
+    /// VId range of vertex type `t`.
+    pub type_base: Vec<u32>,
+    /// One reverse-CSR per semantic, indexed by `SemanticId`.
+    pub csrs: Vec<SemanticCsr>,
+    /// The distinguished *target* vertex type (the type the model embeds,
+    /// e.g. Paper in ACM). All semantics point into this type.
+    pub target_type: VertexTypeId,
+}
+
+impl HetGraph {
+    /// Total vertex count across all types.
+    pub fn num_vertices(&self) -> usize {
+        self.vertex_types.iter().map(|t| t.count as usize).sum()
+    }
+
+    /// Total edge count across all semantics.
+    pub fn num_edges(&self) -> usize {
+        self.csrs.iter().map(|c| c.num_edges()).sum()
+    }
+
+    pub fn num_semantics(&self) -> usize {
+        self.semantics.len()
+    }
+
+    /// Global VId range of a vertex type.
+    pub fn type_range(&self, t: VertexTypeId) -> std::ops::Range<u32> {
+        let base = self.type_base[t.0 as usize];
+        base..base + self.vertex_types[t.0 as usize].count
+    }
+
+    /// Vertex type of a global VId (linear scan over the handful of types).
+    pub fn type_of(&self, v: VId) -> VertexTypeId {
+        for (i, _) in self.vertex_types.iter().enumerate() {
+            let r = self.type_range(VertexTypeId(i as u16));
+            if r.contains(&v.0) {
+                return VertexTypeId(i as u16);
+            }
+        }
+        panic!("VId {} out of range", v)
+    }
+
+    /// Raw feature dimension of a vertex (by its type).
+    pub fn feat_dim_of(&self, v: VId) -> u32 {
+        self.vertex_types[self.type_of(v).0 as usize].feat_dim
+    }
+
+    /// All target vertices (the type being embedded), as global VIds.
+    pub fn target_vertices(&self) -> Vec<VId> {
+        self.type_range(self.target_type).map(VId).collect()
+    }
+
+    /// Neighbors of `target` under `semantic`.
+    #[inline]
+    pub fn neighbors(&self, target: VId, semantic: SemanticId) -> &[VId] {
+        self.csrs[semantic.0 as usize].neighbors(target)
+    }
+
+    /// The *multi-semantic neighborhood* N(v) of §IV-C1: the union of v's
+    /// neighbors across all semantics, including v itself.
+    pub fn multi_semantic_neighborhood(&self, target: VId) -> FxHashSet<VId> {
+        let mut set = FxHashSet::default();
+        set.insert(target);
+        for csr in &self.csrs {
+            for &u in csr.neighbors(target) {
+                set.insert(u);
+            }
+        }
+        set
+    }
+
+    /// Total in-degree of a target across all semantics (its aggregation
+    /// workload size under the semantics-complete paradigm).
+    pub fn total_degree(&self, target: VId) -> usize {
+        self.csrs.iter().map(|c| c.degree(target)).sum()
+    }
+
+    /// Average in-degree over targets that appear in at least one semantic.
+    pub fn avg_target_degree(&self) -> f64 {
+        let targets = self.target_vertices();
+        if targets.is_empty() {
+            return 0.0;
+        }
+        let total: usize = targets.iter().map(|&t| self.total_degree(t)).sum();
+        total as f64 / targets.len() as f64
+    }
+
+    /// Initial memory footprint of the dataset in bytes: raw features of
+    /// every vertex at f32 (the denominator of the paper's memory expansion
+    /// ratio, §III-B).
+    pub fn initial_footprint_bytes(&self) -> u64 {
+        self.vertex_types
+            .iter()
+            .map(|t| t.count as u64 * t.feat_dim as u64 * 4)
+            .sum()
+    }
+
+    /// Structural invariants: CSRs valid, every edge endpoint within the
+    /// declared type ranges, semantics' dst type == target type.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.type_base.len() != self.vertex_types.len() {
+            return Err("type_base length mismatch".into());
+        }
+        for (i, csr) in self.csrs.iter().enumerate() {
+            csr.validate().map_err(|e| format!("csr {i}: {e}"))?;
+            let spec = &self.semantics[i];
+            let dst_range = self.type_range(spec.dst_type);
+            let src_range = self.type_range(spec.src_type);
+            for &t in &csr.targets {
+                if !dst_range.contains(&t.0) {
+                    return Err(format!("semantic {i}: target {t} outside dst type range"));
+                }
+            }
+            for &s in &csr.sources {
+                if !src_range.contains(&s.0) {
+                    return Err(format!("semantic {i}: source {s} outside src type range"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// All edges as a flat list (test/debug helper; allocates).
+    pub fn edges(&self) -> Vec<TypedEdge> {
+        let mut out = Vec::with_capacity(self.num_edges());
+        for csr in &self.csrs {
+            for (t, ns) in csr.iter() {
+                for &s in ns {
+                    out.push(TypedEdge { src: s, dst: t, semantic: csr.semantic });
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetgraph::builder::HetGraphBuilder;
+
+    fn tiny() -> HetGraph {
+        // 2 types: T0 (targets, 3 vertices, dim 4), T1 (sources, 4, dim 8).
+        // 2 semantics: T1->T0 and T0->T0 (self-relation).
+        let mut b = HetGraphBuilder::new("tiny");
+        let t0 = b.add_vertex_type("target", 3, 4);
+        let t1 = b.add_vertex_type("src", 4, 8);
+        let r0 = b.add_semantic("S->T", t1, t0);
+        let r1 = b.add_semantic("T->T", t0, t0);
+        // t0 vertices are global 0..3, t1 are 3..7
+        b.add_edge(VId(3), VId(0), r0);
+        b.add_edge(VId(4), VId(0), r0);
+        b.add_edge(VId(4), VId(1), r0);
+        b.add_edge(VId(1), VId(0), r1);
+        b.set_target_type(t0);
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn counts_and_ranges() {
+        let g = tiny();
+        assert_eq!(g.num_vertices(), 7);
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.type_range(VertexTypeId(1)), 3..7);
+        assert_eq!(g.type_of(VId(5)), VertexTypeId(1));
+        assert_eq!(g.feat_dim_of(VId(0)), 4);
+    }
+
+    #[test]
+    fn multi_semantic_neighborhood_unions() {
+        let g = tiny();
+        let n0 = g.multi_semantic_neighborhood(VId(0));
+        // v0's neighbors: {3,4} under r0, {1} under r1, plus itself.
+        assert_eq!(n0.len(), 4);
+        assert!(n0.contains(&VId(0)) && n0.contains(&VId(1)));
+        assert!(n0.contains(&VId(3)) && n0.contains(&VId(4)));
+        assert_eq!(g.total_degree(VId(0)), 3);
+    }
+
+    #[test]
+    fn footprint() {
+        let g = tiny();
+        // 3*4*4 + 4*8*4 = 48 + 128
+        assert_eq!(g.initial_footprint_bytes(), 176);
+    }
+
+    #[test]
+    fn validates() {
+        tiny().validate().unwrap();
+    }
+}

@@ -1,0 +1,18 @@
+//! Heterogeneous graph substrate: typed vertices, semantics (typed
+//! relations), per-semantic reverse-CSR adjacency, builders, synthetic
+//! generators matched to published dataset statistics, and structural
+//! statistics (paper §II-A, §III).
+
+pub mod builder;
+pub mod csr;
+pub mod generator;
+#[allow(clippy::module_inception)]
+pub mod hetgraph;
+pub mod stats;
+pub mod types;
+
+pub use builder::HetGraphBuilder;
+pub use csr::SemanticCsr;
+pub use generator::{generate, DatasetSpec, SemSpec, TypeSpec};
+pub use hetgraph::HetGraph;
+pub use types::{SemanticId, SemanticSpec, TypedEdge, VId, VertexTypeId, VertexTypeSpec};

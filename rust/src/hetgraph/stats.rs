@@ -1,0 +1,197 @@
+//! Structural statistics of a `HetGraph`: the quantities behind the
+//! paper's motivation figures (Fig. 2) and the grouping design (§IV-C).
+
+use super::hetgraph::HetGraph;
+use super::types::VId;
+use rustc_hash::{FxHashMap, FxHashSet};
+
+
+/// Summary statistics printed by `tlv-hgnn stats` and used by tests.
+#[derive(Debug, Clone)]
+pub struct GraphStats {
+    pub name: String,
+    pub vertices: usize,
+    pub edges: usize,
+    pub semantics: usize,
+    pub targets: usize,
+    pub avg_target_degree: f64,
+    pub max_target_degree: usize,
+    /// Fraction of total feature accesses during NA that are *redundant*
+    /// (repeat accesses to an already-fetched feature), Fig. 2(b).
+    pub redundant_access_fraction: f64,
+    /// Share of all edges covered by the top-15% highest-degree targets.
+    pub top15_edge_share: f64,
+}
+
+/// Degree histogram of target vertices (total in-degree across semantics).
+pub fn degree_histogram(g: &HetGraph) -> Vec<(usize, usize)> {
+    let mut h: FxHashMap<usize, usize> = FxHashMap::default();
+    for t in g.target_vertices() {
+        *h.entry(g.total_degree(t)).or_default() += 1;
+    }
+    let mut v: Vec<_> = h.into_iter().collect();
+    v.sort_unstable();
+    v
+}
+
+/// Redundancy of neighbor feature accesses (paper Fig. 2(b)).
+///
+/// Under plain per-semantic NA every edge causes one source-feature access
+/// and every (target, semantic) pair causes one target-feature access. An
+/// access is redundant when the same vertex feature was already accessed
+/// earlier in the NA stage. The paper reports the redundant fraction of
+/// *total* feature accesses, >80% GM across datasets.
+pub fn redundant_access_fraction(g: &HetGraph) -> f64 {
+    let mut total: u64 = 0;
+    let mut first_touch: FxHashSet<VId> = FxHashSet::default();
+    for csr in &g.csrs {
+        for (t, ns) in csr.iter() {
+            total += 1; // target feature access for this semantic
+            first_touch.insert(t);
+            for &u in ns {
+                total += 1;
+                first_touch.insert(u);
+            }
+        }
+    }
+    if total == 0 {
+        return 0.0;
+    }
+    let unique = first_touch.len() as u64;
+    (total - unique) as f64 / total as f64
+}
+
+/// Share of all edges whose target is in the top `pct`% by total degree.
+pub fn top_degree_edge_share(g: &HetGraph, pct: f64) -> f64 {
+    let targets = g.target_vertices();
+    let mut degs: Vec<usize> = targets.iter().map(|&t| g.total_degree(t)).collect();
+    let total: usize = degs.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    degs.sort_unstable_by(|a, b| b.cmp(a));
+    let k = ((targets.len() as f64) * pct / 100.0).ceil() as usize;
+    let top: usize = degs[..k.min(degs.len())].iter().sum();
+    top as f64 / total as f64
+}
+
+/// Mean Jaccard similarity of multi-semantic neighborhoods over a sample of
+/// high-degree target pairs (grouping-potential indicator, §IV-C1).
+pub fn mean_hub_jaccard(g: &HetGraph, sample_pairs: usize) -> f64 {
+    let mut targets = g.target_vertices();
+    targets.sort_by_key(|&t| std::cmp::Reverse(g.total_degree(t)));
+    let hubs = &targets[..(targets.len() * 15 / 100).max(2).min(targets.len())];
+    if hubs.len() < 2 {
+        return 0.0;
+    }
+    let mut sum = 0.0;
+    let mut n = 0usize;
+    // Deterministic striding over hub pairs.
+    let stride = (hubs.len() * (hubs.len() - 1) / 2 / sample_pairs.max(1)).max(1);
+    let mut k = 0usize;
+    'outer: for i in 0..hubs.len() {
+        let ni = g.multi_semantic_neighborhood(hubs[i]);
+        for j in (i + 1)..hubs.len() {
+            k += 1;
+            if k % stride != 0 {
+                continue;
+            }
+            let nj = g.multi_semantic_neighborhood(hubs[j]);
+            let inter = ni.intersection(&nj).count();
+            let union = ni.len() + nj.len() - inter;
+            sum += inter as f64 / union as f64;
+            n += 1;
+            if n >= sample_pairs {
+                break 'outer;
+            }
+        }
+    }
+    if n == 0 { 0.0 } else { sum / n as f64 }
+}
+
+/// Compute the full stats record.
+pub fn compute(g: &HetGraph) -> GraphStats {
+    let targets = g.target_vertices();
+    let max_deg = targets.iter().map(|&t| g.total_degree(t)).max().unwrap_or(0);
+    GraphStats {
+        name: g.name.clone(),
+        vertices: g.num_vertices(),
+        edges: g.num_edges(),
+        semantics: g.num_semantics(),
+        targets: targets.len(),
+        avg_target_degree: g.avg_target_degree(),
+        max_target_degree: max_deg,
+        redundant_access_fraction: redundant_access_fraction(g),
+        top15_edge_share: top_degree_edge_share(g, 15.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetgraph::generator::{generate, DatasetSpec, SemSpec, TypeSpec};
+
+    fn g() -> HetGraph {
+        generate(
+            &DatasetSpec {
+                name: "s".into(),
+                types: vec![
+                    TypeSpec { name: "P".into(), count: 300, feat_dim: 32 },
+                    TypeSpec { name: "A".into(), count: 500, feat_dim: 32 },
+                ],
+                semantics: vec![
+                    SemSpec { name: "AP".into(), src: 1, dst: 0, edges: 3000 },
+                    SemSpec { name: "PP".into(), src: 0, dst: 0, edges: 1500 },
+                ],
+                target_type: 0,
+                degree_exponent: 1.3,
+                popularity_exponent: 1.15,
+            },
+            11,
+        )
+    }
+
+    #[test]
+    fn redundancy_is_high_on_skewed_graphs() {
+        let f = redundant_access_fraction(&g());
+        // Real HetGs show >80%; our synthetic graphs should be well above 50%.
+        assert!(f > 0.5, "redundant fraction = {f}");
+        assert!(f < 1.0);
+    }
+
+    #[test]
+    fn stats_consistency() {
+        let graph = g();
+        let s = compute(&graph);
+        assert_eq!(s.vertices, graph.num_vertices());
+        assert_eq!(s.edges, graph.num_edges());
+        assert!(s.top15_edge_share > 0.3);
+        assert!(s.avg_target_degree > 0.0);
+    }
+
+    #[test]
+    fn histogram_sums_to_targets() {
+        let graph = g();
+        let h = degree_histogram(&graph);
+        let total: usize = h.iter().map(|(_, c)| c).sum();
+        assert_eq!(total, graph.target_vertices().len());
+    }
+
+    #[test]
+    fn hub_jaccard_positive() {
+        // Popular shared sources must give hubs nonzero overlap.
+        let j = mean_hub_jaccard(&g(), 100);
+        assert!(j > 0.01, "jaccard = {j}");
+    }
+
+    #[test]
+    fn empty_graph_redundancy_zero() {
+        use crate::hetgraph::builder::HetGraphBuilder;
+        let mut b = HetGraphBuilder::new("e");
+        let t = b.add_vertex_type("T", 4, 8);
+        b.add_semantic("TT", t, t);
+        b.set_target_type(t);
+        let g = b.build().unwrap();
+        assert_eq!(redundant_access_fraction(&g), 0.0);
+    }
+}

@@ -1,0 +1,36 @@
+//! # TLV-HGNN — Thinking Like a Vertex for Memory-efficient HGNN Inference
+//!
+//! Full-system reproduction of the TLV-HGNN paper (CS.AR 2025): a
+//! heterogeneous-graph substrate, the per-semantic and semantics-complete
+//! execution paradigms, a cycle-level accelerator simulator (reconfigurable
+//! PEs, two-level feature cache, HBM model), overlap-driven vertex
+//! grouping, A100/HiHGNN baseline models, an energy/area model, and a Rust
+//! serving coordinator that executes AOT-compiled JAX/Pallas numerics
+//! through PJRT.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod datasets;
+pub mod energy;
+pub mod engine;
+pub mod hetgraph;
+pub mod grouping;
+pub mod model;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+pub mod prelude {
+    pub use crate::datasets::Dataset;
+    pub use crate::engine::{
+        walk_per_semantic, walk_semantics_complete, AccessCounter, MemoryReport, MemoryTracker,
+        ReferenceEngine, TraceSink,
+    };
+    pub use crate::hetgraph::{HetGraph, HetGraphBuilder, SemanticId, VId, VertexTypeId};
+    pub use crate::model::{ModelConfig, ModelKind, Workload};
+}

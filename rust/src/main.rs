@@ -1,0 +1,239 @@
+//! TLV-HGNN command-line interface.
+//!
+//! Subcommands (arg parsing is hand-rolled — no CLI crates are vendored in
+//! this environment):
+//!
+//!   stats   <dataset> [--scale S]            graph statistics (Fig. 2 inputs)
+//!   sim     <dataset> [--model M] [--mode X] cycle simulation, one config
+//!   ablate  <dataset> [--model M]            all four -B/-S/-P/-O configs
+//!   group   <dataset> [--scale S]            grouping quality report
+//!   compare <dataset> [--model M]            TLV vs A100 vs HiHGNN
+//!   bench-table <fig2|fig7|fig8|fig9|table3|table4>   paper table
+//!   serve   [--model M] [--scale S]          demo serving loop (needs artifacts)
+
+use std::process::exit;
+use tlv_hgnn::baselines::{run_a100, run_hihgnn, GpuConfig, HiHgnnConfig};
+use tlv_hgnn::datasets::Dataset;
+use tlv_hgnn::energy::{tlv_energy, EnergyTable};
+use tlv_hgnn::grouping::{default_n_max, group_overlap_driven, OverlapHypergraph};
+use tlv_hgnn::hetgraph::stats;
+use tlv_hgnn::model::{ModelConfig, ModelKind};
+use tlv_hgnn::report;
+use tlv_hgnn::sim::{AccelConfig, ExecMode, Simulator};
+use tlv_hgnn::util::table::{f2, human_bytes, human_count, pct};
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: tlv-hgnn <stats|sim|ablate|group|compare|bench-table|serve> [args]\n\
+         datasets: acm imdb dblp am fb | models: rgcn rgat nars\n\
+         modes: -B -S -P -O | flags: --scale S --model M --mode X"
+    );
+    exit(2)
+}
+
+fn parse_dataset(s: &str) -> Dataset {
+    match s.to_ascii_lowercase().as_str() {
+        "acm" => Dataset::Acm,
+        "imdb" => Dataset::Imdb,
+        "dblp" => Dataset::Dblp,
+        "am" => Dataset::Am,
+        "fb" | "freebase" => Dataset::Freebase,
+        _ => {
+            eprintln!("unknown dataset {s}");
+            usage()
+        }
+    }
+}
+
+fn parse_model(s: &str) -> ModelKind {
+    match s.to_ascii_lowercase().as_str() {
+        "rgcn" => ModelKind::Rgcn,
+        "rgat" => ModelKind::Rgat,
+        "nars" => ModelKind::Nars,
+        _ => {
+            eprintln!("unknown model {s}");
+            usage()
+        }
+    }
+}
+
+fn parse_mode(s: &str) -> ExecMode {
+    match s {
+        "-B" | "B" => ExecMode::PerSemanticBaseline,
+        "-S" | "S" => ExecMode::SemanticsComplete,
+        "-P" | "P" => ExecMode::RandomGrouped,
+        "-O" | "O" => ExecMode::OverlapGrouped,
+        _ => {
+            eprintln!("unknown mode {s}");
+            usage()
+        }
+    }
+}
+
+/// Pull `--flag value` out of the arg list.
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else { usage() };
+    let rest = &args[1..];
+
+    match cmd.as_str() {
+        "stats" => {
+            let d = rest.first().map(|s| parse_dataset(s)).unwrap_or(Dataset::Acm);
+            let scale =
+                flag(rest, "--scale").and_then(|s| s.parse().ok()).unwrap_or(d.bench_scale());
+            let g = d.load(scale);
+            let s = stats::compute(&g);
+            println!("{} @ scale {scale}", s.name);
+            println!("  vertices            {}", s.vertices);
+            println!("  edges               {}", s.edges);
+            println!("  semantics           {}", s.semantics);
+            println!("  targets             {}", s.targets);
+            println!("  avg target degree   {:.2}", s.avg_target_degree);
+            println!("  max target degree   {}", s.max_target_degree);
+            println!("  redundant accesses  {}", pct(s.redundant_access_fraction));
+            println!("  top-15% edge share  {}", pct(s.top15_edge_share));
+            println!("  hub jaccard (est.)  {:.4}", stats::mean_hub_jaccard(&g, 200));
+        }
+        "sim" => {
+            let d = rest.first().map(|s| parse_dataset(s)).unwrap_or(Dataset::Acm);
+            let kind = flag(rest, "--model").map(|s| parse_model(&s)).unwrap_or(ModelKind::Rgcn);
+            let mode =
+                flag(rest, "--mode").map(|s| parse_mode(&s)).unwrap_or(ExecMode::OverlapGrouped);
+            let scale =
+                flag(rest, "--scale").and_then(|s| s.parse().ok()).unwrap_or(d.bench_scale());
+            let g = d.load(scale);
+            let m = ModelConfig::new(kind);
+            let cfg = AccelConfig::tlv_default();
+            let r = Simulator::new(cfg.clone(), &g, m.clone()).run(mode);
+            let e = tlv_energy(&r, &cfg, &m, &EnergyTable::default());
+            println!("{} {} {} @ scale {scale}", d.name(), kind.name(), mode.name());
+            println!("  cycles         {}", human_count(r.cycles));
+            println!("  wall @1GHz     {:.3} ms", r.time_ms(&cfg));
+            println!("  fp / na cycles {} / {}", human_count(r.fp_cycles), human_count(r.na_cycles));
+            println!("  dram accesses  {}", human_count(r.dram.accesses));
+            println!("  dram traffic   {}", human_bytes(r.dram.bytes));
+            println!("  row hit rate   {}", pct(r.dram.row_hit_rate()));
+            println!("  cache hit rate {}", pct(r.cache_hit_rate()));
+            println!("  energy         {:.2} mJ ({} DRAM)", e.total_mj(), pct(e.dram_fraction()));
+        }
+        "ablate" => {
+            let d = rest.first().map(|s| parse_dataset(s)).unwrap_or(Dataset::Am);
+            let kind = flag(rest, "--model").map(|s| parse_model(&s)).unwrap_or(ModelKind::Rgcn);
+            let scale =
+                flag(rest, "--scale").and_then(|s| s.parse().ok()).unwrap_or(d.bench_scale());
+            let g = d.load(scale);
+            let cfg = AccelConfig::tlv_default();
+            let sim = Simulator::new(cfg.clone(), &g, ModelConfig::new(kind));
+            let base = sim.run(ExecMode::PerSemanticBaseline);
+            println!("{} {} @ scale {scale}", d.name(), kind.name());
+            for mode in ExecMode::ALL {
+                let r =
+                    if mode == ExecMode::PerSemanticBaseline { base.clone() } else { sim.run(mode) };
+                println!(
+                    "  {:>2}: cycles {:>10}  dram {:>9}  speedup {:>5}  hit {:>6}",
+                    mode.name(),
+                    human_count(r.cycles),
+                    human_count(r.dram.accesses),
+                    f2(base.cycles as f64 / r.cycles as f64),
+                    pct(r.cache_hit_rate()),
+                );
+            }
+        }
+        "group" => {
+            let d = rest.first().map(|s| parse_dataset(s)).unwrap_or(Dataset::Acm);
+            let scale =
+                flag(rest, "--scale").and_then(|s| s.parse().ok()).unwrap_or(d.bench_scale());
+            let g = d.load(scale);
+            let h = OverlapHypergraph::build(&g, 0.01);
+            let n_max = default_n_max(g.target_vertices().len(), 4);
+            let gr = group_overlap_driven(&h, n_max, 4);
+            println!("{} @ scale {scale}", d.name());
+            println!("  super-vertices (top 15%) {}", h.num_supers());
+            println!("  low-degree rest          {}", h.rest.len());
+            println!("  total overlap weight     {:.2}", h.total_weight);
+            println!("  groups (n_max={n_max})   {}", gr.groups.len());
+            println!("  hub groups               {}", gr.hub_groups);
+            println!("  intra-group weight       {}", pct(gr.intra_weight_fraction));
+        }
+        "compare" => {
+            let d = rest.first().map(|s| parse_dataset(s)).unwrap_or(Dataset::Acm);
+            let kind = flag(rest, "--model").map(|s| parse_model(&s)).unwrap_or(ModelKind::Rgcn);
+            let g = d.load(d.bench_scale());
+            let m = ModelConfig::new(kind);
+            let cfg = AccelConfig::tlv_default();
+            let tlv = Simulator::new(cfg.clone(), &g, m.clone()).run(ExecMode::OverlapGrouped);
+            let tlv_ms = tlv.time_ms(&cfg);
+            let gpu = run_a100(&g, &m, &GpuConfig::a100_80g());
+            let hi = run_hihgnn(&g, &m, &HiHgnnConfig::paper());
+            println!("{} {} (bench scale)", d.name(), kind.name());
+            println!(
+                "  A100     {:>9.3} ms  dram {:>10}  {}",
+                gpu.time_ms,
+                human_bytes(gpu.dram_bytes),
+                if gpu.oom { "OOM!" } else { "" }
+            );
+            println!("  HiHGNN   {:>9.3} ms  dram {:>10}", hi.time_ms, human_bytes(hi.dram_bytes));
+            println!("  TLV-HGNN {:>9.3} ms  dram {:>10}", tlv_ms, human_bytes(tlv.dram.bytes));
+            println!(
+                "  speedup: {:.2}x vs A100, {:.2}x vs HiHGNN",
+                gpu.time_ms / tlv_ms,
+                hi.time_ms / tlv_ms
+            );
+        }
+        "bench-table" => {
+            match rest.first().map(|s| s.as_str()) {
+                Some("fig2") => {
+                    println!("{}", report::fig2a_memory_expansion().render());
+                    println!("{}", report::fig2b_redundancy().render());
+                }
+                Some("fig7") => {
+                    let mut rows = Vec::new();
+                    for kind in ModelKind::ALL {
+                        for d in Dataset::ALL {
+                            rows.push(report::run_platforms(kind, d));
+                        }
+                    }
+                    println!("{}", report::fig7a_speedup(&rows).render());
+                    println!("{}", report::fig7b_dram(&rows).render());
+                }
+                Some("fig8") => {
+                    let (a, b) = report::fig8_energy();
+                    println!("{}", a.render());
+                    println!("{}", b.render());
+                }
+                Some("fig9") => println!("{}", report::fig9_ablation().render()),
+                Some("table3") => println!("{}", report::table3_expansion().render()),
+                Some("table4") => println!("{}", report::table4_area_power().render()),
+                _ => usage(),
+            };
+        }
+        "serve" => {
+            // Thin wrapper over the serve_inference example flow.
+            let kind = flag(rest, "--model").map(|s| parse_model(&s)).unwrap_or(ModelKind::Rgcn);
+            let scale = flag(rest, "--scale").and_then(|s| s.parse().ok()).unwrap_or(0.1);
+            let g = std::sync::Arc::new(Dataset::Acm.load(scale));
+            let server = match tlv_hgnn::coordinator::Server::start(
+                std::sync::Arc::clone(&g),
+                tlv_hgnn::coordinator::ServerConfig::new(kind),
+            ) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("server start failed (did you run `make artifacts`?): {e:#}");
+                    exit(1);
+                }
+            };
+            let targets = g.target_vertices();
+            for chunk in targets.chunks(32).take(8) {
+                let r = server.submit(chunk.to_vec()).expect("request");
+                println!("req {}: {} embeddings in {:?}", r.id, r.embeddings.len(), r.latency);
+            }
+            println!("{}", server.metrics.summary());
+            server.shutdown();
+        }
+        _ => usage(),
+    }
+}

@@ -1,0 +1,135 @@
+//! HGNN model configurations: RGCN, RGAT, NARS (paper §V-A Benchmarks).
+//!
+//! These capture the *architectural* parameters that determine compute and
+//! memory behavior — hidden dims, attention heads, per-edge work — which is
+//! what the simulator and baseline models consume. Numerics for each model
+//! live in `engine::functional` (CPU reference) and `python/compile/model.py`
+//! (JAX, AOT-compiled and run through PJRT).
+
+
+
+/// The three evaluated HGNN models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelKind {
+    /// Relational GCN (Schlichtkrull et al.): per-relation mean aggregation.
+    Rgcn,
+    /// Relational GAT (Busbridge et al.): per-edge attention, multi-head.
+    Rgat,
+    /// NARS (Yu et al.): neighbor-averaged features over relation subsets.
+    Nars,
+}
+
+impl ModelKind {
+    pub const ALL: [ModelKind; 3] = [ModelKind::Rgcn, ModelKind::Rgat, ModelKind::Nars];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::Rgcn => "RGCN",
+            ModelKind::Rgat => "RGAT",
+            ModelKind::Nars => "NARS",
+        }
+    }
+}
+
+/// Hyperparameters (HGB defaults, as the paper trains "with the
+/// hyperparameters specified in their original papers").
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub kind: ModelKind,
+    /// Hidden dimension after feature projection.
+    pub hidden_dim: u32,
+    /// Attention heads (RGAT only; 1 otherwise).
+    pub heads: u32,
+    /// Whether edge weights (attention) are computed per edge during NA.
+    pub edge_attention: bool,
+    /// Semantic-fusion style: learned weighted sum across semantics.
+    pub fusion_dim: u32,
+}
+
+impl ModelConfig {
+    pub fn new(kind: ModelKind) -> Self {
+        match kind {
+            ModelKind::Rgcn => ModelConfig {
+                kind,
+                hidden_dim: 64,
+                heads: 1,
+                edge_attention: false,
+                fusion_dim: 64,
+            },
+            ModelKind::Rgat => ModelConfig {
+                kind,
+                hidden_dim: 64,
+                heads: 8,
+                edge_attention: true,
+                fusion_dim: 64,
+            },
+            ModelKind::Nars => ModelConfig {
+                kind,
+                hidden_dim: 64,
+                heads: 1,
+                edge_attention: false,
+                fusion_dim: 64,
+            },
+        }
+    }
+
+    /// Effective per-vertex embedding width during NA (heads concatenated).
+    pub fn na_width(&self) -> u32 {
+        self.hidden_dim
+    }
+
+    /// FLOPs to project one vertex of raw dim `d_in` (dense matmul 2*d_in*d_h).
+    pub fn fp_flops(&self, d_in: u32) -> u64 {
+        2 * d_in as u64 * self.hidden_dim as u64
+    }
+
+    /// FLOPs to aggregate one edge during NA: one weighted accumulate over
+    /// the hidden dim, plus attention-score work for RGAT (per head: dot of
+    /// two hidden vectors + softmax-ish scalar ops).
+    pub fn na_edge_flops(&self) -> u64 {
+        let agg = 2 * self.hidden_dim as u64;
+        if self.edge_attention {
+            let attn = self.heads as u64 * (2 * (2 * self.hidden_dim as u64 / self.heads as u64) + 4);
+            agg + attn
+        } else {
+            agg
+        }
+    }
+
+    /// FLOPs to fuse one target's per-semantic partials over `s` semantics.
+    pub fn sf_flops(&self, s: u32) -> u64 {
+        2 * s as u64 * self.fusion_dim as u64
+    }
+
+    /// Bytes of one projected feature vector (f32).
+    pub fn hidden_bytes(&self) -> u64 {
+        self.hidden_dim as u64 * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_models() {
+        let rgat = ModelConfig::new(ModelKind::Rgat);
+        assert!(rgat.edge_attention);
+        assert_eq!(rgat.heads, 8);
+        let rgcn = ModelConfig::new(ModelKind::Rgcn);
+        assert!(!rgcn.edge_attention);
+    }
+
+    #[test]
+    fn rgat_costs_more_per_edge() {
+        let rgat = ModelConfig::new(ModelKind::Rgat);
+        let rgcn = ModelConfig::new(ModelKind::Rgcn);
+        assert!(rgat.na_edge_flops() > rgcn.na_edge_flops());
+    }
+
+    #[test]
+    fn fp_flops_scale_with_input() {
+        let m = ModelConfig::new(ModelKind::Rgcn);
+        assert_eq!(m.fp_flops(100), 2 * 100 * 64);
+    }
+}

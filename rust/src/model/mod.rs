@@ -1,0 +1,7 @@
+//! HGNN model configurations and workload characterization.
+
+pub mod config;
+pub mod workload;
+
+pub use config::{ModelConfig, ModelKind};
+pub use workload::Workload;

@@ -1,0 +1,141 @@
+//! Stage-level workload characterization of a (model, graph) pair.
+//!
+//! Converts graph structure + model config into per-stage operation and
+//! byte counts. These feed the simulator (for cycle estimation of compute
+//! phases), the A100/HiHGNN baseline models, and the energy model — the
+//! same decomposition the paper's own methodology uses (§III-A: NA
+//! dominates, memory-bound).
+
+use crate::hetgraph::HetGraph;
+use crate::model::config::ModelConfig;
+
+
+/// Operation/byte counts for one inference pass, by stage.
+#[derive(Debug, Clone, Default)]
+pub struct Workload {
+    /// Feature projection: total FLOPs and input/output bytes.
+    pub fp_flops: u64,
+    pub fp_read_bytes: u64,
+    pub fp_write_bytes: u64,
+    /// Neighbor aggregation: FLOPs and *logical* feature-access counts
+    /// (before any cache/reuse optimization).
+    pub na_flops: u64,
+    pub na_source_accesses: u64,
+    pub na_target_accesses: u64,
+    /// Unique vertices touched during NA (lower bound on mandatory traffic).
+    pub na_unique_vertices: u64,
+    /// Semantic fusion.
+    pub sf_flops: u64,
+    /// Model/projection weight bytes (read once per pass, cacheable).
+    pub weight_bytes: u64,
+    /// Hidden feature width in bytes.
+    pub hidden_bytes: u64,
+    /// Number of (target, semantic) partial embeddings the per-semantic
+    /// paradigm must hold live until SF (the memory-expansion driver).
+    pub per_semantic_partials: u64,
+    /// Number of target vertices.
+    pub targets: u64,
+    /// Total edges.
+    pub edges: u64,
+    /// Number of semantics.
+    pub semantics: u64,
+}
+
+impl Workload {
+    /// Characterize one full-graph inference pass.
+    pub fn of(g: &HetGraph, m: &ModelConfig) -> Workload {
+        let mut w = Workload::default();
+        w.hidden_bytes = m.hidden_bytes();
+        w.semantics = g.num_semantics() as u64;
+        w.targets = g.target_vertices().len() as u64;
+        w.edges = g.num_edges() as u64;
+
+        // FP: every vertex of every type is projected once.
+        for t in &g.vertex_types {
+            w.fp_flops += t.count as u64 * m.fp_flops(t.feat_dim);
+            w.fp_read_bytes += t.count as u64 * t.feat_dim as u64 * 4;
+            w.fp_write_bytes += t.count as u64 * m.hidden_bytes();
+        }
+        // Projection weights: one [feat_dim, hidden] matrix per vertex type
+        // (per-relation weights for RGCN fold into the same traffic class).
+        for t in &g.vertex_types {
+            w.weight_bytes += t.feat_dim as u64 * m.hidden_dim as u64 * 4;
+        }
+
+        // NA: per edge, one source access + aggregation FLOPs; per
+        // (target, semantic) with degree>0, one target access.
+        let mut unique = rustc_hash::FxHashSet::default();
+        for csr in &g.csrs {
+            for (t, ns) in csr.iter() {
+                w.na_target_accesses += 1;
+                unique.insert(t);
+                w.na_source_accesses += ns.len() as u64;
+                w.na_flops += ns.len() as u64 * m.na_edge_flops();
+                for &u in ns {
+                    unique.insert(u);
+                }
+                w.per_semantic_partials += 1;
+            }
+        }
+        w.na_unique_vertices = unique.len() as u64;
+
+        // SF: one fusion per target that has any partials.
+        w.sf_flops = w.targets * m.sf_flops(w.semantics as u32);
+        w
+    }
+
+    /// Total FLOPs across stages.
+    pub fn total_flops(&self) -> u64 {
+        self.fp_flops + self.na_flops + self.sf_flops
+    }
+
+    /// Logical NA feature bytes (every access at hidden width, no reuse).
+    pub fn na_logical_bytes(&self) -> u64 {
+        (self.na_source_accesses + self.na_target_accesses) * self.hidden_bytes
+    }
+
+    /// Mandatory NA bytes: each unique vertex fetched exactly once.
+    pub fn na_mandatory_bytes(&self) -> u64 {
+        self.na_unique_vertices * self.hidden_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::Dataset;
+    use crate::model::config::{ModelConfig, ModelKind};
+
+    #[test]
+    fn na_dominates_flops_on_dense_graphs() {
+        let g = Dataset::Acm.load(0.08);
+        let m = ModelConfig::new(ModelKind::Rgat);
+        let w = Workload::of(&g, &m);
+        assert!(w.na_flops > 0 && w.fp_flops > 0 && w.sf_flops > 0);
+        assert_eq!(w.edges, g.num_edges() as u64);
+    }
+
+    #[test]
+    fn logical_exceeds_mandatory() {
+        let g = Dataset::Acm.load(0.08);
+        let w = Workload::of(&g, &ModelConfig::new(ModelKind::Rgcn));
+        assert!(w.na_logical_bytes() > w.na_mandatory_bytes());
+    }
+
+    #[test]
+    fn partials_equal_nonempty_target_semantic_pairs() {
+        let g = Dataset::Imdb.load(0.08);
+        let w = Workload::of(&g, &ModelConfig::new(ModelKind::Rgcn));
+        let expect: u64 = g.csrs.iter().map(|c| c.num_targets() as u64).sum();
+        assert_eq!(w.per_semantic_partials, expect);
+    }
+
+    #[test]
+    fn rgat_more_na_flops_than_rgcn() {
+        let g = Dataset::Acm.load(0.05);
+        let a = Workload::of(&g, &ModelConfig::new(ModelKind::Rgat));
+        let c = Workload::of(&g, &ModelConfig::new(ModelKind::Rgcn));
+        assert!(a.na_flops > c.na_flops);
+        assert_eq!(a.edges, c.edges);
+    }
+}

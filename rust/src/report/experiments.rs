@@ -1,0 +1,306 @@
+//! Experiment drivers: one function per table/figure of the paper's
+//! evaluation (§V). Shared by the criterion-style benches in
+//! `rust/benches/` and the `tlv-hgnn bench-table` CLI, so every number in
+//! EXPERIMENTS.md is regenerable from one code path.
+
+use crate::baselines::{run_a100, run_hihgnn, GpuConfig, HiHgnnConfig};
+use crate::datasets::Dataset;
+use crate::energy::{
+    area_power_report, chip_area_mm2, chip_power_w, gpu_energy, hihgnn_energy, tlv_energy,
+    EnergyTable,
+};
+use crate::engine::{walk_per_semantic, MemoryTracker};
+use crate::hetgraph::stats;
+use crate::model::{ModelConfig, ModelKind};
+use crate::sim::{AccelConfig, ExecMode, SimResult, Simulator};
+use crate::util::table::{f2, fx, pct, Table};
+
+/// Geometric mean helper (the paper reports GM across workloads).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// One (model, dataset) cross-platform measurement for Fig. 7 / Fig. 8.
+#[derive(Debug, Clone)]
+pub struct PlatformRow {
+    pub model: ModelKind,
+    pub dataset: Dataset,
+    pub a100_ms: f64,
+    pub a100_oom: bool,
+    pub hihgnn_ms: f64,
+    pub tlv_ms: f64,
+    pub a100_dram: u64,
+    pub hihgnn_dram: u64,
+    pub tlv_dram: u64,
+    pub a100_mj: f64,
+    pub hihgnn_mj: f64,
+    pub tlv_mj: f64,
+    pub tlv: SimResult,
+}
+
+/// Run all three platforms on one (model, dataset) at bench scale.
+pub fn run_platforms(kind: ModelKind, d: Dataset) -> PlatformRow {
+    let g = d.load(d.bench_scale());
+    let m = ModelConfig::new(kind);
+    let cfg = AccelConfig::tlv_default();
+    let et = EnergyTable::default();
+
+    let gpu = run_a100(&g, &m, &GpuConfig::a100_80g());
+    let hi = run_hihgnn(&g, &m, &HiHgnnConfig::paper());
+    let tlv = Simulator::new(cfg.clone(), &g, m.clone()).run(ExecMode::OverlapGrouped);
+    let tlv_ms = tlv.time_ms(&cfg);
+
+    PlatformRow {
+        model: kind,
+        dataset: d,
+        a100_ms: gpu.time_ms,
+        a100_oom: gpu.oom,
+        hihgnn_ms: hi.time_ms,
+        tlv_ms,
+        a100_dram: gpu.dram_bytes,
+        hihgnn_dram: hi.dram_bytes,
+        tlv_dram: tlv.dram.bytes,
+        a100_mj: gpu_energy(gpu.time_ms, gpu.dram_bytes, &et),
+        hihgnn_mj: hihgnn_energy(hi.time_ms, hi.dram_bytes, &et),
+        tlv_mj: tlv_energy(&tlv, &cfg, &m, &et).total_mj(),
+        tlv,
+    }
+}
+
+/// Fig. 2(a): memory expansion ratio of per-semantic execution (DGL/A100
+/// view), per model × dataset; flags OOM against 80 GB.
+pub fn fig2a_memory_expansion() -> Table {
+    let mut t = Table::new(&["model", "dataset", "expansion", "oom"]);
+    for kind in ModelKind::ALL {
+        for d in Dataset::ALL {
+            let g = d.load(d.bench_scale());
+            let m = ModelConfig::new(kind);
+            let gpu = run_a100(&g, &m, &GpuConfig::a100_80g());
+            t.row(&[
+                kind.name().into(),
+                d.name().into(),
+                f2(gpu.expansion_ratio),
+                if gpu.oom { "OOM".into() } else { "-".into() },
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig. 2(b): redundant fraction of NA feature accesses per dataset + GM.
+pub fn fig2b_redundancy() -> Table {
+    let mut t = Table::new(&["dataset", "redundant_access_fraction"]);
+    let mut vals = Vec::new();
+    for d in Dataset::ALL {
+        let g = d.load(d.bench_scale());
+        let f = stats::redundant_access_fraction(&g);
+        vals.push(f);
+        t.row(&[d.name().into(), pct(f)]);
+    }
+    t.row(&["GM".into(), pct(geomean(&vals))]);
+    t
+}
+
+/// Fig. 7(a): speedup of TLV-HGNN over A100 and HiHGNN per model×dataset.
+pub fn fig7a_speedup(rows: &[PlatformRow]) -> Table {
+    let mut t = Table::new(&["model", "dataset", "vs_A100", "vs_HiHGNN"]);
+    let (mut va, mut vh) = (Vec::new(), Vec::new());
+    for r in rows {
+        let sa = r.a100_ms / r.tlv_ms;
+        let sh = r.hihgnn_ms / r.tlv_ms;
+        va.push(sa);
+        vh.push(sh);
+        t.row(&[
+            r.model.name().into(),
+            r.dataset.name().into(),
+            if r.a100_oom { format!("{} (A100 OOM: vs HiHGNN-norm)", fx(sa)) } else { fx(sa) },
+            fx(sh),
+        ]);
+    }
+    t.row(&["GM".into(), "all".into(), fx(geomean(&va)), fx(geomean(&vh))]);
+    t
+}
+
+/// Fig. 7(b): DRAM traffic normalized to TLV-HGNN (reduction percents).
+pub fn fig7b_dram(rows: &[PlatformRow]) -> Table {
+    let mut t = Table::new(&["model", "dataset", "red_vs_A100", "red_vs_HiHGNN"]);
+    let (mut va, mut vh) = (Vec::new(), Vec::new());
+    for r in rows {
+        let ra = 1.0 - r.tlv_dram as f64 / r.a100_dram as f64;
+        let rh = 1.0 - r.tlv_dram as f64 / r.hihgnn_dram as f64;
+        va.push(r.a100_dram as f64 / r.tlv_dram as f64);
+        vh.push(r.hihgnn_dram as f64 / r.tlv_dram as f64);
+        t.row(&[r.model.name().into(), r.dataset.name().into(), pct(ra), pct(rh)]);
+    }
+    t.row(&[
+        "GM".into(),
+        "all".into(),
+        pct(1.0 - 1.0 / geomean(&va)),
+        pct(1.0 - 1.0 / geomean(&vh)),
+    ]);
+    t
+}
+
+/// Table III: memory expansion ratios on AM, three platforms × 3 models.
+pub fn table3_expansion() -> Table {
+    let d = Dataset::Am;
+    let g = d.load(d.bench_scale());
+    let mut t = Table::new(&["model", "A100", "HiHGNN", "TVL-HGNN"]);
+    for kind in ModelKind::ALL {
+        let m = ModelConfig::new(kind);
+        let gpu = run_a100(&g, &m, &GpuConfig::a100_80g());
+        let hi = run_hihgnn(&g, &m, &HiHgnnConfig::paper());
+        let cfg = AccelConfig::tlv_default();
+        let tlv = Simulator::new(cfg, &g, m.clone()).run(ExecMode::OverlapGrouped);
+        // TLV peak: projected features overwrite raw in HBM (the paradigm
+        // never needs both resident) + live partials + embeddings.
+        let init = g.initial_footprint_bytes() as f64;
+        let proj = (g.num_vertices() as u64 * m.hidden_bytes()) as f64;
+        let emb = (g.target_vertices().len() as u64 * m.hidden_bytes()) as f64;
+        let tlv_ratio = (init.max(proj) + tlv.peak_partial_bytes as f64 + emb) / init;
+        t.row(&[
+            kind.name().into(),
+            if gpu.oom { "OOM".into() } else { f2(gpu.expansion_ratio) },
+            f2(hi.expansion_ratio),
+            f2(tlv_ratio),
+        ]);
+    }
+    t
+}
+
+/// Fig. 8(a): energy on ACM and AM per platform; (b) TLV breakdown on AM.
+pub fn fig8_energy() -> (Table, Table) {
+    let mut a = Table::new(&["model", "dataset", "A100_mJ", "HiHGNN_mJ", "TLV_mJ", "red_vs_A100", "red_vs_HiHGNN"]);
+    for d in [Dataset::Acm, Dataset::Am] {
+        for kind in ModelKind::ALL {
+            let r = run_platforms(kind, d);
+            a.row(&[
+                kind.name().into(),
+                d.name().into(),
+                f2(r.a100_mj),
+                f2(r.hihgnn_mj),
+                f2(r.tlv_mj),
+                pct(1.0 - r.tlv_mj / r.a100_mj),
+                pct(1.0 - r.tlv_mj / r.hihgnn_mj),
+            ]);
+        }
+    }
+
+    // Breakdown on AM / RGCN.
+    let d = Dataset::Am;
+    let g = d.load(d.bench_scale());
+    let m = ModelConfig::new(ModelKind::Rgcn);
+    let cfg = AccelConfig::tlv_default();
+    let r = Simulator::new(cfg.clone(), &g, m.clone()).run(ExecMode::OverlapGrouped);
+    let e = tlv_energy(&r, &cfg, &m, &EnergyTable::default());
+    let total = e.total_mj();
+    let mut b = Table::new(&["component", "energy_mJ", "share"]);
+    for (name, v) in [
+        ("DRAM", e.dram_mj),
+        ("SRAM (caches+buffers)", e.sram_mj),
+        ("RPEs", e.rpe_mj),
+        ("Vertex Grouper", e.grouper_mj),
+        ("Activation", e.activation_mj),
+        ("Static", e.static_mj),
+    ] {
+        b.row(&[name.into(), f2(v), pct(v / total)]);
+    }
+    b.row(&["TOTAL".into(), f2(total), "100.00%".into()]);
+    (a, b)
+}
+
+/// Fig. 9: ablation on AM — DRAM accesses and speedup for -B/-S/-P/-O.
+pub fn fig9_ablation() -> Table {
+    let d = Dataset::Am;
+    let g = d.load(d.bench_scale());
+    let cfg = AccelConfig::tlv_default();
+    let mut t = Table::new(&["model", "config", "dram_accesses", "dram_vs_B", "speedup_vs_B"]);
+    for kind in ModelKind::ALL {
+        let m = ModelConfig::new(kind);
+        let sim = Simulator::new(cfg.clone(), &g, m);
+        let base = sim.run(ExecMode::PerSemanticBaseline);
+        for mode in ExecMode::ALL {
+            let r = if mode == ExecMode::PerSemanticBaseline { base.clone() } else { sim.run(mode) };
+            t.row(&[
+                kind.name().into(),
+                mode.name().into(),
+                crate::util::table::human_count(r.dram.accesses),
+                pct(1.0 - r.dram.accesses as f64 / base.dram.accesses as f64),
+                fx(base.cycles as f64 / r.cycles as f64),
+            ]);
+        }
+    }
+    t
+}
+
+/// Table IV: area and power decomposition of the default configuration.
+pub fn table4_area_power() -> Table {
+    let cfg = AccelConfig::tlv_default();
+    let rows = area_power_report(&cfg);
+    let (ta, tp) = (chip_area_mm2(&cfg), chip_power_w(&cfg) * 1e3);
+    let mut t = Table::new(&["component", "area_mm2", "area_%", "power_mW", "power_%"]);
+    t.row(&[
+        "TVL-HGNN (4 Channels)".into(),
+        f2(ta),
+        "100".into(),
+        f2(tp),
+        "100".into(),
+    ]);
+    for r in rows {
+        t.row(&[
+            r.name.into(),
+            f2(r.area_mm2),
+            f2(r.area_mm2 / ta * 100.0),
+            f2(r.power_mw),
+            f2(r.power_mw / tp * 100.0),
+        ]);
+    }
+    t
+}
+
+/// §III-B companion: expansion measured from the trace walker itself
+/// (framework-independent lower bound).
+pub fn paradigm_expansion(d: Dataset, kind: ModelKind) -> (f64, f64) {
+    let g = d.load(d.bench_scale());
+    let m = ModelConfig::new(kind);
+    let mut ps = MemoryTracker::default();
+    walk_per_semantic(&g, &m, &mut ps);
+    let mut sc = MemoryTracker::default();
+    crate::engine::walk_semantics_complete(&g, &m, &g.target_vertices(), &mut sc);
+    let init = g.initial_footprint_bytes() as f64;
+    (
+        (init + ps.peak_bytes as f64) / init,
+        (init + sc.peak_bytes as f64) / init,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_basics() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn fig2b_runs_on_test_scale() {
+        // Smoke via a single small dataset (full fig tables run in benches).
+        let g = Dataset::Acm.load(0.05);
+        let f = stats::redundant_access_fraction(&g);
+        assert!(f > 0.0 && f < 1.0);
+    }
+
+    #[test]
+    fn table4_has_all_components() {
+        let t = table4_area_power();
+        let s = t.render();
+        for name in ["Feature Caches", "Computing Module", "Vertex Grouper", "Others"] {
+            assert!(s.contains(name), "{name} missing");
+        }
+    }
+}

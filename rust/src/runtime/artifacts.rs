@@ -1,0 +1,144 @@
+//! Artifact manifest: shapes and files emitted by `python -m compile.aot`.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// The block geometry the artifacts were specialized to (aot.py PROFILE).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Profile {
+    /// Targets per block (B).
+    pub block: usize,
+    /// Semantics per block (S).
+    pub semantics: usize,
+    /// Padded neighbors per semantic (K).
+    pub max_neighbors: usize,
+    /// Capped raw input dim (Din).
+    pub in_dim: usize,
+    /// Hidden dim (D).
+    pub hidden: usize,
+}
+
+/// One artifact entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub arg_names: Vec<String>,
+    /// Input shapes (dims only; all f32).
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+}
+
+/// Parsed manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub profile: Profile,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("read {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+
+        let p = j.get("profile").ok_or_else(|| anyhow!("missing profile"))?;
+        let geti = |k: &str| -> Result<usize> {
+            p.get(k)
+                .and_then(|v| v.as_i64())
+                .map(|v| v as usize)
+                .ok_or_else(|| anyhow!("profile.{k} missing"))
+        };
+        let profile = Profile {
+            block: geti("block")?,
+            semantics: geti("semantics")?,
+            max_neighbors: geti("max_neighbors")?,
+            in_dim: geti("in_dim")?,
+            hidden: geti("hidden")?,
+        };
+
+        let arts = j.get("artifacts").ok_or_else(|| anyhow!("missing artifacts"))?;
+        let mut artifacts = Vec::new();
+        for name in arts.keys() {
+            let a = arts.get(name).unwrap();
+            let shapes = |key: &str| -> Result<Vec<Vec<usize>>> {
+                a.get(key)
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| anyhow!("{name}.{key} missing"))?
+                    .iter()
+                    .map(|entry| {
+                        let dims = entry
+                            .as_arr()
+                            .and_then(|pair| pair.get(1))
+                            .and_then(|d| d.as_arr())
+                            .ok_or_else(|| anyhow!("{name}.{key} malformed"))?;
+                        dims.iter()
+                            .map(|d| {
+                                d.as_i64()
+                                    .map(|v| v as usize)
+                                    .ok_or_else(|| anyhow!("bad dim"))
+                            })
+                            .collect()
+                    })
+                    .collect()
+            };
+            artifacts.push(ArtifactMeta {
+                name: name.to_string(),
+                file: dir.join(
+                    a.get("file")
+                        .and_then(|f| f.as_str())
+                        .ok_or_else(|| anyhow!("{name}.file missing"))?,
+                ),
+                arg_names: a
+                    .get("arg_names")
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| anyhow!("{name}.arg_names missing"))?
+                    .iter()
+                    .map(|s| s.as_str().unwrap_or_default().to_string())
+                    .collect(),
+                inputs: shapes("inputs")?,
+                outputs: shapes("outputs")?,
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), profile, artifacts })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow!("artifact {name} not in manifest"))
+    }
+
+    /// Default artifact directory: `$TLV_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("TLV_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| "artifacts".into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_handwritten_manifest() {
+        let dir = std::env::temp_dir().join(format!("tlv_manifest_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"profile":{"block":4,"semantics":2,"max_neighbors":3,"in_dim":8,"hidden":8},
+                "artifacts":{"fp_block":{"file":"fp.hlo.txt","arg_names":["x","w"],
+                "inputs":[["f32",[4,8]],["f32",[8,8]]],"outputs":[["f32",[4,8]]]}}}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.profile.block, 4);
+        let a = m.artifact("fp_block").unwrap();
+        assert_eq!(a.arg_names, vec!["x", "w"]);
+        assert_eq!(a.inputs, vec![vec![4, 8], vec![8, 8]]);
+        assert!(m.artifact("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,177 @@
+//! Block executor: drives the AOT artifacts over a graph.
+//!
+//! Mirrors the accelerator's stage structure on the serving path:
+//!
+//! 1. **FP pass** — every vertex projected once through `fp_block`
+//!    (per-vertex-type weights, raw dim capped to the profile's `in_dim`
+//!    via the hashing trick, zero-padded to the block geometry).
+//! 2. **NA+SF blocks** — `{model}_block` computes final embeddings for B
+//!    targets at a time from gathered projected features, with neighbors
+//!    padded/truncated to K per semantic (truncation = uniform first-K
+//!    neighbor sampling, standard for serving; tests use graphs with
+//!    degree ≤ K where the result is exact vs the CPU reference).
+//!
+//! Python never runs here: parameters are regenerated in-process via the
+//! shared deterministic hash (`engine::functional::det_f32`).
+
+use super::artifacts::Manifest;
+use super::pjrt::{CompiledArtifact, PjrtRuntime};
+use crate::engine::functional::{
+    attention_vectors, fusion_weight, projection_weight, raw_feature,
+};
+use crate::engine::Matrix;
+use crate::hetgraph::{HetGraph, VId, VertexTypeId};
+use crate::model::ModelKind;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// A loaded, compiled set of artifacts ready to serve one model kind.
+pub struct BlockExecutor {
+    pub manifest: Manifest,
+    pub kind: ModelKind,
+    fp: CompiledArtifact,
+    block: CompiledArtifact,
+    /// Whether the block artifact takes a_l/a_r (XLA prunes them for
+    /// mean-aggregating models).
+    takes_attention: bool,
+}
+
+fn kind_artifact(kind: ModelKind) -> &'static str {
+    match kind {
+        ModelKind::Rgcn => "rgcn_block",
+        ModelKind::Rgat => "rgat_block",
+        ModelKind::Nars => "nars_block",
+    }
+}
+
+impl BlockExecutor {
+    /// Load + compile `fp_block` and the block artifact for `kind`.
+    pub fn load(dir: &Path, kind: ModelKind) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let rt = PjrtRuntime::cpu()?;
+        let fp_meta = manifest.artifact("fp_block")?;
+        let fp = rt.load_hlo_text("fp_block", &fp_meta.file)?;
+        let bname = kind_artifact(kind);
+        let bmeta = manifest.artifact(bname)?;
+        let takes_attention = bmeta.arg_names.iter().any(|n| n == "a_l");
+        let block = rt.load_hlo_text(bname, &bmeta.file)?;
+        Ok(BlockExecutor { manifest, kind, fp, block, takes_attention })
+    }
+
+    /// FP pass: project every vertex of the graph; returns `[N, D]`.
+    pub fn project_graph(&self, g: &HetGraph) -> Result<Matrix> {
+        let p = &self.manifest.profile;
+        let (b, din, d) = (p.block, p.in_dim, p.hidden);
+        let mut out = Matrix::zeros(g.num_vertices(), d);
+
+        for (ti, tspec) in g.vertex_types.iter().enumerate() {
+            // Weights padded to [din, d]: rows beyond the capped raw dim
+            // are zero, so padding is exact.
+            let cap = (tspec.feat_dim as usize).min(din);
+            let wt = projection_weight(ti, cap, d);
+            let mut w = vec![0.0f32; din * d];
+            for i in 0..cap {
+                w[i * d..(i + 1) * d].copy_from_slice(wt.row(i));
+            }
+
+            let range = g.type_range(VertexTypeId(ti as u16));
+            let vids: Vec<u32> = range.collect();
+            for chunk in vids.chunks(b) {
+                let mut x = vec![0.0f32; b * din];
+                for (row, &vid) in chunk.iter().enumerate() {
+                    let feat = raw_feature(vid, cap);
+                    x[row * din..row * din + cap].copy_from_slice(&feat);
+                }
+                let y = self
+                    .fp
+                    .run_f32(&[(&x, &[b, din]), (&w, &[din, d])])
+                    .context("fp_block execute")?;
+                for (row, &vid) in chunk.iter().enumerate() {
+                    out.row_mut(vid as usize).copy_from_slice(&y[row * d..(row + 1) * d]);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// NA+SF for up to `profile.block` targets. `projected` is the FP
+    /// output for the whole graph. Returns `[targets.len(), D]`.
+    pub fn embed_block(
+        &self,
+        g: &HetGraph,
+        projected: &Matrix,
+        targets: &[VId],
+    ) -> Result<Matrix> {
+        let p = &self.manifest.profile;
+        let (b, s, k, d) = (p.block, p.semantics, p.max_neighbors, p.hidden);
+        if targets.len() > b {
+            bail!("block of {} exceeds profile B={}", targets.len(), b);
+        }
+        if g.num_semantics() > s {
+            bail!("graph has {} semantics, profile supports {}", g.num_semantics(), s);
+        }
+
+        let mut h_tgt = vec![0.0f32; b * d];
+        let mut h_nbr = vec![0.0f32; b * s * k * d];
+        let mut mask = vec![0.0f32; b * s * k];
+        for (row, &tv) in targets.iter().enumerate() {
+            h_tgt[row * d..(row + 1) * d].copy_from_slice(projected.row(tv.idx()));
+            for (si, csr) in g.csrs.iter().enumerate() {
+                let ns = csr.neighbors(tv);
+                for (ki, &u) in ns.iter().take(k).enumerate() {
+                    let off = ((row * s + si) * k + ki) * d;
+                    h_nbr[off..off + d].copy_from_slice(projected.row(u.idx()));
+                    mask[(row * s + si) * k + ki] = 1.0;
+                }
+            }
+        }
+
+        let mut a_l = vec![0.0f32; s * d];
+        let mut a_r = vec![0.0f32; s * d];
+        let mut betas = vec![0.0f32; s];
+        for si in 0..g.num_semantics() {
+            let (al, ar) = attention_vectors(si, d);
+            a_l[si * d..(si + 1) * d].copy_from_slice(&al);
+            a_r[si * d..(si + 1) * d].copy_from_slice(&ar);
+            betas[si] = fusion_weight(si);
+        }
+
+        let out = if self.takes_attention {
+            self.block.run_f32(&[
+                (&h_tgt, &[b, d]),
+                (&h_nbr, &[b, s, k, d]),
+                (&mask, &[b, s, k]),
+                (&a_l, &[s, d]),
+                (&a_r, &[s, d]),
+                (&betas, &[s]),
+            ])?
+        } else {
+            self.block.run_f32(&[
+                (&h_tgt, &[b, d]),
+                (&h_nbr, &[b, s, k, d]),
+                (&mask, &[b, s, k]),
+                (&betas, &[s]),
+            ])?
+        };
+
+        let mut m = Matrix::zeros(targets.len(), d);
+        for row in 0..targets.len() {
+            m.row_mut(row).copy_from_slice(&out[row * d..(row + 1) * d]);
+        }
+        Ok(m)
+    }
+
+    /// Embed an arbitrary target list, block by block.
+    pub fn embed_all(&self, g: &HetGraph, projected: &Matrix, targets: &[VId]) -> Result<Matrix> {
+        let d = self.manifest.profile.hidden;
+        let mut out = Matrix::zeros(targets.len(), d);
+        let b = self.manifest.profile.block;
+        for (ci, chunk) in targets.chunks(b).enumerate() {
+            let m = self.embed_block(g, projected, chunk)?;
+            for r in 0..chunk.len() {
+                out.row_mut(ci * b + r).copy_from_slice(m.row(r));
+            }
+        }
+        Ok(out)
+    }
+}

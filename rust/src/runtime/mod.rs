@@ -1,0 +1,11 @@
+//! Runtime layer: PJRT client wrapper, artifact manifest, and the block
+//! executor that serves AOT-compiled JAX/Pallas numerics from Rust with
+//! Python strictly out of the request path.
+
+pub mod artifacts;
+pub mod executor;
+pub mod pjrt;
+
+pub use artifacts::{ArtifactMeta, Manifest, Profile};
+pub use executor::BlockExecutor;
+pub use pjrt::{CompiledArtifact, PjrtRuntime};

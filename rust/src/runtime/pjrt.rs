@@ -1,0 +1,75 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them on the CPU
+//! client via the `xla` crate (PJRT C API).
+//!
+//! This is the only place the request path touches XLA — Python never
+//! runs at serving time. Pattern follows /opt/xla-example/load_hlo/:
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`, with `return_tuple=True` artifacts
+//! unwrapped via `to_tuple1`.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A compiled, ready-to-execute artifact.
+pub struct CompiledArtifact {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Thin wrapper over the PJRT CPU client.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(PjrtRuntime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO text file and compile it.
+    pub fn load_hlo_text(&self, name: &str, path: &Path) -> Result<CompiledArtifact> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compile {name}"))?;
+        Ok(CompiledArtifact { name: name.to_string(), exe })
+    }
+}
+
+impl CompiledArtifact {
+    /// Execute with f32 tensors: `(data, dims)` per input, single f32
+    /// tensor out (our artifacts all return 1-tuples of one array).
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<f32>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                let lit = xla::Literal::vec1(data);
+                lit.reshape(&dims_i64).context("reshape input literal")
+            })
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("execute {}", self.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetch result")?
+            .to_tuple1()
+            .context("unwrap 1-tuple")?;
+        out.to_vec::<f32>().context("result to vec")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT round-trip tests live in rust/tests/runtime_roundtrip.rs (they
+    // need the artifacts built by `make artifacts`).
+}

@@ -1,0 +1,252 @@
+//! Feature caches (paper §IV-B1): "lightweight cache-like buffers, indexed
+//! by vertex type, vertex identifier and execution stage ID, with a
+//! first-in-first-out replacement policy". Two levels: a globally shared
+//! cache and channel-private local caches.
+
+use crate::hetgraph::VId;
+use rustc_hash::FxHashMap;
+use std::collections::VecDeque;
+
+/// Replacement policy. The paper's feature caches are FIFO ("employ a
+/// first-in-first-out replacement policy", §IV-B1); LRU is provided for
+/// the design-choice ablation in `rust/benches/ablations.rs`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Replacement {
+    #[default]
+    Fifo,
+    Lru,
+}
+
+/// One feature cache level (FIFO by default, see [`Replacement`]).
+#[derive(Debug)]
+pub struct FifoCache {
+    /// Capacity in *entries* (feature vectors).
+    capacity: usize,
+    policy: Replacement,
+    /// Eviction order as (vid, stamp) pairs; under LRU hits push a fresh
+    /// stamped copy and stale copies are skipped lazily at eviction.
+    queue: VecDeque<(VId, u64)>,
+    present: FxHashMap<VId, u64>,
+    /// Logical clock for LRU recency.
+    clock: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl FifoCache {
+    /// Build from a byte budget and a line size (one feature vector).
+    pub fn with_bytes(bytes: u64, line_bytes: u64) -> Self {
+        FifoCache::with_entries((bytes / line_bytes.max(1)) as usize)
+    }
+
+    pub fn with_entries(capacity: usize) -> Self {
+        FifoCache::with_policy(capacity, Replacement::Fifo)
+    }
+
+    pub fn with_policy(capacity: usize, policy: Replacement) -> Self {
+        FifoCache {
+            capacity,
+            policy,
+            queue: VecDeque::with_capacity(capacity.min(1 << 20)),
+            present: FxHashMap::default(),
+            clock: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.present.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.present.is_empty()
+    }
+
+    /// Probe without inserting.
+    pub fn probe(&self, v: VId) -> bool {
+        self.present.contains_key(&v)
+    }
+
+    /// Access a feature: true = hit. On miss the entry is installed,
+    /// evicting per policy (FIFO: insertion order, hits do not reorder;
+    /// LRU: least-recent, hits refresh).
+    pub fn access(&mut self, v: VId) -> bool {
+        if self.capacity == 0 {
+            self.misses += 1;
+            return false;
+        }
+        self.clock += 1;
+        let clock = self.clock;
+        if let Some(stamp) = self.present.get_mut(&v) {
+            self.hits += 1;
+            if self.policy == Replacement::Lru {
+                *stamp = clock;
+                self.queue.push_back((v, clock)); // stale copies skipped at evict
+            }
+            return true;
+        }
+        self.misses += 1;
+        self.insert_cold(v);
+        false
+    }
+
+    /// Install an entry without counting an access (e.g. prefetch).
+    pub fn insert_cold(&mut self, v: VId) {
+        if self.capacity == 0 || self.present.contains_key(&v) {
+            return;
+        }
+        self.clock += 1;
+        while self.present.len() >= self.capacity {
+            let Some((old, stamp)) = self.queue.pop_front() else { break };
+            // A queue entry is live only if it carries the vertex's current
+            // stamp; hits under LRU leave stale copies behind, skip those.
+            if self.present.get(&old) == Some(&stamp) {
+                self.present.remove(&old);
+                self.evictions += 1;
+            }
+        }
+        self.queue.push_back((v, self.clock));
+        self.present.insert(v, self.clock);
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.hits = 0;
+        self.misses = 0;
+        self.evictions = 0;
+    }
+}
+
+/// Outcome of a two-level lookup.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheOutcome {
+    LocalHit,
+    GlobalHit,
+    Miss,
+}
+
+/// Two-level hierarchy: channel-private local + shared global.
+/// On a local miss the global level is probed; on a global miss the line
+/// is installed in both levels (features are read-only during NA, so no
+/// write-back traffic).
+#[derive(Debug)]
+pub struct CacheHierarchy {
+    pub locals: Vec<FifoCache>,
+    pub global: FifoCache,
+}
+
+impl CacheHierarchy {
+    pub fn new(channels: usize, local_bytes: u64, global_bytes: u64, line_bytes: u64) -> Self {
+        CacheHierarchy {
+            locals: (0..channels).map(|_| FifoCache::with_bytes(local_bytes, line_bytes)).collect(),
+            global: FifoCache::with_bytes(global_bytes, line_bytes),
+        }
+    }
+
+    pub fn access(&mut self, channel: usize, v: VId) -> CacheOutcome {
+        if self.locals[channel].access(v) {
+            // A local hit still counts a probe-hit at the local level only.
+            return CacheOutcome::LocalHit;
+        }
+        if self.global.access(v) {
+            return CacheOutcome::GlobalHit;
+        }
+        CacheOutcome::Miss
+    }
+
+    pub fn total_hits(&self) -> u64 {
+        self.global.hits + self.locals.iter().map(|c| c.hits).sum::<u64>()
+    }
+
+    pub fn total_misses(&self) -> u64 {
+        // Only global misses reach DRAM.
+        self.global.misses
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_evicts_in_insertion_order() {
+        let mut c = FifoCache::with_entries(2);
+        assert!(!c.access(VId(1)));
+        assert!(!c.access(VId(2)));
+        assert!(c.access(VId(1))); // hit, does NOT refresh FIFO position
+        assert!(!c.access(VId(3))); // evicts 1 (oldest), not 2
+        assert!(!c.access(VId(1))); // 1 was evicted
+        assert!(c.access(VId(3)));
+        assert_eq!(c.evictions, 2);
+    }
+
+    #[test]
+    fn zero_capacity_always_misses() {
+        let mut c = FifoCache::with_entries(0);
+        assert!(!c.access(VId(1)));
+        assert!(!c.access(VId(1)));
+        assert_eq!(c.hits, 0);
+    }
+
+    #[test]
+    fn bytes_to_entries() {
+        let c = FifoCache::with_bytes(1024, 256);
+        assert_eq!(c.capacity(), 4);
+    }
+
+    #[test]
+    fn hierarchy_global_shared_across_channels() {
+        let mut h = CacheHierarchy::new(2, 256, 1024, 256); // local: 1 entry, global: 4
+        assert_eq!(h.access(0, VId(7)), CacheOutcome::Miss);
+        // Other channel: local miss but global hit.
+        assert_eq!(h.access(1, VId(7)), CacheOutcome::GlobalHit);
+        // Same channel again: local hit.
+        assert_eq!(h.access(0, VId(7)), CacheOutcome::LocalHit);
+    }
+
+    #[test]
+    fn lru_refreshes_on_hit() {
+        let mut c = FifoCache::with_policy(2, Replacement::Lru);
+        assert!(!c.access(VId(1)));
+        assert!(!c.access(VId(2)));
+        assert!(c.access(VId(1))); // refresh 1 -> LRU order is now [2, 1]
+        assert!(!c.access(VId(3))); // evicts 2 (least recent), not 1
+        assert!(c.access(VId(1)), "1 must survive (was refreshed)");
+        assert!(!c.access(VId(2)), "2 was evicted");
+        assert!(c.len() <= 2);
+    }
+
+    #[test]
+    fn lru_capacity_never_exceeded() {
+        let mut c = FifoCache::with_policy(4, Replacement::Lru);
+        for i in 0..200u32 {
+            c.access(VId(0)); // hot key keeps hitting under LRU
+            c.access(VId(1 + i % 13));
+        }
+        assert!(c.len() <= 4);
+        assert!(c.hits > 0 && c.evictions > 0);
+    }
+
+    #[test]
+    fn hit_rate() {
+        let mut c = FifoCache::with_entries(4);
+        c.access(VId(1));
+        c.access(VId(1));
+        assert!((c.hit_rate() - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,13 @@
+//! Cycle-level simulator of the TLV-HGNN accelerator: reconfigurable PEs,
+//! two-level FIFO feature caches, an HBM (Ramulator-lite) DRAM model, and
+//! the whole-accelerator orchestration with the four ablation modes.
+
+pub mod accel;
+pub mod cache;
+pub mod dram;
+pub mod rpe;
+
+pub use accel::{AccelConfig, ExecMode, SimEvents, SimResult, Simulator};
+pub use cache::{CacheHierarchy, CacheOutcome, FifoCache, Replacement};
+pub use dram::{DramStats, Hbm, HbmConfig};
+pub use rpe::{RpeArray, RpeConfig, RpeCost, RpeMode};

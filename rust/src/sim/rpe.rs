@@ -1,0 +1,204 @@
+//! Reconfigurable Processing Element model (paper §IV-B2, Fig. 4).
+//!
+//! Each RPE is a reduction tree whose first level is multiply-or-accumulate
+//! (MOA) units and whose upper levels are adders. Two modes:
+//!
+//! * **Linear transformation mode** — matmul for FP and attention: operand
+//!   A held in a register (reusing it across B columns), MOAs multiply,
+//!   tree reduces — one dot-product lane per tree.
+//! * **Aggregation mode** — element-wise weighted reduction over neighbor
+//!   feature vectors, vectors mapped pairwise onto MOAs; odd vector folded
+//!   back with a 3-cycle feedback delay.
+//!
+//! The model exposes per-workload cycle counts and op counts. It is the
+//! unit the channel model composes; peak numbers are sanity-checked
+//! against Table II (15.36 TFLOPS across 2048 RPEs @ 1 GHz).
+
+/// Geometry of one RPE.
+#[derive(Debug, Clone)]
+pub struct RpeConfig {
+    /// MOA units in the first tree level.
+    pub moa_units: u32,
+    /// Pipeline fill latency (tree depth + register stage).
+    pub pipeline_depth: u32,
+    /// Cycles to switch mode (drains the tree, §IV-B2 reconfiguration).
+    pub reconfig_cycles: u32,
+}
+
+impl Default for RpeConfig {
+    fn default() -> Self {
+        // 4 MOAs -> tree depth log2(4)=2 adders + MOA stage + output reg.
+        RpeConfig { moa_units: 4, pipeline_depth: 4, reconfig_cycles: 2 }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RpeMode {
+    Linear,
+    Aggregation,
+}
+
+/// Cycle/op cost of one workload mapped to one RPE.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RpeCost {
+    pub cycles: u64,
+    pub mac_ops: u64,
+    pub add_ops: u64,
+}
+
+impl RpeConfig {
+    /// FLOPs/cycle an RPE sustains at steady state: each MOA does one MAC
+    /// (2 FLOPs) per cycle; tree adders contribute to the same reduction
+    /// (counted inside the MAC result, not extra FLOPs).
+    pub fn flops_per_cycle(&self) -> u64 {
+        self.moa_units as u64 * 2
+    }
+
+    /// Linear mode: one output element of `A[1,k] @ B[k,1]` needs
+    /// ceil(k / moa_units) waves through the tree.
+    /// A full `[1,k] x [k,n]` row-times-matrix keeps A resident in the
+    /// operand register (paper: "hold the operand from matrix A constant").
+    pub fn linear_row_cost(&self, k: u32, n: u32) -> RpeCost {
+        let waves = (k as u64).div_ceil(self.moa_units as u64);
+        RpeCost {
+            cycles: waves * n as u64 + self.pipeline_depth as u64,
+            mac_ops: k as u64 * n as u64,
+            add_ops: (self.moa_units as u64 - 1) * waves * n as u64,
+        }
+    }
+
+    /// Aggregation mode: reduce `k` vectors of `dim` elements into one.
+    /// Vectors stream pairwise through the MOAs (moa_units vectors per
+    /// wave); an odd leftover folds back through the 3-cycle feedback path
+    /// (paper Fig. 4b). Element-wise over `dim` lanes sequentially scaled
+    /// by the vector width the tree covers per cycle.
+    pub fn aggregate_cost(&self, k: u32, dim: u32) -> RpeCost {
+        if k == 0 {
+            return RpeCost::default();
+        }
+        // Reduction waves over vectors: each wave folds moa_units vectors
+        // into moa_units/2... modeled as a tree: ceil(log2(k)) passes but
+        // throughput-limited by moa_units vector-pairs per pass.
+        let mut remaining = k as u64;
+        let mut vector_waves = 0u64;
+        while remaining > 1 {
+            let pairs = remaining / 2;
+            let waves = pairs.div_ceil(self.moa_units as u64).max(1);
+            vector_waves += waves;
+            remaining = pairs + (remaining % 2);
+            if remaining % 2 == 1 && remaining > 1 {
+                vector_waves += 3; // feedback delay for the odd vector
+                // odd vector folds into the next wave
+            }
+        }
+        let per_element_cycles = vector_waves.max(1);
+        RpeCost {
+            cycles: per_element_cycles * dim as u64 / self.moa_units as u64
+                + self.pipeline_depth as u64,
+            mac_ops: k as u64 * dim as u64, // one weighted MAC per element
+            add_ops: (k as u64 - 1) * dim as u64,
+        }
+    }
+
+    /// Mode-switch cost.
+    pub fn reconfigure(&self) -> u64 {
+        self.reconfig_cycles as u64
+    }
+}
+
+/// A bank of RPEs (one channel's Computing Module).
+#[derive(Debug, Clone)]
+pub struct RpeArray {
+    pub cfg: RpeConfig,
+    pub count: u32,
+    pub mode: RpeMode,
+    pub mode_switches: u64,
+}
+
+impl RpeArray {
+    pub fn new(cfg: RpeConfig, count: u32) -> Self {
+        RpeArray { cfg, count, mode: RpeMode::Linear, mode_switches: 0 }
+    }
+
+    /// Peak FLOPs/cycle for the array.
+    pub fn peak_flops_per_cycle(&self) -> u64 {
+        self.count as u64 * self.cfg.flops_per_cycle()
+    }
+
+    /// Switch all RPEs to `mode`; returns stall cycles (0 if already there).
+    pub fn set_mode(&mut self, mode: RpeMode) -> u64 {
+        if self.mode == mode {
+            0
+        } else {
+            self.mode = mode;
+            self.mode_switches += 1;
+            self.cfg.reconfigure()
+        }
+    }
+
+    /// Cycles to execute `total_flops` of perfectly parallel work across
+    /// the array (throughput bound; workload-shape effects are captured by
+    /// the per-workload costs above).
+    pub fn throughput_cycles(&self, total_flops: u64) -> u64 {
+        total_flops.div_ceil(self.peak_flops_per_cycle().max(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_matches_table2() {
+        // Table II: 2048 RPEs at 1 GHz -> 15.36 TFLOPS ~= 16.4k flops/cycle.
+        let arr = RpeArray::new(RpeConfig::default(), 2048);
+        let peak = arr.peak_flops_per_cycle();
+        // 2048 * 4 MOAs * 2 = 16384 flops/cycle = 16.38 TFLOPS @ 1 GHz;
+        // the paper derates to 15.36 for control overhead. Within 10%:
+        assert!((peak as f64 - 15_360.0).abs() / 15_360.0 < 0.10, "peak={peak}");
+    }
+
+    #[test]
+    fn linear_cost_scales_with_k_and_n() {
+        let cfg = RpeConfig::default();
+        let small = cfg.linear_row_cost(64, 8);
+        let big = cfg.linear_row_cost(128, 8);
+        assert!(big.cycles > small.cycles);
+        assert_eq!(big.mac_ops, 128 * 8);
+    }
+
+    #[test]
+    fn aggregate_zero_neighbors_is_free() {
+        let cfg = RpeConfig::default();
+        assert_eq!(cfg.aggregate_cost(0, 64), RpeCost::default());
+    }
+
+    #[test]
+    fn aggregate_cost_monotone_in_k() {
+        let cfg = RpeConfig::default();
+        let mut last = 0;
+        for k in [1u32, 2, 4, 9, 17, 64] {
+            let c = cfg.aggregate_cost(k, 64);
+            assert!(c.cycles >= last, "k={k}");
+            last = c.cycles;
+            assert_eq!(c.mac_ops, k as u64 * 64);
+        }
+    }
+
+    #[test]
+    fn mode_switch_counted_once() {
+        let mut arr = RpeArray::new(RpeConfig::default(), 16);
+        assert_eq!(arr.set_mode(RpeMode::Linear), 0); // already linear
+        assert!(arr.set_mode(RpeMode::Aggregation) > 0);
+        assert_eq!(arr.set_mode(RpeMode::Aggregation), 0);
+        assert_eq!(arr.mode_switches, 1);
+    }
+
+    #[test]
+    fn throughput_cycles_floor() {
+        let arr = RpeArray::new(RpeConfig::default(), 512);
+        // 512 RPEs * 8 flops/cycle = 4096 flops/cycle.
+        assert_eq!(arr.throughput_cycles(4096 * 10), 10);
+        assert_eq!(arr.throughput_cycles(1), 1);
+    }
+}

@@ -1,0 +1,90 @@
+//! Micro-benchmark harness (criterion is not vendored offline).
+//!
+//! Provides warmup + repeated timed runs with mean/median/stddev, printed
+//! in a criterion-like format. Benches in `rust/benches/` use this to
+//! report both wall-clock performance of the simulator hot paths and the
+//! paper-metric tables.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchStats {
+    pub fn print(&self) {
+        println!(
+            "{:<44} time: [{:>10?} {:>10?} {:>10?}]  (min {:?}, max {:?}, n={})",
+            self.name, self.min, self.median, self.max, self.min, self.max, self.iters
+        );
+    }
+}
+
+/// Run `f` with warmup then measure `iters` runs.
+pub fn bench<R>(name: &str, iters: usize, mut f: impl FnMut() -> R) -> BenchStats {
+    assert!(iters >= 1);
+    // Warmup: one run (workloads here are seconds-scale at most).
+    let _ = black_box(f());
+    let mut times: Vec<Duration> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        let r = f();
+        times.push(t0.elapsed());
+        black_box(r);
+    }
+    times.sort();
+    let total: Duration = times.iter().sum();
+    let mean = total / iters as u32;
+    let median = times[iters / 2];
+    let mean_ns = mean.as_nanos() as f64;
+    let var = times
+        .iter()
+        .map(|t| {
+            let d = t.as_nanos() as f64 - mean_ns;
+            d * d
+        })
+        .sum::<f64>()
+        / iters as f64;
+    let stddev = Duration::from_nanos(var.sqrt() as u64);
+    BenchStats {
+        name: name.to_string(),
+        iters,
+        mean,
+        median,
+        stddev,
+        min: times[0],
+        max: *times.last().unwrap(),
+    }
+}
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let s = bench("spin", 3, || {
+            let mut acc = 0u64;
+            for i in 0..10_000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert_eq!(s.iters, 3);
+        assert!(s.min <= s.median && s.median <= s.max);
+    }
+}

@@ -1,0 +1,11 @@
+//! In-repo utilities: deterministic RNG, text tables, tiny JSON writer,
+//! and a micro-benchmark harness (the environment vendors no general-
+//! purpose crates, so these substrates are built from scratch).
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod table;
+
+pub use rng::SmallRng;

@@ -1,0 +1,104 @@
+//! Mini property-testing harness (proptest is not vendored offline).
+//!
+//! `check(name, cases, f)` runs `f` against `cases` seeded RNGs; on panic
+//! it reports the failing seed so the case can be replayed exactly:
+//! `check_seed(name, failing_seed, f)`.
+
+use super::rng::SmallRng;
+
+/// Run a property over `cases` deterministic random cases.
+pub fn check(name: &str, cases: u64, mut f: impl FnMut(&mut SmallRng)) {
+    for seed in 0..cases {
+        let mut rng = SmallRng::seed_from_u64(0x5EED_0000 + seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property '{name}' failed at seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Replay a single seed (debugging helper).
+pub fn check_seed(name: &str, seed: u64, mut f: impl FnMut(&mut SmallRng)) {
+    let mut rng = SmallRng::seed_from_u64(0x5EED_0000 + seed);
+    eprintln!("replaying property '{name}' seed {seed}");
+    f(&mut rng);
+}
+
+/// Random generators used by property tests across the crate.
+pub mod gen {
+    use crate::hetgraph::{HetGraph, HetGraphBuilder, VId};
+    use crate::util::SmallRng;
+
+    /// A random small heterogeneous graph: 2-4 vertex types, 1-6 semantics,
+    /// random edges; always valid, with type 0 as the target type.
+    pub fn hetgraph(rng: &mut SmallRng) -> HetGraph {
+        let n_types = 2 + rng.gen_index(3);
+        let mut b = HetGraphBuilder::new("prop");
+        let mut counts = Vec::new();
+        for t in 0..n_types {
+            let count = 4 + rng.gen_range(60) as u32;
+            counts.push(count);
+            b.add_vertex_type(&format!("T{t}"), count, 8 + rng.gen_range(56) as u32);
+        }
+        let bases: Vec<u32> = {
+            let mut acc = 0;
+            counts
+                .iter()
+                .map(|c| {
+                    let base = acc;
+                    acc += c;
+                    base
+                })
+                .collect()
+        };
+        let n_sems = 1 + rng.gen_index(6);
+        let mut sems = Vec::new();
+        for s in 0..n_sems {
+            let src = rng.gen_index(n_types);
+            let sem = b.add_semantic(
+                &format!("R{s}"),
+                crate::hetgraph::VertexTypeId(src as u16),
+                crate::hetgraph::VertexTypeId(0),
+            );
+            sems.push((sem, src));
+        }
+        for &(sem, src) in &sems {
+            let edges = rng.gen_range(200) + 1;
+            for _ in 0..edges {
+                let s = bases[src] + rng.gen_range(counts[src] as u64) as u32;
+                let d = bases[0] + rng.gen_range(counts[0] as u64) as u32;
+                b.add_edge(VId(s), VId(d), sem);
+            }
+        }
+        b.set_target_type(crate::hetgraph::VertexTypeId(0));
+        b.build().expect("random graph must validate")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut n = 0;
+        check("counter", 7, |_| n += 1);
+        assert_eq!(n, 7);
+    }
+
+    #[test]
+    fn generated_graphs_validate() {
+        check("hetgraph-valid", 25, |rng| {
+            let g = gen::hetgraph(rng);
+            g.validate().unwrap();
+            assert!(g.num_semantics() >= 1);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn failures_propagate() {
+        check("always-fails", 3, |_| panic!("boom"));
+    }
+}

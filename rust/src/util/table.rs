@@ -1,0 +1,119 @@
+//! Aligned text tables for bench/report output (criterion is not vendored;
+//! our bench harness prints paper-style rows itself).
+
+/// Column-aligned table builder.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for i in 0..ncols {
+                line.push_str(&format!(" {:<w$} |", cells[i], w = widths[i]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}-|", "-".repeat(w + 2 - 1)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+}
+
+/// Format helpers shared by benches.
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn fx(x: f64) -> String {
+    format!("{x:.2}x")
+}
+
+pub fn pct(x: f64) -> String {
+    format!("{:.2}%", x * 100.0)
+}
+
+pub fn human_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    format!("{v:.2} {}", UNITS[u])
+}
+
+pub fn human_count(c: u64) -> String {
+    if c >= 1_000_000_000 {
+        format!("{:.2}G", c as f64 / 1e9)
+    } else if c >= 1_000_000 {
+        format!("{:.2}M", c as f64 / 1e6)
+    } else if c >= 1_000 {
+        format!("{:.2}K", c as f64 / 1e3)
+    } else {
+        c.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["model", "speedup"]);
+        t.row(&["RGCN".into(), "7.85x".into()]);
+        let s = t.render();
+        assert!(s.contains("| model | speedup |"));
+        assert!(s.contains("| RGCN  | 7.85x   |"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn humanize() {
+        assert_eq!(human_bytes(2048), "2.00 KB");
+        assert_eq!(human_count(1_500_000), "1.50M");
+        assert_eq!(pct(0.5), "50.00%");
+    }
+}

@@ -1,0 +1,115 @@
+//! Integration: the serving coordinator end-to-end — router + batcher +
+//! multi-channel PJRT workers — validated against the CPU reference.
+//! Skips (with a message) when artifacts are not built.
+
+use std::sync::Arc;
+use tlv_hgnn::coordinator::{Server, ServerConfig};
+use tlv_hgnn::engine::ReferenceEngine;
+use tlv_hgnn::hetgraph::{HetGraph, HetGraphBuilder, VId};
+use tlv_hgnn::model::{ModelConfig, ModelKind};
+use tlv_hgnn::runtime::Manifest;
+use tlv_hgnn::util::SmallRng;
+
+fn graph(seed: u64) -> HetGraph {
+    let mut b = HetGraphBuilder::new("e2e");
+    let p = b.add_vertex_type("P", 100, 64);
+    let a = b.add_vertex_type("A", 150, 64);
+    let s0 = b.add_semantic("AP", a, p);
+    let s1 = b.add_semantic("PP", p, p);
+    b.set_target_type(p);
+    let mut rng = SmallRng::seed_from_u64(seed);
+    for t in 0..100u32 {
+        for _ in 0..rng.gen_range(10) {
+            b.add_edge(VId(100 + rng.gen_range(150) as u32), VId(t), s0);
+        }
+        for _ in 0..rng.gen_range(4) {
+            let s = rng.gen_range(100) as u32;
+            if s != t {
+                b.add_edge(VId(s), VId(t), s1);
+            }
+        }
+    }
+    b.build().unwrap()
+}
+
+fn ready() -> bool {
+    Manifest::load(&Manifest::default_dir()).is_ok()
+}
+
+#[test]
+fn serves_correct_embeddings() {
+    if !ready() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let g = Arc::new(graph(3));
+    let server = Server::start(Arc::clone(&g), ServerConfig::new(ModelKind::Rgcn)).unwrap();
+
+    let reference = ReferenceEngine::new(&g, ModelConfig::new(ModelKind::Rgcn), 64);
+    let targets: Vec<VId> = (0..40).map(VId).collect();
+    let resp = server.submit(targets.clone()).unwrap();
+    assert_eq!(resp.embeddings.len(), targets.len());
+
+    let want = reference.embed_semantics_complete(&targets);
+    for (i, &t) in targets.iter().enumerate() {
+        let got = resp.embedding_of(t).expect("missing row");
+        let w = want.row(i);
+        let diff =
+            got.iter().zip(w).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        assert!(diff < 5e-4, "target {t}: diff {diff}");
+    }
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_requests_all_complete() {
+    if !ready() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let g = Arc::new(graph(5));
+    let server =
+        Arc::new(Server::start(Arc::clone(&g), ServerConfig::new(ModelKind::Rgcn)).unwrap());
+
+    let mut handles = Vec::new();
+    for c in 0..4u32 {
+        let server = Arc::clone(&server);
+        handles.push(std::thread::spawn(move || {
+            let targets: Vec<VId> = (c * 20..c * 20 + 20).map(VId).collect();
+            let resp = server.submit(targets.clone()).unwrap();
+            assert_eq!(resp.embeddings.len(), 20);
+            for &t in &targets {
+                assert!(resp.embedding_of(t).is_some());
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let m = &server.metrics;
+    assert_eq!(m.requests.load(std::sync::atomic::Ordering::Relaxed), 4);
+    let (p50, _, p99) = m.latency_percentiles();
+    assert!(p50 > 0 && p99 >= p50);
+}
+
+#[test]
+fn round_robin_routing_also_correct() {
+    if !ready() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let g = Arc::new(graph(7));
+    let cfg = ServerConfig { overlap_routing: false, ..ServerConfig::new(ModelKind::Nars) };
+    let server = Server::start(Arc::clone(&g), cfg).unwrap();
+    let reference = ReferenceEngine::new(&g, ModelConfig::new(ModelKind::Nars), 64);
+    let targets: Vec<VId> = (50..80).map(VId).collect();
+    let resp = server.submit(targets.clone()).unwrap();
+    let want = reference.embed_semantics_complete(&targets);
+    for (i, &t) in targets.iter().enumerate() {
+        let got = resp.embedding_of(t).unwrap();
+        let diff =
+            got.iter().zip(want.row(i)).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        assert!(diff < 5e-4, "target {t}: diff {diff}");
+    }
+    server.shutdown();
+}

@@ -1,0 +1,110 @@
+//! Integration: the paper's core correctness premise — the
+//! semantics-complete paradigm computes exactly what the per-semantic
+//! paradigm computes, for every model, on every dataset, under any target
+//! permutation — plus the memory/access claims of §III/IV at the trace
+//! level across all five datasets.
+
+use tlv_hgnn::datasets::Dataset;
+use tlv_hgnn::engine::{
+    walk_per_semantic, walk_semantics_complete, AccessCounter, MemoryTracker, ReferenceEngine,
+};
+use tlv_hgnn::grouping::{default_n_max, group_overlap_driven, OverlapHypergraph};
+use tlv_hgnn::model::{ModelConfig, ModelKind};
+use tlv_hgnn::util::SmallRng;
+
+#[test]
+fn paradigms_bitwise_equal_all_models_all_small_datasets() {
+    for d in Dataset::SMALL {
+        let g = d.load(0.03);
+        for kind in ModelKind::ALL {
+            let e = ReferenceEngine::new(&g, ModelConfig::new(kind), 24);
+            let order = g.target_vertices();
+            let a = e.embed_per_semantic(&order);
+            let b = e.embed_semantics_complete(&order);
+            assert_eq!(
+                a.max_abs_diff(&b),
+                0.0,
+                "{} {:?}: paradigms diverge",
+                d.name(),
+                kind
+            );
+        }
+    }
+}
+
+#[test]
+fn paradigms_equal_under_random_permutations() {
+    let g = Dataset::Imdb.load(0.03);
+    let e = ReferenceEngine::new(&g, ModelConfig::new(ModelKind::Rgat), 24);
+    let mut order = g.target_vertices();
+    let mut rng = SmallRng::seed_from_u64(99);
+    for trial in 0..3 {
+        rng.shuffle(&mut order);
+        let a = e.embed_per_semantic(&order);
+        let b = e.embed_semantics_complete(&order);
+        assert_eq!(a.max_abs_diff(&b), 0.0, "trial {trial}");
+    }
+}
+
+#[test]
+fn memory_expansion_shrinks_on_every_dataset() {
+    // Fig. 2a / Table III direction: per-semantic peak >> semantics-complete
+    // peak, across all five datasets (large ones at test scale).
+    for d in Dataset::ALL {
+        let g = d.load(d.test_scale());
+        let m = ModelConfig::new(ModelKind::Rgcn);
+        let mut ps = MemoryTracker::default();
+        walk_per_semantic(&g, &m, &mut ps);
+        let mut sc = MemoryTracker::default();
+        walk_semantics_complete(&g, &m, &g.target_vertices(), &mut sc);
+        // Exclude the (identical) final embeddings from the comparison.
+        let ps_peak = ps.peak_bytes - ps.embedding_bytes.min(ps.peak_bytes / 2);
+        assert!(
+            ps_peak > sc.peak_bytes.saturating_sub(sc.embedding_bytes) * 2,
+            "{}: ps {} vs sc {}",
+            d.name(),
+            ps.peak_bytes,
+            sc.peak_bytes
+        );
+    }
+}
+
+#[test]
+fn target_access_savings_scale_with_semantics() {
+    // The -S paradigm saves one target access per extra semantic a target
+    // appears in; datasets with more semantics save more (§V-B4 trend).
+    let mut savings = Vec::new();
+    for d in [Dataset::Imdb, Dataset::Acm, Dataset::Freebase] {
+        let g = d.load(d.test_scale());
+        let m = ModelConfig::new(ModelKind::Rgcn);
+        let mut a = AccessCounter::default();
+        walk_per_semantic(&g, &m, &mut a);
+        let mut b = AccessCounter::default();
+        walk_semantics_complete(&g, &m, &g.target_vertices(), &mut b);
+        savings.push((g.num_semantics(), (a.total - b.total) as f64 / a.total as f64));
+    }
+    // More semantics => larger relative saving (monotone over our three).
+    assert!(savings[0].0 < savings[2].0);
+    assert!(
+        savings[0].1 < savings[2].1,
+        "saving did not grow with semantics: {savings:?}"
+    );
+}
+
+#[test]
+fn grouped_order_is_a_permutation_and_equivalent() {
+    let g = Dataset::Acm.load(0.03);
+    let h = OverlapHypergraph::build(&g, 0.0);
+    let grouping = group_overlap_driven(&h, default_n_max(g.target_vertices().len(), 4), 4);
+    let order = grouping.flat_order();
+    // Numerics under the grouped order match the canonical order rows.
+    let e = ReferenceEngine::new(&g, ModelConfig::new(ModelKind::Rgcn), 24);
+    let grouped = e.embed_semantics_complete(&order);
+    let canonical_order = g.target_vertices();
+    let canonical = e.embed_semantics_complete(&canonical_order);
+    // Row for vertex v must be identical in both.
+    for (i, &v) in order.iter().enumerate() {
+        let j = canonical_order.iter().position(|&u| u == v).unwrap();
+        assert_eq!(grouped.row(i), canonical.row(j), "row mismatch for {v}");
+    }
+}

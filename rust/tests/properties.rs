@@ -1,0 +1,171 @@
+//! Property-based tests over random heterogeneous graphs (in-repo
+//! harness, `util::prop`): structural invariants of the substrate, the
+//! grouping algorithm, both paradigms, and the caches — each property runs
+//! against dozens of seeded random graphs.
+
+use rustc_hash::FxHashSet;
+use tlv_hgnn::engine::{
+    walk_per_semantic, walk_per_semantic_batched, walk_semantics_complete, AccessCounter,
+    MemoryTracker, ReferenceEngine,
+};
+use tlv_hgnn::grouping::{
+    default_n_max, group_overlap_driven, group_random, group_sequential, simulate_grouper,
+    GrouperConfig, OverlapHypergraph,
+};
+use tlv_hgnn::hetgraph::VId;
+use tlv_hgnn::model::{ModelConfig, ModelKind};
+use tlv_hgnn::sim::{FifoCache, Replacement};
+use tlv_hgnn::util::prop::{check, gen};
+
+#[test]
+fn prop_csr_roundtrip() {
+    check("csr-roundtrip", 30, |rng| {
+        let g = gen::hetgraph(rng);
+        // Every edge listed by edges() must be findable via neighbors().
+        for e in g.edges() {
+            assert!(g.neighbors(e.dst, e.semantic).contains(&e.src));
+        }
+        // Total degree equals edge count.
+        let total: usize = g.target_vertices().iter().map(|&t| g.total_degree(t)).sum();
+        assert_eq!(total, g.num_edges());
+    });
+}
+
+#[test]
+fn prop_multi_semantic_neighborhood_superset() {
+    check("nbhd-superset", 30, |rng| {
+        let g = gen::hetgraph(rng);
+        for &t in g.target_vertices().iter().take(20) {
+            let n = g.multi_semantic_neighborhood(t);
+            assert!(n.contains(&t), "self not in N(v)");
+            for csr in &g.csrs {
+                for &u in csr.neighbors(t) {
+                    assert!(n.contains(&u));
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_grouping_partitions_targets() {
+    check("grouping-partition", 20, |rng| {
+        let g = gen::hetgraph(rng);
+        let h = OverlapHypergraph::build(&g, 0.0);
+        let n_max = default_n_max(g.target_vertices().len(), 4);
+        for grouping in [
+            group_overlap_driven(&h, n_max, 4),
+            group_sequential(&g, n_max),
+            group_random(&g, n_max, 7),
+        ] {
+            let flat = grouping.flat_order();
+            assert_eq!(flat.len(), g.target_vertices().len());
+            let set: FxHashSet<VId> = flat.iter().copied().collect();
+            assert_eq!(set.len(), flat.len(), "duplicate targets in grouping");
+            for gr in &grouping.groups {
+                assert!(gr.len() <= n_max);
+                assert!(!gr.is_empty());
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_grouper_hw_matches_sw_group_count() {
+    check("grouper-hw-sw", 15, |rng| {
+        let g = gen::hetgraph(rng);
+        let h = OverlapHypergraph::build(&g, 0.0);
+        let n_max = default_n_max(g.target_vertices().len(), 4).max(2);
+        let sw = group_overlap_driven(&h, n_max, 4);
+        let hw = simulate_grouper(&h, n_max, &GrouperConfig::default());
+        assert_eq!(hw.groups_emitted as usize, sw.groups.len());
+        assert_eq!(hw.emit_cycle.len(), sw.groups.len());
+    });
+}
+
+#[test]
+fn prop_paradigm_equivalence_random_graphs() {
+    check("paradigm-equal", 10, |rng| {
+        let g = gen::hetgraph(rng);
+        let kind = [ModelKind::Rgcn, ModelKind::Rgat, ModelKind::Nars][rng.gen_index(3)];
+        let e = ReferenceEngine::new(&g, ModelConfig::new(kind), 16);
+        let order = g.target_vertices();
+        let a = e.embed_per_semantic(&order);
+        let b = e.embed_semantics_complete(&order);
+        assert_eq!(a.max_abs_diff(&b), 0.0, "{kind:?}");
+    });
+}
+
+#[test]
+fn prop_semantics_complete_never_more_accesses() {
+    check("sc-fewer-accesses", 20, |rng| {
+        let g = gen::hetgraph(rng);
+        let m = ModelConfig::new(ModelKind::Rgcn);
+        let mut ps = AccessCounter::default();
+        walk_per_semantic(&g, &m, &mut ps);
+        let mut sc = AccessCounter::default();
+        walk_semantics_complete(&g, &m, &g.target_vertices(), &mut sc);
+        // SC touches isolated targets once (PS skips them), but saves one
+        // target access per extra semantic; net must never exceed PS+isolated.
+        let isolated =
+            g.target_vertices().iter().filter(|&&t| g.total_degree(t) == 0).count() as u64;
+        assert!(sc.total <= ps.total + isolated);
+    });
+}
+
+#[test]
+fn prop_batchwise_caps_live_memory() {
+    check("batchwise-caps", 15, |rng| {
+        let g = gen::hetgraph(rng);
+        let m = ModelConfig::new(ModelKind::Rgcn);
+        let batch = 1 + rng.gen_index(16);
+        let mut full = MemoryTracker::default();
+        walk_per_semantic(&g, &m, &mut full);
+        let mut batched = MemoryTracker::default();
+        walk_per_semantic_batched(&g, &m, batch, &mut batched);
+        let live = |t: &MemoryTracker| t.peak_bytes - t.embedding_bytes;
+        assert!(live(&batched) <= live(&full));
+        assert_eq!(batched.embedding_bytes, full.embedding_bytes);
+    });
+}
+
+#[test]
+fn prop_cache_hit_rate_monotone_in_capacity() {
+    check("cache-monotone", 20, |rng| {
+        // Random access stream with skew; larger cache must never hit less.
+        let stream: Vec<VId> =
+            (0..4000).map(|_| VId((rng.gen_range(400) * rng.gen_range(3)) as u32)).collect();
+        let mut last_rate = -1.0;
+        for cap in [16usize, 64, 256, 1024] {
+            for policy in [Replacement::Fifo, Replacement::Lru] {
+                let mut c = FifoCache::with_policy(cap, policy);
+                for &v in &stream {
+                    c.access(v);
+                }
+                if policy == Replacement::Fifo {
+                    assert!(
+                        c.hit_rate() >= last_rate - 1e-9,
+                        "cap {cap}: {} < {last_rate}",
+                        c.hit_rate()
+                    );
+                    last_rate = c.hit_rate();
+                }
+                assert!(c.len() <= cap);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_zipf_generator_degrees_bounded() {
+    check("generator-bounds", 15, |rng| {
+        let g = gen::hetgraph(rng);
+        for csr in &g.csrs {
+            // Strictly sorted targets, no duplicate neighbors per target.
+            for (t, ns) in csr.iter() {
+                let set: FxHashSet<VId> = ns.iter().copied().collect();
+                assert_eq!(set.len(), ns.len(), "dup neighbors for {t}");
+            }
+        }
+    });
+}

@@ -1,0 +1,101 @@
+//! Integration: the AOT JAX/Pallas artifacts executed through PJRT must
+//! reproduce the Rust CPU reference engine — the cross-layer correctness
+//! proof (L1 Pallas == L2 JAX == L3 reference numerics).
+//!
+//! Requires `make artifacts` (skips with a message otherwise, so plain
+//! `cargo test` works before the Python side has run).
+
+use tlv_hgnn::engine::ReferenceEngine;
+use tlv_hgnn::hetgraph::{HetGraphBuilder, VId};
+use tlv_hgnn::model::{ModelConfig, ModelKind};
+use tlv_hgnn::runtime::{BlockExecutor, Manifest};
+use tlv_hgnn::util::SmallRng;
+
+/// A graph whose degrees fit the artifact profile (deg <= K, S <= 6), so
+/// PJRT block results are *exactly* comparable to the full reference.
+fn profile_friendly_graph(seed: u64) -> tlv_hgnn::hetgraph::HetGraph {
+    let mut b = HetGraphBuilder::new("rt");
+    let p = b.add_vertex_type("P", 40, 64); // target type, raw dim = profile in_dim
+    let a = b.add_vertex_type("A", 60, 48); // capped below in_dim (pad path)
+    let s0 = b.add_semantic("AP", a, p);
+    let s1 = b.add_semantic("PP", p, p);
+    b.set_target_type(p);
+    let mut rng = SmallRng::seed_from_u64(seed);
+    // Degrees in [0, 8] — under K=16.
+    for t in 0..40u32 {
+        let deg_a = rng.gen_range(9) as usize;
+        for _ in 0..deg_a {
+            b.add_edge(VId(40 + rng.gen_range(60) as u32), VId(t), s0);
+        }
+        let deg_p = rng.gen_range(5) as usize;
+        for _ in 0..deg_p {
+            let src = rng.gen_range(40) as u32;
+            if src != t {
+                b.add_edge(VId(src), VId(t), s1);
+            }
+        }
+    }
+    b.build().unwrap()
+}
+
+fn artifacts_ready() -> bool {
+    Manifest::load(&Manifest::default_dir()).is_ok()
+}
+
+fn run_model(kind: ModelKind, tol: f32) {
+    if !artifacts_ready() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let g = profile_friendly_graph(11);
+    let exec = BlockExecutor::load(&Manifest::default_dir(), kind).expect("load artifacts");
+    let projected = exec.project_graph(&g).expect("fp pass");
+
+    let m = ModelConfig::new(kind);
+    let reference = ReferenceEngine::new(&g, m, exec.manifest.profile.in_dim);
+
+    // FP cross-check: PJRT projection vs CPU projection.
+    let diff_fp = projected.max_abs_diff(&reference.projected);
+    assert!(diff_fp < tol, "{kind:?} FP diff {diff_fp}");
+
+    // Full block path vs reference semantics-complete embeddings.
+    let targets = g.target_vertices();
+    let got = exec.embed_all(&g, &projected, &targets).expect("embed");
+    let want = reference.embed_semantics_complete(&targets);
+    let diff = got.max_abs_diff(&want);
+    assert!(diff < tol, "{kind:?} embedding diff {diff}");
+}
+
+#[test]
+fn rgcn_matches_reference() {
+    run_model(ModelKind::Rgcn, 2e-4);
+}
+
+#[test]
+fn nars_matches_reference() {
+    run_model(ModelKind::Nars, 2e-4);
+}
+
+#[test]
+fn rgat_matches_reference() {
+    // Attention path has tanh + extra dots; slightly looser tolerance.
+    run_model(ModelKind::Rgat, 5e-4);
+}
+
+#[test]
+fn block_padding_is_exact() {
+    if !artifacts_ready() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    // A block smaller than B must give identical rows to a full pass.
+    let g = profile_friendly_graph(13);
+    let exec = BlockExecutor::load(&Manifest::default_dir(), ModelKind::Rgcn).unwrap();
+    let projected = exec.project_graph(&g).unwrap();
+    let targets = g.target_vertices();
+    let all = exec.embed_all(&g, &projected, &targets).unwrap();
+    let first3 = exec.embed_block(&g, &projected, &targets[..3]).unwrap();
+    for r in 0..3 {
+        assert_eq!(first3.row(r), all.row(r), "row {r} differs under padding");
+    }
+}

@@ -1,0 +1,153 @@
+//! Integration: simulator vs baselines — the cross-platform relationships
+//! the paper's evaluation rests on (Fig. 7, Table III, Fig. 9), checked at
+//! test scale with a proportionally scaled feature cache.
+
+use tlv_hgnn::baselines::{run_a100, run_hihgnn, GpuConfig, HiHgnnConfig};
+use tlv_hgnn::datasets::Dataset;
+use tlv_hgnn::energy::{chip_area_mm2, chip_power_w, gpu_energy, tlv_energy, EnergyTable};
+use tlv_hgnn::model::{ModelConfig, ModelKind};
+use tlv_hgnn::sim::{AccelConfig, ExecMode, Simulator};
+
+fn scaled_cfg() -> AccelConfig {
+    AccelConfig {
+        local_cache_bytes: 8 * 1024,
+        global_cache_bytes: 48 * 1024,
+        ..AccelConfig::tlv_default()
+    }
+}
+
+/// HiHGNN with its NA buffer scaled by the same factor as `scaled_cfg`
+/// scales the 6 MB feature cache (fair capacity ratio at test scale:
+/// 14.52 MB : 6 MB ≈ 194 KB : 80 KB).
+fn scaled_hihgnn() -> HiHgnnConfig {
+    HiHgnnConfig { na_buf_bytes: 194 * 1024, ..HiHgnnConfig::paper() }
+}
+
+/// A100 with its 40 MB L2 scaled by the same 1/75 capacity factor, so the
+/// test-scale graphs stress it the way full AM stresses the real L2.
+fn scaled_gpu() -> GpuConfig {
+    GpuConfig { l2_bytes: 545 * 1024, ..GpuConfig::a100_80g() }
+}
+
+#[test]
+fn ablation_ordering_holds_on_am() {
+    // Fig. 9: cycles(-B) > cycles(-S) > cycles(-P) > cycles(-O) and DRAM
+    // accesses -O < -P, -S < -B, at AM test scale.
+    let g = Dataset::Am.load(Dataset::Am.test_scale());
+    let m = ModelConfig::new(ModelKind::Rgcn);
+    let sim = Simulator::new(scaled_cfg(), &g, m);
+    let b = sim.run(ExecMode::PerSemanticBaseline);
+    let s = sim.run(ExecMode::SemanticsComplete);
+    let p = sim.run(ExecMode::RandomGrouped);
+    let o = sim.run(ExecMode::OverlapGrouped);
+
+    assert!(s.cycles < b.cycles, "-S {} !< -B {}", s.cycles, b.cycles);
+    assert!(p.cycles < s.cycles, "-P {} !< -S {}", p.cycles, s.cycles);
+    assert!(o.cycles < p.cycles, "-O {} !< -P {}", o.cycles, p.cycles);
+    assert!(s.dram.accesses < b.dram.accesses);
+    assert!(o.dram.accesses < p.dram.accesses);
+}
+
+#[test]
+fn tlv_beats_baselines_on_large_graphs() {
+    // Fig. 7 direction on a large dataset: TLV-HGNN < HiHGNN < A100 time;
+    // DRAM bytes likewise ordered.
+    let g = Dataset::Am.load(Dataset::Am.test_scale());
+    let m = ModelConfig::new(ModelKind::Rgcn);
+    let cfg = scaled_cfg();
+    let tlv = Simulator::new(cfg.clone(), &g, m.clone()).run(ExecMode::OverlapGrouped);
+    let tlv_ms = tlv.time_ms(&cfg);
+    let hi = run_hihgnn(&g, &m, &scaled_hihgnn());
+    let gpu = run_a100(&g, &m, &scaled_gpu());
+
+    assert!(tlv_ms < hi.time_ms, "tlv {tlv_ms} !< hihgnn {}", hi.time_ms);
+    assert!(hi.time_ms < gpu.time_ms, "hihgnn {} !< a100 {}", hi.time_ms, gpu.time_ms);
+    assert!(tlv.dram.bytes < hi.dram_bytes);
+    assert!(hi.dram_bytes < gpu.dram_bytes);
+}
+
+#[test]
+fn expansion_ratio_ordering_matches_table3() {
+    // Table III: A100 > HiHGNN >> TLV-HGNN on AM, for all three models.
+    let g = Dataset::Am.load(Dataset::Am.test_scale());
+    for kind in ModelKind::ALL {
+        let m = ModelConfig::new(kind);
+        let gpu = run_a100(&g, &m, &scaled_gpu());
+        let hi = run_hihgnn(&g, &m, &scaled_hihgnn());
+        // TLV expansion: projected features overwrite raw (semantics-
+        // complete needs only projected) + per-channel live partials.
+        let cfg = scaled_cfg();
+        let tlv = Simulator::new(cfg, &g, m).run(ExecMode::OverlapGrouped);
+        let init = g.initial_footprint_bytes() as f64;
+        let proj = (g.num_vertices() as u64 * 256) as f64;
+        let tlv_ratio = (init.max(proj) + tlv.peak_partial_bytes as f64) / init;
+
+        assert!(
+            gpu.expansion_ratio > hi.expansion_ratio,
+            "{kind:?}: gpu {} !> hi {}",
+            gpu.expansion_ratio,
+            hi.expansion_ratio
+        );
+        assert!(
+            hi.expansion_ratio > tlv_ratio * 2.0,
+            "{kind:?}: hi {} not >> tlv {}",
+            hi.expansion_ratio,
+            tlv_ratio
+        );
+    }
+}
+
+#[test]
+fn energy_ordering_matches_fig8() {
+    let g = Dataset::Am.load(Dataset::Am.test_scale());
+    let m = ModelConfig::new(ModelKind::Rgcn);
+    let cfg = scaled_cfg();
+    let tlv = Simulator::new(cfg.clone(), &g, m.clone()).run(ExecMode::OverlapGrouped);
+    let et = EnergyTable::default();
+    let tlv_mj = tlv_energy(&tlv, &cfg, &m, &et).total_mj();
+    let hi = run_hihgnn(&g, &m, &scaled_hihgnn());
+    let hi_mj = tlv_hgnn::energy::hihgnn_energy(hi.time_ms, hi.dram_bytes, &et);
+    let gpu = run_a100(&g, &m, &scaled_gpu());
+    let gpu_mj = gpu_energy(gpu.time_ms, gpu.dram_bytes, &et);
+
+    assert!(tlv_mj < hi_mj, "tlv {tlv_mj} !< hi {hi_mj}");
+    assert!(hi_mj < gpu_mj, "hi {hi_mj} !< gpu {gpu_mj}");
+    // Fig. 8a headline: ~98.8% reduction vs A100 → at least 90% here.
+    assert!(tlv_mj < gpu_mj * 0.1, "tlv {tlv_mj} vs gpu {gpu_mj}");
+}
+
+#[test]
+fn table4_static_characteristics() {
+    let cfg = AccelConfig::tlv_default();
+    assert!((chip_area_mm2(&cfg) - 16.56).abs() < 0.5);
+    assert!((chip_power_w(&cfg) - 10.61).abs() < 0.4);
+    // Peak within range of Table II (15.36 TFLOPS; MOA-tree rounding gives
+    // 16.38 — the HiHGNN figure — before control derating).
+    let t = cfg.peak_tflops();
+    assert!((15.0..17.0).contains(&t), "peak {t}");
+}
+
+#[test]
+fn rgat_gains_most_vs_gpu_least_vs_hihgnn() {
+    // §V-B4: RGAT's attention redundancy favors TLV vs A100, but HiHGNN's
+    // bitmap reuse narrows the gap vs HiHGNN.
+    let g = Dataset::Acm.load(0.05);
+    let cfg = scaled_cfg();
+    let speedup = |kind: ModelKind| -> (f64, f64) {
+        let m = ModelConfig::new(kind);
+        let tlv = Simulator::new(cfg.clone(), &g, m.clone()).run(ExecMode::OverlapGrouped);
+        let tlv_ms = tlv.time_ms(&cfg);
+        let gpu = run_a100(&g, &m, &scaled_gpu());
+        let hi = run_hihgnn(&g, &m, &scaled_hihgnn());
+        (gpu.time_ms / tlv_ms, hi.time_ms / tlv_ms)
+    };
+    let (gpu_rgcn, hi_rgcn) = speedup(ModelKind::Rgcn);
+    let (gpu_rgat, hi_rgat) = speedup(ModelKind::Rgat);
+    assert!(gpu_rgat > gpu_rgcn, "vs GPU: rgat {gpu_rgat} !> rgcn {gpu_rgcn}");
+    // Bitmap reuse helps HiHGNN on RGAT → TLV's edge shrinks relative to
+    // its GPU edge.
+    assert!(
+        hi_rgat / gpu_rgat < hi_rgcn / gpu_rgcn,
+        "hihgnn bitmap reuse not reflected: {hi_rgat}/{gpu_rgat} vs {hi_rgcn}/{gpu_rgcn}"
+    );
+}
