@@ -1,59 +1,175 @@
 //! Host-side performance of the library's hot paths (the §Perf targets in
-//! EXPERIMENTS.md): simulator throughput, grouping, cache, DRAM model and
-//! trace walks. Criterion is not vendored offline; `util::bench` provides
-//! warmup + repeated timing with min/median/max.
+//! EXPERIMENTS.md): the fused vertex-major layout vs the seed per-semantic
+//! layout (trace walks and real numerics, single- and multi-thread),
+//! simulator throughput, grouping, cache and DRAM models. Criterion is not
+//! vendored offline; `util::bench` provides warmup + repeated timing with
+//! min/median/max.
+//!
+//! Writes `BENCH_hotpath.json` at the repository root so successive PRs
+//! have a perf trajectory to compare against:
+//!
+//!     cargo bench --bench hotpath
 
+use std::path::Path;
 use tlv_hgnn::datasets::Dataset;
-use tlv_hgnn::engine::{walk_per_semantic, walk_semantics_complete, AccessCounter};
+use tlv_hgnn::engine::{
+    walk_per_semantic_fused, walk_semantics_complete_fused, walk_semantics_complete_unfused,
+    AccessCounter, FusedEngine, ReferenceEngine,
+};
 use tlv_hgnn::grouping::{default_n_max, group_overlap_driven, OverlapHypergraph};
-use tlv_hgnn::hetgraph::VId;
+use tlv_hgnn::hetgraph::{FusedAdjacency, VId};
 use tlv_hgnn::model::{ModelConfig, ModelKind};
 use tlv_hgnn::sim::{AccelConfig, ExecMode, FifoCache, Hbm, HbmConfig, Simulator};
-use tlv_hgnn::util::bench::{bench, black_box};
+use tlv_hgnn::util::bench::{bench, black_box, BenchStats};
+use tlv_hgnn::util::json::Json;
+
+fn record(results: &mut Vec<Json>, s: &BenchStats, metrics: &[(&str, f64)]) {
+    s.print();
+    let mut o = Json::obj();
+    o.set("name", s.name.as_str().into());
+    o.set("iters", (s.iters as u64).into());
+    o.set("median_ns", (s.median.as_nanos() as u64).into());
+    o.set("min_ns", (s.min.as_nanos() as u64).into());
+    o.set("max_ns", (s.max.as_nanos() as u64).into());
+    for (k, v) in metrics {
+        o.set(k, (*v).into());
+    }
+    results.push(o);
+}
 
 fn main() {
     let g = Dataset::Am.load(0.05);
     let m = ModelConfig::new(ModelKind::Rgcn);
     let edges = g.num_edges() as f64;
-    println!("workload: AM@0.05 V={} E={} S={}", g.num_vertices(), g.num_edges(), g.num_semantics());
+    let order = g.target_vertices();
+    let targets = order.len() as f64;
+    println!(
+        "workload: AM@0.05 V={} E={} S={} T={}",
+        g.num_vertices(),
+        g.num_edges(),
+        g.num_semantics(),
+        order.len()
+    );
 
-    let s = bench("walk_semantics_complete (trace only)", 10, || {
+    let mut results: Vec<Json> = Vec::new();
+    let evs = |s: &BenchStats| edges / s.median.as_secs_f64() / 1e6;
+
+    // ---- Fused layout: build cost + trace walks, fused vs seed ----
+    let build = bench("fused adjacency build (transpose)", 5, || {
+        black_box(FusedAdjacency::build(&g)).num_entries()
+    });
+    record(&mut results, &build, &[("edges_per_s_m", evs(&build))]);
+    let fused = FusedAdjacency::build(&g);
+
+    let seed_walk = bench("walk semantics-complete, seed layout (trace)", 10, || {
         let mut c = AccessCounter::default();
-        walk_semantics_complete(&g, &m, &g.target_vertices(), &mut c);
+        walk_semantics_complete_unfused(&g, &m, &order, &mut c);
         c.total
     });
-    s.print();
-    println!("  -> {:.1} M edge-events/s", edges / s.median.as_secs_f64() / 1e6);
+    record(&mut results, &seed_walk, &[("edge_events_per_s_m", evs(&seed_walk))]);
 
-    bench("walk_per_semantic (trace only)", 10, || {
+    let fused_walk = bench("walk semantics-complete, fused layout (trace)", 10, || {
         let mut c = AccessCounter::default();
-        walk_per_semantic(&g, &m, &mut c);
+        walk_semantics_complete_fused(&fused, &m, &order, &mut c);
         c.total
-    })
-    .print();
+    });
+    record(&mut results, &fused_walk, &[("edge_events_per_s_m", evs(&fused_walk))]);
+    let walk_speedup = seed_walk.median.as_secs_f64() / fused_walk.median.as_secs_f64();
+    println!("  -> fused walk speedup vs seed: {walk_speedup:.2}x");
 
+    let ps_walk = bench("walk_per_semantic (trace only)", 10, || {
+        let mut c = AccessCounter::default();
+        walk_per_semantic_fused(&g, &fused, &m, &mut c);
+        c.total
+    });
+    record(&mut results, &ps_walk, &[("edge_events_per_s_m", evs(&ps_walk))]);
+
+    // ---- Real numerics: reference embed vs FusedEngine, 1..N threads ----
+    println!("building reference engine (FP pass over all vertices)...");
+    let eng = ReferenceEngine::new(&g, m.clone(), 64);
+    let fe = FusedEngine::with_adjacency(&eng, fused.clone());
+
+    let seed_embed = bench("embed semantics-complete, seed path (numeric)", 3, || {
+        eng.embed_semantics_complete(&order).data.len()
+    });
+    record(
+        &mut results,
+        &seed_embed,
+        &[
+            ("edge_events_per_s_m", evs(&seed_embed)),
+            ("embeddings_per_s", targets / seed_embed.median.as_secs_f64()),
+        ],
+    );
+
+    let mut threads: Vec<usize> = vec![1, 2, 4, FusedEngine::default_threads()];
+    threads.sort_unstable();
+    threads.dedup();
+    let mut fused_1t_median = 0.0f64;
+    for &t in &threads {
+        let s = bench(&format!("embed fused engine, {t} thread(s) (numeric)"), 3, || {
+            fe.embed_semantics_complete(&order, t).data.len()
+        });
+        let med = s.median.as_secs_f64();
+        if t == 1 {
+            fused_1t_median = med;
+            println!(
+                "  -> fused 1-thread speedup vs seed embed: {:.2}x",
+                seed_embed.median.as_secs_f64() / med
+            );
+        } else if fused_1t_median > 0.0 {
+            println!("  -> scaling vs 1 thread: {:.2}x at {t} threads", fused_1t_median / med);
+        }
+        record(
+            &mut results,
+            &s,
+            &[
+                ("threads", t as f64),
+                ("edge_events_per_s_m", evs(&s)),
+                ("embeddings_per_s", targets / med),
+            ],
+        );
+    }
+
+    // Grouped order (the -O schedule) through the fused engine.
     let h = OverlapHypergraph::build(&g, 0.01);
-    bench("hypergraph build (top-15%, jaccard)", 5, || {
+    let grouping = group_overlap_driven(&h, default_n_max(order.len(), 4), 4);
+    let grouped_order = grouping.flat_order();
+    let nt = FusedEngine::default_threads();
+    let s = bench("embed fused engine, grouped order, all threads", 3, || {
+        fe.embed_semantics_complete(&grouped_order, nt).data.len()
+    });
+    record(
+        &mut results,
+        &s,
+        &[
+            ("threads", nt as f64),
+            ("edge_events_per_s_m", evs(&s)),
+            ("embeddings_per_s", targets / s.median.as_secs_f64()),
+        ],
+    );
+
+    // ---- Grouping + simulator + micro models (pre-existing hot paths) ----
+    let s = bench("hypergraph build (top-15%, jaccard)", 5, || {
         black_box(OverlapHypergraph::build(&g, 0.01)).num_supers()
-    })
-    .print();
-    bench("louvain grouping (algorithm 2)", 5, || {
-        group_overlap_driven(&h, default_n_max(g.target_vertices().len(), 4), 4).groups.len()
-    })
-    .print();
+    });
+    record(&mut results, &s, &[]);
+    let s = bench("louvain grouping (algorithm 2)", 5, || {
+        group_overlap_driven(&h, default_n_max(order.len(), 4), 4).groups.len()
+    });
+    record(&mut results, &s, &[]);
 
     let cfg = AccelConfig::tlv_default();
     let sim = Simulator::new(cfg, &g, m.clone());
-    let s = bench("full cycle-sim, overlap-grouped (-O)", 5, || sim.run(ExecMode::OverlapGrouped).cycles);
-    s.print();
-    println!("  -> {:.1} M edges simulated/s", edges / s.median.as_secs_f64() / 1e6);
-    bench("full cycle-sim, per-semantic (-B)", 5, || {
+    let s = bench("full cycle-sim, overlap-grouped (-O)", 5, || {
+        sim.run(ExecMode::OverlapGrouped).cycles
+    });
+    record(&mut results, &s, &[("edges_simulated_per_s_m", evs(&s))]);
+    let s = bench("full cycle-sim, per-semantic (-B)", 5, || {
         sim.run(ExecMode::PerSemanticBaseline).cycles
-    })
-    .print();
+    });
+    record(&mut results, &s, &[("edges_simulated_per_s_m", evs(&s))]);
 
-    // Micro: cache + DRAM models.
-    bench("fifo cache 1M accesses (50% resident)", 10, || {
+    let s = bench("fifo cache 1M accesses (50% resident)", 10, || {
         let mut c = FifoCache::with_entries(32 * 1024);
         let mut acc = 0u64;
         for i in 0..1_000_000u32 {
@@ -62,15 +178,51 @@ fn main() {
             }
         }
         acc
-    })
-    .print();
-    bench("hbm model 1M accesses", 10, || {
+    });
+    record(&mut results, &s, &[]);
+    let s = bench("hbm model 1M accesses", 10, || {
         let mut hbm = Hbm::new(HbmConfig::hbm1_512gbps());
         let mut t = 0;
         for i in 0..1_000_000u64 {
             t = hbm.access(t, (i * 256) % (1 << 28), 256);
         }
         t
-    })
-    .print();
+    });
+    record(&mut results, &s, &[]);
+
+    // ---- Emit BENCH_hotpath.json at the repository root ----
+    let mut workload = Json::obj();
+    workload.set("dataset", "AM".into());
+    workload.set("scale", Json::Num(0.05));
+    workload.set("vertices", (g.num_vertices() as u64).into());
+    workload.set("edges", (g.num_edges() as u64).into());
+    workload.set("semantics", (g.num_semantics() as u64).into());
+    workload.set("targets", (order.len() as u64).into());
+    workload.set("model", "RGCN".into());
+
+    // Acceptance targets carried through every regeneration so the
+    // trajectory file never loses them.
+    let mut targets_json = Json::obj();
+    targets_json.set("walk_fused_speedup_vs_seed_min", Json::Num(3.0));
+
+    let mut out = Json::obj();
+    out.set("generated_by", "cargo bench --bench hotpath".into());
+    out.set("workload", workload);
+    out.set("targets", targets_json);
+    out.set("walk_fused_speedup_vs_seed", walk_speedup.into());
+    out.set("results", Json::Arr(results));
+    println!(
+        "acceptance: fused walk speedup {:.2}x vs target >= 3.0x: {}",
+        walk_speedup,
+        if walk_speedup >= 3.0 { "PASS" } else { "MISS" }
+    );
+
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_hotpath.json"))
+        .unwrap_or_else(|| "BENCH_hotpath.json".into());
+    match std::fs::write(&path, out.render() + "\n") {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\ncould not write {}: {e}", path.display()),
+    }
 }

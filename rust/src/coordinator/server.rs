@@ -19,7 +19,7 @@ use super::request::{InferenceRequest, InferenceResponse};
 use super::router::Router;
 use crate::engine::Matrix;
 use crate::grouping::{default_n_max, group_overlap_driven, OverlapHypergraph};
-use crate::hetgraph::{HetGraph, VId};
+use crate::hetgraph::{FusedAdjacency, HetGraph, VId};
 use crate::model::ModelKind;
 use crate::runtime::{BlockExecutor, Manifest};
 use anyhow::{Context, Result};
@@ -76,6 +76,12 @@ impl Server {
         let projected = Arc::new(fp_exec.project_graph(&g).context("FP pass")?);
         drop(fp_exec);
 
+        // Vertex-major adjacency, transposed once and shared read-only by
+        // every worker (like the projected features): the aggregation
+        // gather in the request path then runs without per-(target,
+        // semantic) binary searches.
+        let fused = Arc::new(g.fused());
+
         // Grouping → router (the streaming grouper runs up front here; the
         // cycle-level pipelining is modeled in sim::accel).
         let router = if cfg.overlap_routing {
@@ -98,7 +104,7 @@ impl Server {
         for ch in 0..cfg.channels {
             let (tx, rx) = channel::<WorkItem>();
             queues.push(tx);
-            let g = Arc::clone(&g);
+            let fused = Arc::clone(&fused);
             let projected = Arc::clone(&projected);
             let metrics = Arc::clone(&metrics);
             let dir = cfg.artifacts_dir.clone();
@@ -107,7 +113,7 @@ impl Server {
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("tlv-worker-{ch}"))
-                    .spawn(move || worker_loop(rx, g, projected, dir, kind, metrics, ready))
+                    .spawn(move || worker_loop(rx, fused, projected, dir, kind, metrics, ready))
                     .context("spawn worker")?,
             );
         }
@@ -171,7 +177,7 @@ impl Server {
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
     rx: Receiver<WorkItem>,
-    g: Arc<HetGraph>,
+    fused: Arc<FusedAdjacency>,
     projected: Arc<Matrix>,
     dir: PathBuf,
     kind: ModelKind,
@@ -199,7 +205,7 @@ fn worker_loop(
                      replies: &rustc_hash::FxHashMap<u64, Sender<(u64, Vec<(VId, Vec<f32>)>)>>,
                      batcher_used: usize| {
         let targets: Vec<VId> = tags.iter().map(|t| t.target).collect();
-        match exec.embed_all(&g, &projected, &targets) {
+        match exec.embed_all_fused(&fused, &projected, &targets) {
             Ok(m) => {
                 metrics.record_block(batcher_used, block_size);
                 // Group rows back by request.

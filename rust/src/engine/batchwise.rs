@@ -5,7 +5,7 @@
 //! both sides of that trade-off, completing the motivation analysis.
 
 use super::trace::TraceSink;
-use crate::hetgraph::HetGraph;
+use crate::hetgraph::{FusedAdjacency, HetGraph};
 use crate::model::ModelConfig;
 
 /// Walk the per-semantic paradigm in target batches of `batch_size`.
@@ -14,6 +14,12 @@ use crate::model::ModelConfig;
 /// is re-run per batch: shared neighbors are re-fetched across batches
 /// (the efficiency loss the paper points at), and per-pass setup is paid
 /// `ceil(targets/batch) * semantics` times.
+///
+/// Batches are contiguous chunks of the sorted target list, so each NA
+/// pass walks the CSR's own (sorted) target slice located with two
+/// `partition_point`s per (semantic, batch) — the seed code binary-
+/// searched every (target, semantic) pair. The SF phase reads the fused
+/// vertex-major index. Event order is unchanged.
 pub fn walk_per_semantic_batched<S: TraceSink>(
     g: &HetGraph,
     m: &ModelConfig,
@@ -22,11 +28,16 @@ pub fn walk_per_semantic_batched<S: TraceSink>(
 ) {
     let hb = m.hidden_bytes();
     let targets = g.target_vertices();
+    let fused = FusedAdjacency::build(g);
     for batch in targets.chunks(batch_size.max(1)) {
+        let (lo, hi) = (batch[0], *batch.last().unwrap());
         // NA per semantic, restricted to this batch.
         for csr in &g.csrs {
-            for &t in batch {
-                let ns = csr.neighbors(t);
+            let s = csr.targets.partition_point(|&t| t < lo);
+            let e = csr.targets.partition_point(|&t| t <= hi);
+            for i in s..e {
+                let t = csr.targets[i];
+                let ns = csr.neighbors_at(i);
                 if ns.is_empty() {
                     continue;
                 }
@@ -40,14 +51,11 @@ pub fn walk_per_semantic_batched<S: TraceSink>(
         }
         // SF for the batch; partials die here.
         for &t in batch {
-            let mut any = false;
-            for csr in &g.csrs {
-                if csr.position_of(t).is_some() {
-                    sink.partial_free(t, csr.semantic, hb);
-                    any = true;
-                }
+            let entries = fused.entries_of(t);
+            for entry in entries {
+                sink.partial_free(t, entry.semantic, hb);
             }
-            if any {
+            if !entries.is_empty() {
                 sink.embedding_write(t, hb);
             }
         }

@@ -69,8 +69,9 @@ pub struct ReferenceEngine<'g> {
     pub projected: Matrix,
     /// Per-semantic attention vectors (a_l, a_r) for RGAT-style weighting.
     attn: Vec<(Vec<f32>, Vec<f32>)>,
-    /// Per-semantic fusion weights β_r.
-    fusion_w: Vec<f32>,
+    /// Per-semantic fusion weights β_r (shared with `engine::fused` so the
+    /// fused engine reproduces the fusion bit-for-bit).
+    pub(crate) fusion_w: Vec<f32>,
 }
 
 pub const LEAKY_SLOPE: f32 = 0.01;
@@ -115,7 +116,8 @@ impl<'g> ReferenceEngine<'g> {
     }
 
     /// Edge weight α_{r,u,v} (ComputeEdgeWeight, Algorithm 1 line 5).
-    fn edge_weight(&self, sem: SemanticId, u: VId, v: VId, deg: usize) -> f32 {
+    /// `pub(crate)` so `engine::fused` computes identical weights.
+    pub(crate) fn edge_weight(&self, sem: SemanticId, u: VId, v: VId, deg: usize) -> f32 {
         match self.m.kind {
             // RGCN / NARS: normalized mean aggregation.
             ModelKind::Rgcn | ModelKind::Nars => 1.0 / deg as f32,

@@ -1,0 +1,177 @@
+//! Zero-allocation parallel semantics-complete engine over the fused
+//! vertex-major adjacency.
+//!
+//! [`FusedEngine`] computes the same embeddings as
+//! `ReferenceEngine::embed_semantics_complete` — **bitwise identical**,
+//! because per target it performs the exact same float operations in the
+//! exact same order (partial initialized from the target's projection,
+//! neighbors accumulated in CSR order with the same edge weights, partials
+//! fused in ascending-semantic order, LeakyReLU last) — but restructured
+//! the way the paper's Algorithm 1 intends:
+//!
+//! * adjacency reads go through [`FusedAdjacency`] — zero binary searches,
+//!   one contiguous entry slice per target;
+//! * one scratch partial buffer per worker, reused across every target —
+//!   no per-(target, semantic) allocation, no hash maps, no global partial
+//!   store (the memory-expansion driver of the per-semantic paradigm);
+//! * targets are independent, so the order slice is chunked across
+//!   `std::thread::scope` workers, each writing its disjoint stripe of the
+//!   output matrix. Any thread count produces the same bits.
+
+use super::functional::{ReferenceEngine, LEAKY_SLOPE};
+use super::tensor::{axpy, leaky_relu, Matrix};
+use crate::grouping::Grouping;
+use crate::hetgraph::{FusedAdjacency, VId};
+
+/// Parallel semantics-complete executor (see module docs).
+pub struct FusedEngine<'e, 'g> {
+    eng: &'e ReferenceEngine<'g>,
+    fused: FusedAdjacency,
+}
+
+impl<'e, 'g> FusedEngine<'e, 'g> {
+    /// Build the fused adjacency from the engine's graph and wrap it.
+    pub fn new(eng: &'e ReferenceEngine<'g>) -> Self {
+        let fused = FusedAdjacency::build(eng.g);
+        FusedEngine { eng, fused }
+    }
+
+    /// Wrap a pre-built adjacency (e.g. one shared across engines).
+    pub fn with_adjacency(eng: &'e ReferenceEngine<'g>, fused: FusedAdjacency) -> Self {
+        FusedEngine { eng, fused }
+    }
+
+    /// The underlying vertex-major adjacency.
+    pub fn adjacency(&self) -> &FusedAdjacency {
+        &self.fused
+    }
+
+    /// Default worker count: one per available core.
+    pub fn default_threads() -> usize {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+
+    /// Semantics-complete embeddings for `order` targets (row i ↔
+    /// order[i]), computed by `threads` workers. Bitwise identical to
+    /// `ReferenceEngine::embed_semantics_complete(order)` for every thread
+    /// count — parallelism is across targets, which are independent.
+    pub fn embed_semantics_complete(&self, order: &[VId], threads: usize) -> Matrix {
+        let h = self.eng.hidden;
+        let mut out = Matrix::zeros(order.len(), h);
+        if order.is_empty() || h == 0 {
+            return out;
+        }
+        let threads = threads.clamp(1, order.len());
+        if threads == 1 {
+            self.embed_range(order, &mut out.data);
+            return out;
+        }
+        // Contiguous stripes: order.chunks and out.data.chunks_mut stay in
+        // lockstep because every stripe is `chunk` rows of `h` floats.
+        let chunk = order.len().div_ceil(threads);
+        std::thread::scope(|s| {
+            for (targets, stripe) in order.chunks(chunk).zip(out.data.chunks_mut(chunk * h)) {
+                s.spawn(move || self.embed_range(targets, stripe));
+            }
+        });
+        out
+    }
+
+    /// Embed in the locality-preserving grouped order (paper §IV-C):
+    /// returns `(flat order, embeddings)` with row i ↔ order[i].
+    pub fn embed_grouped(&self, grouping: &Grouping, threads: usize) -> (Vec<VId>, Matrix) {
+        let order = grouping.flat_order();
+        let m = self.embed_semantics_complete(&order, threads);
+        (order, m)
+    }
+
+    /// One worker's stripe: a single scratch partial reused for every
+    /// target; `out` holds `targets.len()` rows.
+    fn embed_range(&self, targets: &[VId], out: &mut [f32]) {
+        let h = self.eng.hidden;
+        let mut partial = vec![0.0f32; h]; // the only allocation, per worker
+        for (i, &t) in targets.iter().enumerate() {
+            self.embed_into(t, &mut partial, &mut out[i * h..(i + 1) * h]);
+        }
+    }
+
+    /// Algorithm 1 for one target, written into `z` (same op order as
+    /// `ReferenceEngine::{aggregate_partial, fuse}`).
+    #[inline]
+    fn embed_into(&self, t: VId, partial: &mut [f32], z: &mut [f32]) {
+        let eng = self.eng;
+        let entries = self.fused.entries_of(t);
+        if entries.is_empty() {
+            // Isolated target: embedding is activation of its projection.
+            z.copy_from_slice(eng.projected.row(t.idx()));
+        } else {
+            z.fill(0.0);
+            for e in entries {
+                let ns = self.fused.neighbors(e);
+                // Partial initialized from h'_v (Algorithm 1 line 3).
+                partial.copy_from_slice(eng.projected.row(t.idx()));
+                let deg = ns.len();
+                for &u in ns {
+                    let a = eng.edge_weight(e.semantic, u, t, deg);
+                    axpy(partial, eng.projected.row(u.idx()), a);
+                }
+                // Immediate fusion (line 9): the partial dies right here.
+                axpy(z, partial, eng.fusion_w[e.semantic.0 as usize]);
+            }
+        }
+        leaky_relu(z, LEAKY_SLOPE);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::Dataset;
+    use crate::model::{ModelConfig, ModelKind};
+
+    #[test]
+    fn matches_reference_single_thread() {
+        let g = Dataset::Acm.load(0.03);
+        let e = ReferenceEngine::new(&g, ModelConfig::new(ModelKind::Rgcn), 24);
+        let f = FusedEngine::new(&e);
+        let order = g.target_vertices();
+        let want = e.embed_semantics_complete(&order);
+        let got = f.embed_semantics_complete(&order, 1);
+        assert_eq!(want.max_abs_diff(&got), 0.0);
+    }
+
+    #[test]
+    fn thread_count_does_not_change_bits() {
+        let g = Dataset::Imdb.load(0.03);
+        let e = ReferenceEngine::new(&g, ModelConfig::new(ModelKind::Rgat), 24);
+        let f = FusedEngine::new(&e);
+        let order = g.target_vertices();
+        let one = f.embed_semantics_complete(&order, 1);
+        for threads in [2, 3, 8] {
+            let many = f.embed_semantics_complete(&order, threads);
+            assert_eq!(one.max_abs_diff(&many), 0.0, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_order_is_empty_matrix() {
+        let g = Dataset::Acm.load(0.03);
+        let e = ReferenceEngine::new(&g, ModelConfig::new(ModelKind::Nars), 24);
+        let f = FusedEngine::new(&e);
+        let m = f.embed_semantics_complete(&[], 4);
+        assert_eq!(m.rows, 0);
+    }
+
+    #[test]
+    fn grouped_embed_covers_all_targets() {
+        use crate::grouping::{default_n_max, group_overlap_driven, OverlapHypergraph};
+        let g = Dataset::Acm.load(0.03);
+        let e = ReferenceEngine::new(&g, ModelConfig::new(ModelKind::Rgcn), 24);
+        let f = FusedEngine::new(&e);
+        let h = OverlapHypergraph::build(&g, 0.0);
+        let grouping = group_overlap_driven(&h, default_n_max(g.target_vertices().len(), 4), 4);
+        let (order, m) = f.embed_grouped(&grouping, 2);
+        assert_eq!(order.len(), g.target_vertices().len());
+        assert_eq!(m.rows, order.len());
+    }
+}

@@ -1,10 +1,12 @@
 //! Execution engine: trace-walk paradigms (per-semantic vs
-//! semantics-complete), CPU reference numerics, and the memory/access
-//! accounting behind the paper's motivation and evaluation metrics.
+//! semantics-complete), CPU reference numerics, the zero-allocation
+//! parallel fused engine, and the memory/access accounting behind the
+//! paper's motivation and evaluation metrics.
 
 pub mod access;
 pub mod batchwise;
 pub mod functional;
+pub mod fused;
 pub mod multilayer;
 pub mod memory;
 pub mod paradigm;
@@ -14,7 +16,11 @@ pub mod trace;
 pub use access::{AccessCounter, AccessReport};
 pub use batchwise::{batched_semantic_passes, walk_per_semantic_batched};
 pub use functional::ReferenceEngine;
+pub use fused::FusedEngine;
 pub use memory::{MemoryReport, MemoryTracker};
-pub use paradigm::{walk_per_semantic, walk_semantics_complete};
+pub use paradigm::{
+    walk_per_semantic, walk_per_semantic_fused, walk_semantics_complete,
+    walk_semantics_complete_fused, walk_semantics_complete_unfused,
+};
 pub use tensor::Matrix;
 pub use trace::{NullSink, StreamSink, TeeSink, TraceSink};

@@ -11,7 +11,7 @@
 use super::functional::ReferenceEngine;
 use super::tensor::Matrix;
 use super::trace::TraceSink;
-use crate::hetgraph::{HetGraph, VId};
+use crate::hetgraph::{FusedAdjacency, HetGraph, VId};
 use crate::model::ModelConfig;
 
 /// Layered embeddings via the semantics-complete schedule.
@@ -69,9 +69,11 @@ pub fn walk_layers_semantics_complete<S: TraceSink>(
     layers: usize,
     sink: &mut S,
 ) {
+    // The adjacency is layer-invariant: transpose once, walk L times.
+    let fused = FusedAdjacency::build(g);
     let order = g.target_vertices();
     for _ in 0..layers {
-        super::paradigm::walk_semantics_complete(g, m, &order, sink);
+        super::paradigm::walk_semantics_complete_fused(&fused, m, &order, sink);
     }
 }
 

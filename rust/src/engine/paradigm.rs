@@ -12,18 +12,50 @@
 //!   Algorithm 1): per target vertex, aggregate all semantics then fuse
 //!   immediately; only one target's partials are ever live, and the target
 //!   feature is accessed once instead of once per semantic.
+//!
+//! Both walks run on the vertex-major [`FusedAdjacency`] layout: the
+//! semantics-complete loop reads each target's cross-semantic
+//! neighborhoods with zero binary searches
+//! ([`walk_semantics_complete_fused`] for a pre-built adjacency), and the
+//! per-semantic fusion phase uses the same index instead of the former
+//! O(T·S·log T) `position_of` scan. The pre-fused implementation is kept
+//! as [`walk_semantics_complete_unfused`] so `benches/hotpath.rs` can
+//! measure the layout's speedup against the seed path.
 
 use super::trace::TraceSink;
-use crate::hetgraph::{HetGraph, SemanticId, VId};
+use crate::hetgraph::{FusedAdjacency, HetGraph, SemanticId, VId};
 use crate::model::ModelConfig;
 
 /// Per-semantic (baseline) walk. Targets are visited in CSR order within
-/// each semantic, mirroring DGL's per-relation SpMM schedule.
+/// each semantic, mirroring DGL's per-relation SpMM schedule. Builds the
+/// fused adjacency internally; callers that already hold one should use
+/// [`walk_per_semantic_fused`]. (The SF phase only reads `entries`, so
+/// the transpose's `sources` fill — one O(E) memcpy — is wasted here;
+/// it is dominated by the O(E) sink events and accepted to keep one
+/// fully-initialized adjacency type instead of a partial variant.)
 pub fn walk_per_semantic<S: TraceSink>(g: &HetGraph, m: &ModelConfig, sink: &mut S) {
+    let fused = FusedAdjacency::build(g);
+    walk_per_semantic_fused(g, &fused, m, sink);
+}
+
+/// Per-semantic walk with a pre-built fused adjacency (used only by the
+/// SF phase, which reads each target's live partial list from it instead
+/// of binary-searching every (target, semantic) combination).
+pub fn walk_per_semantic_fused<S: TraceSink>(
+    g: &HetGraph,
+    fused: &FusedAdjacency,
+    m: &ModelConfig,
+    sink: &mut S,
+) {
     let hb = m.hidden_bytes();
-    // NA: one full pass per semantic.
+    // NA: one full pass per semantic. Degenerate zero-degree CSR rows do
+    // no aggregation work and get no partial — the fused index drops them
+    // too, keeping the SF frees below exactly paired with these allocs.
     for csr in &g.csrs {
         for (t, ns) in csr.iter() {
+            if ns.is_empty() {
+                continue;
+            }
             sink.begin_target(t);
             // Target feature is re-read under every semantic (redundancy
             // source ② of Fig. 1).
@@ -36,14 +68,11 @@ pub fn walk_per_semantic<S: TraceSink>(g: &HetGraph, m: &ModelConfig, sink: &mut
     }
     // SF: deferred fusion; partials freed only now.
     for t in g.target_vertices() {
-        let mut any = false;
-        for csr in &g.csrs {
-            if csr.position_of(t).is_some() {
-                sink.partial_free(t, csr.semantic, hb);
-                any = true;
-            }
+        let entries = fused.entries_of(t);
+        for e in entries {
+            sink.partial_free(t, e.semantic, hb);
         }
-        if any {
+        if !entries.is_empty() {
             sink.embedding_write(t, hb);
         }
     }
@@ -51,12 +80,30 @@ pub fn walk_per_semantic<S: TraceSink>(g: &HetGraph, m: &ModelConfig, sink: &mut
 
 /// Semantics-complete walk (Algorithm 1) over targets in `order`.
 ///
+/// Builds the fused adjacency once and delegates to
+/// [`walk_semantics_complete_fused`]; callers that walk repeatedly (e.g.
+/// multi-layer inference) should build [`FusedAdjacency`] themselves and
+/// call the fused variant directly.
+pub fn walk_semantics_complete<S: TraceSink>(
+    g: &HetGraph,
+    m: &ModelConfig,
+    order: &[VId],
+    sink: &mut S,
+) {
+    let fused = FusedAdjacency::build(g);
+    walk_semantics_complete_fused(&fused, m, order, sink);
+}
+
+/// Semantics-complete walk over a pre-built vertex-major adjacency.
+///
 /// `order` controls locality: sequential order reproduces the **-S**
 /// ablation; a grouped order (from `grouping::`) reproduces **-O**.
 /// Targets without any neighbors still produce an embedding (projection
 /// only), matching line 3 of Algorithm 1 (partial initialized from h'_v).
-pub fn walk_semantics_complete<S: TraceSink>(
-    g: &HetGraph,
+/// Event-for-event identical to the seed walk — just with O(1) adjacency
+/// reads and no per-target bookkeeping allocation.
+pub fn walk_semantics_complete_fused<S: TraceSink>(
+    fused: &FusedAdjacency,
     m: &ModelConfig,
     order: &[VId],
     sink: &mut S,
@@ -65,6 +112,35 @@ pub fn walk_semantics_complete<S: TraceSink>(
     for &t in order {
         sink.begin_target(t);
         // Target feature accessed exactly once across all semantics.
+        sink.feature_access(t);
+        let entries = fused.entries_of(t);
+        for e in entries {
+            sink.partial_alloc(t, e.semantic, hb);
+            for &u in fused.neighbors(e) {
+                sink.feature_access(u);
+            }
+        }
+        // Immediate fusion (line 9): partials die here.
+        for e in entries {
+            sink.partial_free(t, e.semantic, hb);
+        }
+        sink.embedding_write(t, hb);
+    }
+}
+
+/// The seed (pre-fused) semantics-complete walk: one binary search per
+/// (target, semantic) and a live-semantics `Vec` per target. Kept only as
+/// the comparison baseline for `benches/hotpath.rs`; emits the exact same
+/// event stream as [`walk_semantics_complete`].
+pub fn walk_semantics_complete_unfused<S: TraceSink>(
+    g: &HetGraph,
+    m: &ModelConfig,
+    order: &[VId],
+    sink: &mut S,
+) {
+    let hb = m.hidden_bytes();
+    for &t in order {
+        sink.begin_target(t);
         sink.feature_access(t);
         let mut live: Vec<SemanticId> = Vec::with_capacity(g.num_semantics());
         for csr in &g.csrs {
@@ -78,7 +154,6 @@ pub fn walk_semantics_complete<S: TraceSink>(
                 sink.feature_access(u);
             }
         }
-        // Immediate fusion (line 9): partials die here.
         for s in live {
             sink.partial_free(t, s, hb);
         }
@@ -152,6 +227,27 @@ mod tests {
         // Unique footprints agree up to isolated targets (sc touches all
         // targets; ps only touches targets with edges).
         assert!(b.unique() >= a.unique());
+    }
+
+    #[test]
+    fn fused_walk_matches_unfused_walk() {
+        // The fused layout must change performance, not semantics: both
+        // implementations emit identical access totals and memory peaks.
+        let (g, m) = setup();
+        let order = g.target_vertices();
+        let mut fused_acc = AccessCounter::default();
+        walk_semantics_complete(&g, &m, &order, &mut fused_acc);
+        let mut seed_acc = AccessCounter::default();
+        walk_semantics_complete_unfused(&g, &m, &order, &mut seed_acc);
+        assert_eq!(fused_acc.total, seed_acc.total);
+        assert_eq!(fused_acc.unique(), seed_acc.unique());
+
+        let mut fused_mem = MemoryTracker::default();
+        walk_semantics_complete(&g, &m, &order, &mut fused_mem);
+        let mut seed_mem = MemoryTracker::default();
+        walk_semantics_complete_unfused(&g, &m, &order, &mut seed_mem);
+        assert_eq!(fused_mem.peak_bytes, seed_mem.peak_bytes);
+        assert_eq!(fused_mem.embedding_bytes, seed_mem.embedding_bytes);
     }
 
     #[test]

@@ -1,0 +1,339 @@
+//! Vertex-major fused adjacency: the "thinking like a vertex" layout.
+//!
+//! The per-semantic `Vec<SemanticCsr>` is semantic-major: reading one
+//! target's cross-semantic neighborhood costs one binary search per
+//! semantic (`SemanticCsr::position_of`), which is exactly the access
+//! pattern the semantics-complete paradigm (paper §IV-A, Algorithm 1)
+//! performs for *every* target. [`FusedAdjacency`] is the one-time
+//! transpose into a CSR-of-CSRs keyed by target vertex: for each target, a
+//! contiguous slice of [`FusedEntry`] records — `(semantic, neighbor
+//! range)` in ascending semantic order — plus one concatenated source
+//! array grouped by target. The semantics-complete loop then reads all of
+//! a vertex's neighborhoods with zero searches and perfect spatial
+//! locality, which is the software analogue of the accelerator streaming a
+//! whole aggregation workload per vertex (§IV-B).
+//!
+//! Invariants (checked by [`FusedAdjacency::validate`] and the property
+//! tests in `rust/tests/properties.rs`):
+//!
+//! * entries of one target are strictly ascending in semantic id and each
+//!   has a non-empty neighbor slice (mirroring `aggregate_partial`'s
+//!   skip-empty rule, so fused consumers see exactly the work the
+//!   reference engine performs);
+//! * the neighbor slice of `(target, semantic)` is bitwise the same list
+//!   as `SemanticCsr::neighbors(target)` (same sort order — this is what
+//!   makes fused numerics reproduce the reference engine exactly);
+//! * every edge of every semantic whose targets lie in the target-type
+//!   range appears exactly once.
+
+use super::csr::SemanticCsr;
+use super::hetgraph::HetGraph;
+use super::types::{SemanticId, VId};
+
+/// One (semantic, neighbor-range) record of a target's fused row.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FusedEntry {
+    /// The semantic this neighborhood belongs to.
+    pub semantic: SemanticId,
+    /// Start offset into `FusedAdjacency::sources`.
+    start: u32,
+    /// Neighbor count (always >= 1).
+    len: u32,
+}
+
+impl FusedEntry {
+    /// In-degree of the (target, semantic) pair.
+    #[inline]
+    pub fn degree(&self) -> usize {
+        self.len as usize
+    }
+}
+
+/// Vertex-major transpose of the per-semantic CSRs (see module docs).
+#[derive(Debug, Clone)]
+pub struct FusedAdjacency {
+    /// Number of semantics in the source graph (including ones with no
+    /// edges); entries only reference semantics with edges.
+    num_semantics: usize,
+    /// First global VId of the target type.
+    base: u32,
+    /// Number of target-type vertices (isolated ones included).
+    num_targets: usize,
+    /// `entry_offsets[i]..entry_offsets[i+1]` indexes `entries` for the
+    /// i-th target (by local index, i.e. `VId - base`).
+    entry_offsets: Vec<u32>,
+    /// Per-(target, semantic) records, grouped by target, ascending
+    /// semantic within each target.
+    entries: Vec<FusedEntry>,
+    /// Concatenated neighbor lists, grouped by target then semantic.
+    sources: Vec<VId>,
+}
+
+impl FusedAdjacency {
+    /// One-time transpose of `g`'s per-semantic CSRs (two counting passes,
+    /// no hashing, no sorting — CSR target lists are already sorted).
+    pub fn build(g: &HetGraph) -> FusedAdjacency {
+        let range = g.type_range(g.target_type);
+        Self::from_csrs(&g.csrs, g.num_semantics(), range.start, (range.end - range.start) as usize)
+    }
+
+    /// Transpose an explicit CSR list over a target id range. Targets
+    /// outside `[base, base + num_targets)` are skipped (the substrate
+    /// invariant is that every semantic points into the target type, so
+    /// this is purely defensive).
+    pub fn from_csrs(
+        csrs: &[SemanticCsr],
+        num_semantics: usize,
+        base: u32,
+        num_targets: usize,
+    ) -> FusedAdjacency {
+        let local = |t: VId| -> Option<usize> {
+            let i = t.0.checked_sub(base)? as usize;
+            (i < num_targets).then_some(i)
+        };
+
+        // Pass 1: per-target entry and neighbor counts.
+        let mut entry_offsets = vec![0u32; num_targets + 1];
+        let mut src_offsets = vec![0u32; num_targets + 1];
+        for csr in csrs {
+            for (i, &t) in csr.targets.iter().enumerate() {
+                let deg = csr.offsets[i + 1] - csr.offsets[i];
+                if deg == 0 {
+                    continue;
+                }
+                if let Some(li) = local(t) {
+                    entry_offsets[li + 1] += 1;
+                    src_offsets[li + 1] += deg;
+                }
+            }
+        }
+        for i in 0..num_targets {
+            entry_offsets[i + 1] += entry_offsets[i];
+            src_offsets[i + 1] += src_offsets[i];
+        }
+
+        // Pass 2: fill. Iterating CSRs in semantic order makes each
+        // target's entries ascend in semantic id without any sort.
+        let total_entries = entry_offsets[num_targets] as usize;
+        let total_sources = src_offsets[num_targets] as usize;
+        let mut entries =
+            vec![FusedEntry { semantic: SemanticId(0), start: 0, len: 0 }; total_entries];
+        let mut sources = vec![VId(0); total_sources];
+        let mut entry_cursor = entry_offsets.clone();
+        let mut src_cursor = src_offsets.clone();
+        for csr in csrs {
+            for (i, &t) in csr.targets.iter().enumerate() {
+                let ns = csr.neighbors_at(i);
+                if ns.is_empty() {
+                    continue;
+                }
+                let Some(li) = local(t) else { continue };
+                let e = entry_cursor[li] as usize;
+                entry_cursor[li] += 1;
+                let s = src_cursor[li] as usize;
+                src_cursor[li] += ns.len() as u32;
+                sources[s..s + ns.len()].copy_from_slice(ns);
+                entries[e] = FusedEntry {
+                    semantic: csr.semantic,
+                    start: s as u32,
+                    len: ns.len() as u32,
+                };
+            }
+        }
+
+        FusedAdjacency { num_semantics, base, num_targets, entry_offsets, entries, sources }
+    }
+
+    /// Number of semantics of the source graph.
+    #[inline]
+    pub fn num_semantics(&self) -> usize {
+        self.num_semantics
+    }
+
+    /// Number of target-type vertices (including isolated ones).
+    #[inline]
+    pub fn num_targets(&self) -> usize {
+        self.num_targets
+    }
+
+    /// Total (target, semantic) pairs with at least one edge.
+    #[inline]
+    pub fn num_entries(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Total edge count.
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.sources.len()
+    }
+
+    /// Local index of a target VId, `None` if outside the target range.
+    #[inline]
+    pub fn local_index(&self, t: VId) -> Option<usize> {
+        let i = t.0.checked_sub(self.base)? as usize;
+        (i < self.num_targets).then_some(i)
+    }
+
+    /// All cross-semantic neighborhoods of `t`, O(1) — no binary search.
+    /// Empty for isolated targets and VIds outside the target range.
+    #[inline]
+    pub fn entries_of(&self, t: VId) -> &[FusedEntry] {
+        match self.local_index(t) {
+            Some(i) => {
+                &self.entries[self.entry_offsets[i] as usize..self.entry_offsets[i + 1] as usize]
+            }
+            None => &[],
+        }
+    }
+
+    /// Neighbor slice of one entry (same order as the source CSR).
+    #[inline]
+    pub fn neighbors(&self, e: &FusedEntry) -> &[VId] {
+        &self.sources[e.start as usize..(e.start + e.len) as usize]
+    }
+
+    /// Total in-degree of a target across all semantics. O(S_t), not
+    /// O(S log T) like `HetGraph::total_degree`.
+    #[inline]
+    pub fn total_degree(&self, t: VId) -> usize {
+        self.entries_of(t).iter().map(|e| e.degree()).sum()
+    }
+
+    /// Iterate `(target, entries)` over all targets in ascending VId order
+    /// (isolated targets yield an empty slice).
+    pub fn iter(&self) -> impl Iterator<Item = (VId, &[FusedEntry])> + '_ {
+        (0..self.num_targets).map(move |i| {
+            let es =
+                &self.entries[self.entry_offsets[i] as usize..self.entry_offsets[i + 1] as usize];
+            (VId(self.base + i as u32), es)
+        })
+    }
+
+    /// Full structural cross-check against the source graph: offsets
+    /// monotone, entries semantic-ascending and non-empty, every neighbor
+    /// slice identical to the per-semantic CSR's, edge totals equal.
+    pub fn validate(&self, g: &HetGraph) -> Result<(), String> {
+        if self.num_semantics != g.num_semantics() {
+            return Err("semantic count mismatch".into());
+        }
+        let range = g.type_range(g.target_type);
+        if self.base != range.start || self.num_targets != (range.end - range.start) as usize {
+            return Err("target range mismatch".into());
+        }
+        if self.entry_offsets.len() != self.num_targets + 1 {
+            return Err("entry_offsets length mismatch".into());
+        }
+        if !self.entry_offsets.windows(2).all(|w| w[0] <= w[1]) {
+            return Err("entry_offsets not monotone".into());
+        }
+        if *self.entry_offsets.last().unwrap_or(&0) as usize != self.entries.len() {
+            return Err("last entry offset != entries.len()".into());
+        }
+        let mut edges = 0usize;
+        for (t, entries) in self.iter() {
+            if !entries.windows(2).all(|w| w[0].semantic < w[1].semantic) {
+                return Err(format!("entries of {t} not ascending in semantic"));
+            }
+            for e in entries {
+                let ns = self.neighbors(e);
+                if ns.is_empty() {
+                    return Err(format!("empty entry for ({t}, {})", e.semantic));
+                }
+                if ns != g.neighbors(t, e.semantic) {
+                    return Err(format!("neighbor mismatch for ({t}, {})", e.semantic));
+                }
+                edges += ns.len();
+            }
+        }
+        let expected: usize = g
+            .csrs
+            .iter()
+            .map(|c| {
+                c.iter()
+                    .filter(|(t, _)| range.contains(&t.0))
+                    .map(|(_, ns)| ns.len())
+                    .sum::<usize>()
+            })
+            .sum();
+        if edges != expected {
+            return Err(format!("edge count mismatch: fused {edges} vs csr {expected}"));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetgraph::HetGraphBuilder;
+
+    fn tiny() -> HetGraph {
+        // Targets T0 = {0,1,2}, sources T1 = {3..7}; two semantics.
+        let mut b = HetGraphBuilder::new("tiny");
+        let t0 = b.add_vertex_type("target", 3, 4);
+        let t1 = b.add_vertex_type("src", 4, 8);
+        let r0 = b.add_semantic("S->T", t1, t0);
+        let r1 = b.add_semantic("T->T", t0, t0);
+        b.add_edge(VId(3), VId(0), r0);
+        b.add_edge(VId(4), VId(0), r0);
+        b.add_edge(VId(4), VId(1), r0);
+        b.add_edge(VId(1), VId(0), r1);
+        b.set_target_type(t0);
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn transpose_roundtrips() {
+        let g = tiny();
+        let f = FusedAdjacency::build(&g);
+        f.validate(&g).unwrap();
+        assert_eq!(f.num_targets(), 3);
+        assert_eq!(f.num_edges(), 4);
+        assert_eq!(f.num_entries(), 3); // (0,r0), (0,r1), (1,r0)
+    }
+
+    #[test]
+    fn entries_are_semantic_ascending() {
+        let g = tiny();
+        let f = FusedAdjacency::build(&g);
+        let e0 = f.entries_of(VId(0));
+        assert_eq!(e0.len(), 2);
+        assert_eq!(e0[0].semantic, SemanticId(0));
+        assert_eq!(e0[1].semantic, SemanticId(1));
+        assert_eq!(f.neighbors(&e0[0]), &[VId(3), VId(4)]);
+        assert_eq!(f.neighbors(&e0[1]), &[VId(1)]);
+    }
+
+    #[test]
+    fn isolated_and_foreign_vertices_are_empty() {
+        let g = tiny();
+        let f = FusedAdjacency::build(&g);
+        assert!(f.entries_of(VId(2)).is_empty()); // isolated target
+        assert!(f.entries_of(VId(5)).is_empty()); // source-type vertex
+        assert_eq!(f.total_degree(VId(2)), 0);
+    }
+
+    #[test]
+    fn degrees_match_graph() {
+        let g = tiny();
+        let f = FusedAdjacency::build(&g);
+        for t in g.target_vertices() {
+            assert_eq!(f.total_degree(t), g.total_degree(t), "{t}");
+        }
+    }
+
+    #[test]
+    fn iter_covers_all_targets_and_edges() {
+        let g = tiny();
+        let f = FusedAdjacency::build(&g);
+        let mut targets = 0usize;
+        let mut edges = 0usize;
+        for (_, es) in f.iter() {
+            targets += 1;
+            edges += es.iter().map(|e| e.degree()).sum::<usize>();
+        }
+        assert_eq!(targets, 3);
+        assert_eq!(edges, g.num_edges());
+    }
+}

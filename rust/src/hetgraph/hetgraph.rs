@@ -70,6 +70,13 @@ impl HetGraph {
         self.csrs[semantic.0 as usize].neighbors(target)
     }
 
+    /// One-time transpose into the vertex-major fused adjacency (§IV-A):
+    /// per target, all cross-semantic neighborhoods contiguous — the
+    /// layout the semantics-complete hot paths run on.
+    pub fn fused(&self) -> super::fused::FusedAdjacency {
+        super::fused::FusedAdjacency::build(self)
+    }
+
     /// The *multi-semantic neighborhood* N(v) of §IV-C1: the union of v's
     /// neighbors across all semantics, including v itself.
     pub fn multi_semantic_neighborhood(&self, target: VId) -> FxHashSet<VId> {

@@ -1,10 +1,12 @@
 //! Heterogeneous graph substrate: typed vertices, semantics (typed
-//! relations), per-semantic reverse-CSR adjacency, builders, synthetic
-//! generators matched to published dataset statistics, and structural
-//! statistics (paper §II-A, §III).
+//! relations), per-semantic reverse-CSR adjacency plus the vertex-major
+//! fused adjacency (the "thinking like a vertex" layout), builders,
+//! synthetic generators matched to published dataset statistics, and
+//! structural statistics (paper §II-A, §III, §IV-A).
 
 pub mod builder;
 pub mod csr;
+pub mod fused;
 pub mod generator;
 #[allow(clippy::module_inception)]
 pub mod hetgraph;
@@ -13,6 +15,7 @@ pub mod types;
 
 pub use builder::HetGraphBuilder;
 pub use csr::SemanticCsr;
+pub use fused::{FusedAdjacency, FusedEntry};
 pub use generator::{generate, DatasetSpec, SemSpec, TypeSpec};
 pub use hetgraph::HetGraph;
 pub use types::{SemanticId, SemanticSpec, TypedEdge, VId, VertexTypeId, VertexTypeSpec};

@@ -28,9 +28,11 @@ pub mod util;
 pub mod prelude {
     pub use crate::datasets::Dataset;
     pub use crate::engine::{
-        walk_per_semantic, walk_semantics_complete, AccessCounter, MemoryReport, MemoryTracker,
-        ReferenceEngine, TraceSink,
+        walk_per_semantic, walk_semantics_complete, AccessCounter, FusedEngine, MemoryReport,
+        MemoryTracker, ReferenceEngine, TraceSink,
     };
-    pub use crate::hetgraph::{HetGraph, HetGraphBuilder, SemanticId, VId, VertexTypeId};
+    pub use crate::hetgraph::{
+        FusedAdjacency, HetGraph, HetGraphBuilder, SemanticId, VId, VertexTypeId,
+    };
     pub use crate::model::{ModelConfig, ModelKind, Workload};
 }

@@ -20,7 +20,7 @@ use crate::engine::functional::{
     attention_vectors, fusion_weight, projection_weight, raw_feature,
 };
 use crate::engine::Matrix;
-use crate::hetgraph::{HetGraph, VId, VertexTypeId};
+use crate::hetgraph::{FusedAdjacency, HetGraph, VId, VertexTypeId};
 use crate::model::ModelKind;
 use anyhow::{bail, Context, Result};
 use std::path::Path;
@@ -96,9 +96,25 @@ impl BlockExecutor {
 
     /// NA+SF for up to `profile.block` targets. `projected` is the FP
     /// output for the whole graph. Returns `[targets.len(), D]`.
+    /// Convenience wrapper: transposes the adjacency per call — serving
+    /// paths should build [`FusedAdjacency`] once and use
+    /// [`Self::embed_block_fused`].
     pub fn embed_block(
         &self,
         g: &HetGraph,
+        projected: &Matrix,
+        targets: &[VId],
+    ) -> Result<Matrix> {
+        let fused = FusedAdjacency::build(g);
+        self.embed_block_fused(&fused, projected, targets)
+    }
+
+    /// NA+SF over the vertex-major fused adjacency: each target's
+    /// cross-semantic neighbor gather is one contiguous entry scan — no
+    /// per-(target, semantic) binary searches in the serving hot path.
+    pub fn embed_block_fused(
+        &self,
+        fused: &FusedAdjacency,
         projected: &Matrix,
         targets: &[VId],
     ) -> Result<Matrix> {
@@ -107,8 +123,8 @@ impl BlockExecutor {
         if targets.len() > b {
             bail!("block of {} exceeds profile B={}", targets.len(), b);
         }
-        if g.num_semantics() > s {
-            bail!("graph has {} semantics, profile supports {}", g.num_semantics(), s);
+        if fused.num_semantics() > s {
+            bail!("graph has {} semantics, profile supports {}", fused.num_semantics(), s);
         }
 
         let mut h_tgt = vec![0.0f32; b * d];
@@ -116,9 +132,9 @@ impl BlockExecutor {
         let mut mask = vec![0.0f32; b * s * k];
         for (row, &tv) in targets.iter().enumerate() {
             h_tgt[row * d..(row + 1) * d].copy_from_slice(projected.row(tv.idx()));
-            for (si, csr) in g.csrs.iter().enumerate() {
-                let ns = csr.neighbors(tv);
-                for (ki, &u) in ns.iter().take(k).enumerate() {
+            for entry in fused.entries_of(tv) {
+                let si = entry.semantic.0 as usize;
+                for (ki, &u) in fused.neighbors(entry).iter().take(k).enumerate() {
                     let off = ((row * s + si) * k + ki) * d;
                     h_nbr[off..off + d].copy_from_slice(projected.row(u.idx()));
                     mask[(row * s + si) * k + ki] = 1.0;
@@ -129,7 +145,7 @@ impl BlockExecutor {
         let mut a_l = vec![0.0f32; s * d];
         let mut a_r = vec![0.0f32; s * d];
         let mut betas = vec![0.0f32; s];
-        for si in 0..g.num_semantics() {
+        for si in 0..fused.num_semantics() {
             let (al, ar) = attention_vectors(si, d);
             a_l[si * d..(si + 1) * d].copy_from_slice(&al);
             a_r[si * d..(si + 1) * d].copy_from_slice(&ar);
@@ -161,13 +177,25 @@ impl BlockExecutor {
         Ok(m)
     }
 
-    /// Embed an arbitrary target list, block by block.
+    /// Embed an arbitrary target list, block by block (transposes the
+    /// adjacency once up front).
     pub fn embed_all(&self, g: &HetGraph, projected: &Matrix, targets: &[VId]) -> Result<Matrix> {
+        let fused = FusedAdjacency::build(g);
+        self.embed_all_fused(&fused, projected, targets)
+    }
+
+    /// Embed an arbitrary target list over a pre-built fused adjacency.
+    pub fn embed_all_fused(
+        &self,
+        fused: &FusedAdjacency,
+        projected: &Matrix,
+        targets: &[VId],
+    ) -> Result<Matrix> {
         let d = self.manifest.profile.hidden;
         let mut out = Matrix::zeros(targets.len(), d);
         let b = self.manifest.profile.block;
         for (ci, chunk) in targets.chunks(b).enumerate() {
-            let m = self.embed_block(g, projected, chunk)?;
+            let m = self.embed_block_fused(fused, projected, chunk)?;
             for r in 0..chunk.len() {
                 out.row_mut(ci * b + r).copy_from_slice(m.row(r));
             }

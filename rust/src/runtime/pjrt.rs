@@ -6,70 +6,133 @@
 //! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
 //! `client.compile` → `execute`, with `return_tuple=True` artifacts
 //! unwrapped via `to_tuple1`.
+//!
+//! The `xla` crate is not available in every build environment (and is
+//! deliberately not declared in `rust/Cargo.toml`, so no cargo feature
+//! combination can hit an unresolvable dependency). The real
+//! implementation is parked under `#[cfg(any())]` (never compiled); the
+//! module exports an API-identical stub whose client constructor returns
+//! an error — `BlockExecutor::load` then fails with a clear message and
+//! every PJRT-dependent test/example skips, while the rest of the crate
+//! builds and runs normally. To re-enable on a host that vendors xla-rs:
+//! add `xla = { path = "<vendored xla-rs>" }` to `[dependencies]`, change
+//! `#[cfg(any())]` to `#[cfg(all())]` below and delete the stub module.
 
-use anyhow::{Context, Result};
-use std::path::Path;
+#[cfg(any())]
+mod imp {
+    use anyhow::{Context, Result};
+    use std::path::Path;
 
-/// A compiled, ready-to-execute artifact.
-pub struct CompiledArtifact {
-    pub name: String,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-/// Thin wrapper over the PJRT CPU client.
-pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-}
-
-impl PjrtRuntime {
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        Ok(PjrtRuntime { client })
+    /// A compiled, ready-to-execute artifact.
+    pub struct CompiledArtifact {
+        pub name: String,
+        exe: xla::PjRtLoadedExecutable,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// Thin wrapper over the PJRT CPU client.
+    pub struct PjrtRuntime {
+        client: xla::PjRtClient,
     }
 
-    /// Load an HLO text file and compile it.
-    pub fn load_hlo_text(&self, name: &str, path: &Path) -> Result<CompiledArtifact> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 artifact path")?,
-        )
-        .with_context(|| format!("parse HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).with_context(|| format!("compile {name}"))?;
-        Ok(CompiledArtifact { name: name.to_string(), exe })
+    impl PjrtRuntime {
+        pub fn cpu() -> Result<Self> {
+            let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+            Ok(PjrtRuntime { client })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load an HLO text file and compile it.
+        pub fn load_hlo_text(&self, name: &str, path: &Path) -> Result<CompiledArtifact> {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).with_context(|| format!("compile {name}"))?;
+            Ok(CompiledArtifact { name: name.to_string(), exe })
+        }
+    }
+
+    impl CompiledArtifact {
+        /// Execute with f32 tensors: `(data, dims)` per input, single f32
+        /// tensor out (our artifacts all return 1-tuples of one array).
+        pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<f32>> {
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|(data, dims)| {
+                    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                    let lit = xla::Literal::vec1(data);
+                    lit.reshape(&dims_i64).context("reshape input literal")
+                })
+                .collect::<Result<_>>()?;
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .with_context(|| format!("execute {}", self.name))?;
+            let out = result[0][0]
+                .to_literal_sync()
+                .context("fetch result")?
+                .to_tuple1()
+                .context("unwrap 1-tuple")?;
+            out.to_vec::<f32>().context("result to vec")
+        }
     }
 }
 
-impl CompiledArtifact {
-    /// Execute with f32 tensors: `(data, dims)` per input, single f32
-    /// tensor out (our artifacts all return 1-tuples of one array).
-    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<f32>> {
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|(data, dims)| {
-                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-                let lit = xla::Literal::vec1(data);
-                lit.reshape(&dims_i64).context("reshape input literal")
-            })
-            .collect::<Result<_>>()?;
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("execute {}", self.name))?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .context("fetch result")?
-            .to_tuple1()
-            .context("unwrap 1-tuple")?;
-        out.to_vec::<f32>().context("result to vec")
+mod imp {
+    use anyhow::{bail, Result};
+    use std::path::Path;
+
+    const UNAVAILABLE: &str = "PJRT runtime unavailable: the vendored `xla` crate is not wired \
+         into this build (see src/runtime/pjrt.rs for how to enable it); \
+         CPU reference numerics via engine::FusedEngine remain available";
+
+    /// Stub artifact (never constructible: the stub client cannot compile).
+    pub struct CompiledArtifact {
+        pub name: String,
+        _priv: (),
+    }
+
+    /// Stub PJRT client whose constructor always errors.
+    pub struct PjrtRuntime {
+        _priv: (),
+    }
+
+    impl PjrtRuntime {
+        pub fn cpu() -> Result<Self> {
+            bail!(UNAVAILABLE)
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
+        }
+
+        pub fn load_hlo_text(&self, _name: &str, _path: &Path) -> Result<CompiledArtifact> {
+            bail!(UNAVAILABLE)
+        }
+    }
+
+    impl CompiledArtifact {
+        pub fn run_f32(&self, _inputs: &[(&[f32], &[usize])]) -> Result<Vec<f32>> {
+            bail!(UNAVAILABLE)
+        }
     }
 }
+
+pub use imp::{CompiledArtifact, PjrtRuntime};
 
 #[cfg(test)]
 mod tests {
     // PJRT round-trip tests live in rust/tests/runtime_roundtrip.rs (they
-    // need the artifacts built by `make artifacts`).
+    // need the artifacts built by `make artifacts` plus the real xla-rs
+    // backed implementation above).
+
+    #[test]
+    fn stub_client_errors_clearly() {
+        let err = super::PjrtRuntime::cpu().err().expect("stub must error");
+        assert!(format!("{err}").contains("PJRT runtime unavailable"), "{err}");
+    }
 }

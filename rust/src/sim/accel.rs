@@ -16,7 +16,7 @@ use crate::grouping::{
     default_n_max, group_overlap_driven, group_random, group_sequential, simulate_grouper,
     GrouperConfig, GrouperStats, Grouping, OverlapHypergraph,
 };
-use crate::hetgraph::{HetGraph, VId};
+use crate::hetgraph::{FusedAdjacency, HetGraph, VId};
 use crate::model::{ModelConfig, Workload};
 use crate::sim::cache::{CacheHierarchy, CacheOutcome};
 use crate::sim::dram::{DramStats, Hbm, HbmConfig};
@@ -182,11 +182,16 @@ pub struct Simulator<'g> {
     pub cfg: AccelConfig,
     pub g: &'g HetGraph,
     pub m: ModelConfig,
+    /// Vertex-major adjacency, transposed once and reused by every run —
+    /// the simulated traversals read it instead of binary-searching the
+    /// per-semantic CSRs per (target, semantic).
+    fused: FusedAdjacency,
 }
 
 impl<'g> Simulator<'g> {
     pub fn new(cfg: AccelConfig, g: &'g HetGraph, m: ModelConfig) -> Self {
-        Simulator { cfg, g, m }
+        let fused = FusedAdjacency::build(g);
+        Simulator { cfg, g, m, fused }
     }
 
     /// Run one full inference pass in `mode`.
@@ -392,19 +397,18 @@ impl<'g> Simulator<'g> {
             t += fetch_cycles.max(compute_cycles);
         }
 
-        // SF phase: reload every partial, fuse.
+        // SF phase: reload every partial, fuse. The fused index lists each
+        // target's live partials directly (the seed code binary-searched
+        // every (target, semantic) pair).
         let mut dram_frontier = t;
         let mut compute = 0u64;
         let mut reload_idx = 0u64;
         for tv in self.g.target_vertices() {
-            let mut s = 0u32;
-            for csr in &self.g.csrs {
-                if csr.position_of(tv).is_some() {
-                    let done = hbm.access(t, addr.partial(reload_idx), hb);
-                    dram_frontier = dram_frontier.max(done);
-                    reload_idx += 1;
-                    s += 1;
-                }
+            let s = self.fused.entries_of(tv).len() as u32;
+            for _ in 0..s {
+                let done = hbm.access(t, addr.partial(reload_idx), hb);
+                dram_frontier = dram_frontier.max(done);
+                reload_idx += 1;
             }
             if s > 0 {
                 let cost = self.cfg.rpe.aggregate_cost(s, self.m.hidden_dim);
@@ -478,13 +482,12 @@ impl<'g> Simulator<'g> {
                 let (hc, dn) = self.fetch(ch, tv, t, hbm, caches, events, addr);
                 fetch_busy += hc;
                 dram_frontier = dram_frontier.max(dn);
-                let mut fused = 0u32;
-                for csr in &self.g.csrs {
-                    let ns = csr.neighbors(tv);
-                    if ns.is_empty() {
-                        continue;
-                    }
-                    fused += 1;
+                // Vertex-major read: the target's cross-semantic
+                // neighborhoods are one contiguous entry slice — no
+                // per-semantic binary search.
+                let entries = self.fused.entries_of(tv);
+                for entry in entries {
+                    let ns = self.fused.neighbors(entry);
                     for &u in ns {
                         let (hc, dn) = self.fetch(ch, u, t, hbm, caches, events, addr);
                         fetch_busy += hc;
@@ -503,8 +506,9 @@ impl<'g> Simulator<'g> {
                 }
                 // Immediate SF: fuse this target's partials from registers
                 // (no DRAM round-trip — the paradigm's second win).
-                if fused > 0 {
-                    let cost = self.cfg.rpe.aggregate_cost(fused, self.m.hidden_dim);
+                if !entries.is_empty() {
+                    let cost =
+                        self.cfg.rpe.aggregate_cost(entries.len() as u32, self.m.hidden_dim);
                     events.mac_ops += cost.mac_ops;
                     events.add_ops += cost.add_ops;
                     compute += cost.cycles;

@@ -33,7 +33,9 @@ fn graph(seed: u64) -> HetGraph {
 }
 
 fn ready() -> bool {
+    // Needs both the AOT artifacts and a real (non-stub) PJRT runtime.
     Manifest::load(&Manifest::default_dir()).is_ok()
+        && tlv_hgnn::runtime::PjrtRuntime::cpu().is_ok()
 }
 
 #[test]

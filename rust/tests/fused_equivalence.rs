@@ -1,0 +1,127 @@
+//! Integration: the fused vertex-major engine is a pure performance
+//! transform — `FusedEngine` must produce **bitwise identical** embeddings
+//! to both `ReferenceEngine` paradigms, for every model, on every small
+//! dataset, under sequential / reversed / overlap-grouped target orders,
+//! at any thread count. The fused trace walk likewise matches the seed
+//! walk event-for-event.
+
+use tlv_hgnn::datasets::Dataset;
+use tlv_hgnn::engine::{
+    walk_semantics_complete, walk_semantics_complete_unfused, AccessCounter, FusedEngine,
+    MemoryTracker, ReferenceEngine,
+};
+use tlv_hgnn::grouping::{default_n_max, group_overlap_driven, OverlapHypergraph};
+use tlv_hgnn::hetgraph::{FusedAdjacency, VId};
+use tlv_hgnn::model::{ModelConfig, ModelKind};
+
+/// Target orders exercised by every equivalence check: the sequential
+/// order, its reverse, and the locality-driven grouped order (§IV-C).
+fn orders(g: &tlv_hgnn::hetgraph::HetGraph) -> Vec<(&'static str, Vec<VId>)> {
+    let sequential = g.target_vertices();
+    let mut reversed = sequential.clone();
+    reversed.reverse();
+    let h = OverlapHypergraph::build(g, 0.0);
+    let grouped =
+        group_overlap_driven(&h, default_n_max(sequential.len(), 4), 4).flat_order();
+    vec![("sequential", sequential), ("reversed", reversed), ("grouped", grouped)]
+}
+
+#[test]
+fn fused_engine_bitwise_matches_both_paradigms() {
+    for d in Dataset::SMALL {
+        let g = d.load(0.03);
+        for kind in ModelKind::ALL {
+            let e = ReferenceEngine::new(&g, ModelConfig::new(kind), 24);
+            let f = FusedEngine::new(&e);
+            for (name, order) in orders(&g) {
+                let sc = e.embed_semantics_complete(&order);
+                let ps = e.embed_per_semantic(&order);
+                for threads in [1usize, 4] {
+                    let fused = f.embed_semantics_complete(&order, threads);
+                    assert_eq!(
+                        sc.max_abs_diff(&fused),
+                        0.0,
+                        "{} {kind:?} {name} t={threads}: fused != semantics-complete",
+                        d.name()
+                    );
+                    assert_eq!(
+                        ps.max_abs_diff(&fused),
+                        0.0,
+                        "{} {kind:?} {name} t={threads}: fused != per-semantic",
+                        d.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_engine_deterministic_across_runs_and_threads() {
+    let g = Dataset::Imdb.load(0.04);
+    let e = ReferenceEngine::new(&g, ModelConfig::new(ModelKind::Rgat), 24);
+    let f = FusedEngine::new(&e);
+    let order = g.target_vertices();
+    let a = f.embed_semantics_complete(&order, 4);
+    let b = f.embed_semantics_complete(&order, 4);
+    assert_eq!(a.max_abs_diff(&b), 0.0, "same thread count must be deterministic");
+    let c = f.embed_semantics_complete(&order, 7);
+    assert_eq!(a.max_abs_diff(&c), 0.0, "thread count must not change bits");
+}
+
+#[test]
+fn shared_adjacency_reuse_is_equivalent() {
+    // One pre-built adjacency serving several engines (the serving-path
+    // pattern) must behave exactly like per-engine builds.
+    let g = Dataset::Dblp.load(0.03);
+    let order = g.target_vertices();
+    let fused = FusedAdjacency::build(&g);
+    fused.validate(&g).unwrap();
+    for kind in ModelKind::ALL {
+        let e = ReferenceEngine::new(&g, ModelConfig::new(kind), 24);
+        let f = FusedEngine::with_adjacency(&e, fused.clone());
+        let got = f.embed_semantics_complete(&order, 2);
+        let want = e.embed_semantics_complete(&order);
+        assert_eq!(want.max_abs_diff(&got), 0.0, "{kind:?}");
+    }
+}
+
+#[test]
+fn fused_walk_event_totals_match_seed_walk() {
+    for d in Dataset::SMALL {
+        let g = d.load(0.04);
+        let m = ModelConfig::new(ModelKind::Rgcn);
+        for (name, order) in orders(&g) {
+            let mut fused_acc = AccessCounter::default();
+            walk_semantics_complete(&g, &m, &order, &mut fused_acc);
+            let mut seed_acc = AccessCounter::default();
+            walk_semantics_complete_unfused(&g, &m, &order, &mut seed_acc);
+            assert_eq!(fused_acc.total, seed_acc.total, "{} {name}", d.name());
+            assert_eq!(fused_acc.unique(), seed_acc.unique(), "{} {name}", d.name());
+
+            let mut fused_mem = MemoryTracker::default();
+            walk_semantics_complete(&g, &m, &order, &mut fused_mem);
+            let mut seed_mem = MemoryTracker::default();
+            walk_semantics_complete_unfused(&g, &m, &order, &mut seed_mem);
+            assert_eq!(fused_mem.peak_bytes, seed_mem.peak_bytes, "{} {name}", d.name());
+            assert_eq!(fused_mem.live_bytes, seed_mem.live_bytes, "{} {name}", d.name());
+            assert_eq!(
+                fused_mem.embedding_bytes,
+                seed_mem.embedding_bytes,
+                "{} {name}",
+                d.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_adjacency_validates_on_all_datasets() {
+    for d in Dataset::ALL {
+        let g = d.load(d.test_scale());
+        let f = g.fused();
+        f.validate(&g).unwrap();
+        assert_eq!(f.num_edges(), g.num_edges(), "{}", d.name());
+        assert_eq!(f.num_targets(), g.target_vertices().len(), "{}", d.name());
+    }
+}

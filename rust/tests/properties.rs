@@ -12,7 +12,7 @@ use tlv_hgnn::grouping::{
     default_n_max, group_overlap_driven, group_random, group_sequential, simulate_grouper,
     GrouperConfig, OverlapHypergraph,
 };
-use tlv_hgnn::hetgraph::VId;
+use tlv_hgnn::hetgraph::{FusedAdjacency, VId};
 use tlv_hgnn::model::{ModelConfig, ModelKind};
 use tlv_hgnn::sim::{FifoCache, Replacement};
 use tlv_hgnn::util::prop::{check, gen};
@@ -28,6 +28,51 @@ fn prop_csr_roundtrip() {
         // Total degree equals edge count.
         let total: usize = g.target_vertices().iter().map(|&t| g.total_degree(t)).sum();
         assert_eq!(total, g.num_edges());
+    });
+}
+
+#[test]
+fn prop_fused_adjacency_roundtrips_csrs() {
+    check("fused-roundtrip", 30, |rng| {
+        let g = gen::hetgraph(rng);
+        let f = FusedAdjacency::build(&g);
+        // Structural invariants (offsets, ordering, per-slice equality).
+        f.validate(&g).unwrap();
+        // Round-trip: every (target, semantic) neighborhood identical to
+        // the per-semantic CSR view, and totals match.
+        let mut edges = 0usize;
+        for &t in &g.target_vertices() {
+            let entries = f.entries_of(t);
+            assert!(
+                entries.windows(2).all(|w| w[0].semantic < w[1].semantic),
+                "entries of {t} not semantic-ascending"
+            );
+            for e in entries {
+                let ns = f.neighbors(e);
+                assert!(!ns.is_empty());
+                assert_eq!(ns, g.neighbors(t, e.semantic), "({t}, {})", e.semantic);
+                edges += ns.len();
+            }
+            assert_eq!(f.total_degree(t), g.total_degree(t), "{t}");
+        }
+        assert_eq!(edges, g.num_edges());
+        assert_eq!(f.num_edges(), g.num_edges());
+    });
+}
+
+#[test]
+fn prop_fused_engine_matches_reference() {
+    check("fused-engine-equal", 8, |rng| {
+        let g = gen::hetgraph(rng);
+        let kind = [ModelKind::Rgcn, ModelKind::Rgat, ModelKind::Nars][rng.gen_index(3)];
+        let e = ReferenceEngine::new(&g, ModelConfig::new(kind), 16);
+        let f = tlv_hgnn::engine::FusedEngine::new(&e);
+        let order = g.target_vertices();
+        let want = e.embed_semantics_complete(&order);
+        for threads in [1usize, 3] {
+            let got = f.embed_semantics_complete(&order, threads);
+            assert_eq!(want.max_abs_diff(&got), 0.0, "{kind:?} t={threads}");
+        }
     });
 }
 

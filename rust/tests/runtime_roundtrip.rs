@@ -39,7 +39,10 @@ fn profile_friendly_graph(seed: u64) -> tlv_hgnn::hetgraph::HetGraph {
 }
 
 fn artifacts_ready() -> bool {
+    // Artifacts on disk are not enough: the PJRT client itself is a stub
+    // unless the xla-backed implementation is wired in (runtime/pjrt.rs).
     Manifest::load(&Manifest::default_dir()).is_ok()
+        && tlv_hgnn::runtime::PjrtRuntime::cpu().is_ok()
 }
 
 fn run_model(kind: ModelKind, tol: f32) {
