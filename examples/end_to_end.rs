@@ -15,7 +15,7 @@ use tlv_hgnn::baselines::{run_a100, run_hihgnn, GpuConfig, HiHgnnConfig};
 use tlv_hgnn::coordinator::{Server, ServerConfig};
 use tlv_hgnn::datasets::Dataset;
 use tlv_hgnn::energy::{tlv_energy, EnergyTable};
-use tlv_hgnn::engine::ReferenceEngine;
+use tlv_hgnn::engine::{FeatureState, FusedEngine, InferencePlan, ReferenceEngine};
 use tlv_hgnn::hetgraph::VId;
 use tlv_hgnn::model::{ModelConfig, ModelKind};
 use tlv_hgnn::runtime::Manifest;
@@ -60,7 +60,11 @@ fn main() -> anyhow::Result<()> {
     // ---- Numeric validation vs the CPU reference ----
     // K-truncation (profile K=16) is the serving-time neighbor sampling;
     // validate exactly on the subset of targets with deg<=K per semantic.
-    let reference = ReferenceEngine::new(&g, ModelConfig::new(ModelKind::Rgcn), 64);
+    // One build-once plan backs the reference oracle here AND the cycle
+    // simulator below (one adjacency transpose for the whole example).
+    let plan = Arc::new(InferencePlan::build(&g, ModelConfig::new(ModelKind::Rgcn), 64));
+    let state = FeatureState::project_all(&plan, FusedEngine::default_threads());
+    let reference = ReferenceEngine::with_plan(&g, Arc::clone(&plan), state);
     let k = 16;
     let exact: Vec<VId> = targets
         .iter()
@@ -94,7 +98,7 @@ fn main() -> anyhow::Result<()> {
     // ---- Paper-metric table on the same workload ----
     let m = ModelConfig::new(ModelKind::Rgcn);
     let cfg = AccelConfig::tlv_default();
-    let sim = Simulator::new(cfg.clone(), &g, m.clone());
+    let sim = Simulator::with_plan(cfg.clone(), &g, &plan);
     let tlv = sim.run(ExecMode::OverlapGrouped);
     let tlv_ms = tlv.time_ms(&cfg);
     let gpu = run_a100(&g, &m, &GpuConfig::a100_80g());

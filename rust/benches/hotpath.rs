@@ -1,9 +1,10 @@
 //! Host-side performance of the library's hot paths (the §Perf targets in
 //! EXPERIMENTS.md): the fused vertex-major layout vs the seed per-semantic
 //! layout (trace walks and real numerics, single- and multi-thread),
-//! simulator throughput, grouping, cache and DRAM models. Criterion is not
-//! vendored offline; `util::bench` provides warmup + repeated timing with
-//! min/median/max.
+//! engine start-up (serial vs parallel FP), depth-3 multi-layer inference
+//! (shared plan vs per-layer rebuild), simulator throughput, grouping,
+//! cache and DRAM models. Criterion is not vendored offline; `util::bench`
+//! provides warmup + repeated timing with min/median/max.
 //!
 //! Writes `BENCH_hotpath.json` at the repository root so successive PRs
 //! have a perf trajectory to compare against:
@@ -11,10 +12,12 @@
 //!     cargo bench --bench hotpath
 
 use std::path::Path;
+use std::sync::Arc;
 use tlv_hgnn::datasets::Dataset;
 use tlv_hgnn::engine::{
-    walk_per_semantic_fused, walk_semantics_complete_fused, walk_semantics_complete_unfused,
-    AccessCounter, FusedEngine, ReferenceEngine,
+    embed_layers_fused, walk_per_semantic_fused, walk_semantics_complete_fused,
+    walk_semantics_complete_unfused, AccessCounter, FeatureState, FusedEngine, InferencePlan,
+    ReferenceEngine,
 };
 use tlv_hgnn::grouping::{default_n_max, group_overlap_driven, OverlapHypergraph};
 use tlv_hgnn::hetgraph::{FusedAdjacency, VId};
@@ -59,7 +62,10 @@ fn main() {
         black_box(FusedAdjacency::build(&g)).num_entries()
     });
     record(&mut results, &build, &[("edges_per_s_m", evs(&build))]);
-    let fused = FusedAdjacency::build(&g);
+
+    // One build-once plan for everything below: walks, engines, layers,
+    // and the simulator all share this single adjacency.
+    let plan = Arc::new(InferencePlan::build(&g, m.clone(), 64));
 
     let seed_walk = bench("walk semantics-complete, seed layout (trace)", 10, || {
         let mut c = AccessCounter::default();
@@ -70,7 +76,7 @@ fn main() {
 
     let fused_walk = bench("walk semantics-complete, fused layout (trace)", 10, || {
         let mut c = AccessCounter::default();
-        walk_semantics_complete_fused(&fused, &m, &order, &mut c);
+        walk_semantics_complete_fused(plan.adjacency(), &m, &order, &mut c);
         c.total
     });
     record(&mut results, &fused_walk, &[("edge_events_per_s_m", evs(&fused_walk))]);
@@ -79,15 +85,38 @@ fn main() {
 
     let ps_walk = bench("walk_per_semantic (trace only)", 10, || {
         let mut c = AccessCounter::default();
-        walk_per_semantic_fused(&g, &fused, &m, &mut c);
+        walk_per_semantic_fused(&g, plan.adjacency(), &m, &mut c);
         c.total
     });
     record(&mut results, &ps_walk, &[("edge_events_per_s_m", evs(&ps_walk))]);
 
+    // ---- Engine start-up: the FP stage, serial vs parallel ----
+    println!("-- engine start-up (FP over all {} vertices) --", g.num_vertices());
+    let fp_serial = bench("fp stage, serial (seed path)", 3, || {
+        FeatureState::project_all(&plan, 1).projected.data.len()
+    });
+    record(&mut results, &fp_serial, &[("threads", 1.0)]);
+    let mut fp_threads: Vec<usize> = vec![2, 4, FusedEngine::default_threads()];
+    fp_threads.sort_unstable();
+    fp_threads.dedup();
+    fp_threads.retain(|&t| t > 1);
+    let mut fp_speedup_4t = 0.0f64;
+    for &t in &fp_threads {
+        let s = bench(&format!("fp stage, parallel, {t} thread(s)"), 3, || {
+            FeatureState::project_all(&plan, t).projected.data.len()
+        });
+        let sp = fp_serial.median.as_secs_f64() / s.median.as_secs_f64();
+        if t == 4 {
+            fp_speedup_4t = sp;
+        }
+        println!("  -> FP speedup vs serial: {sp:.2}x at {t} threads");
+        record(&mut results, &s, &[("threads", t as f64), ("speedup_vs_serial", sp)]);
+    }
+
     // ---- Real numerics: reference embed vs FusedEngine, 1..N threads ----
-    println!("building reference engine (FP pass over all vertices)...");
-    let eng = ReferenceEngine::new(&g, m.clone(), 64);
-    let fe = FusedEngine::with_adjacency(&eng, fused.clone());
+    let state = FeatureState::project_all(&plan, FusedEngine::default_threads());
+    let eng = ReferenceEngine::with_plan(&g, Arc::clone(&plan), state.clone());
+    let fe = FusedEngine::over(&plan, &state);
 
     let seed_embed = bench("embed semantics-complete, seed path (numeric)", 3, || {
         eng.embed_semantics_complete(&order).data.len()
@@ -148,6 +177,31 @@ fn main() {
         ],
     );
 
+    // ---- Depth-3 multi-layer: shared plan vs per-layer rebuild ----
+    let ml_shared = bench("multilayer depth-3, shared plan (fused)", 3, || {
+        let mut st = state.clone();
+        embed_layers_fused(&plan, &mut st, &order, 3, nt).data.len()
+    });
+    record(&mut results, &ml_shared, &[("threads", nt as f64), ("layers", 3.0)]);
+    let ml_rebuild = bench("multilayer depth-3, per-layer plan rebuild", 3, || {
+        // What the stack cost before adjacency reuse: one transpose +
+        // parameter derivation per layer, same numerics otherwise.
+        let mut st = state.clone();
+        let mut out = {
+            let p = InferencePlan::build(&g, m.clone(), 64);
+            FusedEngine::over(&p, &st).embed_semantics_complete(&order, nt)
+        };
+        for _ in 1..3 {
+            let p = InferencePlan::build(&g, m.clone(), 64);
+            st.reseed(&order, &out);
+            out = FusedEngine::over(&p, &st).embed_semantics_complete(&order, nt);
+        }
+        out.data.len()
+    });
+    record(&mut results, &ml_rebuild, &[("threads", nt as f64), ("layers", 3.0)]);
+    let ml_speedup = ml_rebuild.median.as_secs_f64() / ml_shared.median.as_secs_f64();
+    println!("  -> shared-plan speedup vs per-layer rebuild (depth 3): {ml_speedup:.2}x");
+
     // ---- Grouping + simulator + micro models (pre-existing hot paths) ----
     let s = bench("hypergraph build (top-15%, jaccard)", 5, || {
         black_box(OverlapHypergraph::build(&g, 0.01)).num_supers()
@@ -159,7 +213,7 @@ fn main() {
     record(&mut results, &s, &[]);
 
     let cfg = AccelConfig::tlv_default();
-    let sim = Simulator::new(cfg, &g, m.clone());
+    let sim = Simulator::with_plan(cfg, &g, &plan);
     let s = bench("full cycle-sim, overlap-grouped (-O)", 5, || {
         sim.run(ExecMode::OverlapGrouped).cycles
     });
@@ -204,17 +258,33 @@ fn main() {
     // trajectory file never loses them.
     let mut targets_json = Json::obj();
     targets_json.set("walk_fused_speedup_vs_seed_min", Json::Num(3.0));
+    targets_json.set("fp_parallel_speedup_4t_min", Json::Num(2.0));
+    targets_json.set(
+        "multithread_scaling",
+        "near-linear across threads for the fused numeric embed".into(),
+    );
+    targets_json.set(
+        "axpy_unroll",
+        "single-thread fused embed must improve vs the pre-unroll baseline".into(),
+    );
 
     let mut out = Json::obj();
     out.set("generated_by", "cargo bench --bench hotpath".into());
     out.set("workload", workload);
     out.set("targets", targets_json);
     out.set("walk_fused_speedup_vs_seed", walk_speedup.into());
+    out.set("fp_parallel_speedup_4t", fp_speedup_4t.into());
+    out.set("multilayer_shared_plan_speedup_depth3", ml_speedup.into());
     out.set("results", Json::Arr(results));
     println!(
         "acceptance: fused walk speedup {:.2}x vs target >= 3.0x: {}",
         walk_speedup,
         if walk_speedup >= 3.0 { "PASS" } else { "MISS" }
+    );
+    println!(
+        "acceptance: parallel FP speedup {:.2}x at 4 threads vs target >= 2.0x: {}",
+        fp_speedup_4t,
+        if fp_speedup_4t >= 2.0 { "PASS" } else { "MISS" }
     );
 
     let path = Path::new(env!("CARGO_MANIFEST_DIR"))

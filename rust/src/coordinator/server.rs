@@ -17,10 +17,10 @@ use super::batcher::BlockBatcher;
 use super::metrics::Metrics;
 use super::request::{InferenceRequest, InferenceResponse};
 use super::router::Router;
-use crate::engine::Matrix;
+use crate::engine::{FeatureState, InferencePlan};
 use crate::grouping::{default_n_max, group_overlap_driven, OverlapHypergraph};
-use crate::hetgraph::{FusedAdjacency, HetGraph, VId};
-use crate::model::ModelKind;
+use crate::hetgraph::{HetGraph, VId};
+use crate::model::{ModelConfig, ModelKind};
 use crate::runtime::{BlockExecutor, Manifest};
 use anyhow::{Context, Result};
 use std::path::PathBuf;
@@ -35,6 +35,15 @@ struct WorkItem {
     req: u64,
     targets: Vec<VId>,
     reply: Sender<(u64, Vec<(VId, Vec<f32>)>)>,
+}
+
+/// The build-once serving context every channel worker shares read-only:
+/// one [`InferencePlan`] (fused adjacency + parameters + metadata) and the
+/// FP output wrapped as a [`FeatureState`]. One `Arc` replaces the former
+/// pair of separate fused/projected `Arc`s.
+struct PlanState {
+    plan: InferencePlan,
+    state: FeatureState,
 }
 
 /// Server configuration.
@@ -73,14 +82,26 @@ impl Server {
         // FP pass once, in the caller's thread, with a throwaway executor.
         let fp_exec = BlockExecutor::load(&cfg.artifacts_dir, cfg.kind)
             .context("load artifacts for FP pass")?;
-        let projected = Arc::new(fp_exec.project_graph(&g).context("FP pass")?);
+        let max_in_dim = fp_exec.manifest.profile.in_dim;
+        let hidden = fp_exec.manifest.profile.hidden;
+        let state =
+            FeatureState::from_projected(fp_exec.project_graph(&g).context("FP pass")?);
         drop(fp_exec);
 
-        // Vertex-major adjacency, transposed once and shared read-only by
-        // every worker (like the projected features): the aggregation
-        // gather in the request path then runs without per-(target,
-        // semantic) binary searches.
-        let fused = Arc::new(g.fused());
+        // One inference plan per (graph, model): the adjacency is
+        // transposed once and shared read-only by every worker together
+        // with the FP output, so the aggregation gather in the request
+        // path runs without per-(target, semantic) binary searches and
+        // without per-worker rebuilds. The plan is derived at the
+        // artifact profile's dimensions (not the CPU defaults) so its
+        // parameters describe the state it is paired with — a CPU
+        // executor over (plan, state) stays well-formed.
+        let mut model = ModelConfig::new(cfg.kind);
+        model.hidden_dim = hidden as u32;
+        model.fusion_dim = hidden as u32;
+        let plan = InferencePlan::build(&g, model, max_in_dim);
+        debug_assert_eq!(plan.hidden(), state.projected.cols);
+        let shared = Arc::new(PlanState { plan, state });
 
         // Grouping → router (the streaming grouper runs up front here; the
         // cycle-level pipelining is modeled in sim::accel).
@@ -104,8 +125,7 @@ impl Server {
         for ch in 0..cfg.channels {
             let (tx, rx) = channel::<WorkItem>();
             queues.push(tx);
-            let fused = Arc::clone(&fused);
-            let projected = Arc::clone(&projected);
+            let shared = Arc::clone(&shared);
             let metrics = Arc::clone(&metrics);
             let dir = cfg.artifacts_dir.clone();
             let kind = cfg.kind;
@@ -113,7 +133,7 @@ impl Server {
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("tlv-worker-{ch}"))
-                    .spawn(move || worker_loop(rx, fused, projected, dir, kind, metrics, ready))
+                    .spawn(move || worker_loop(rx, shared, dir, kind, metrics, ready))
                     .context("spawn worker")?,
             );
         }
@@ -174,11 +194,9 @@ impl Server {
     }
 }
 
-#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     rx: Receiver<WorkItem>,
-    fused: Arc<FusedAdjacency>,
-    projected: Arc<Matrix>,
+    shared: Arc<PlanState>,
     dir: PathBuf,
     kind: ModelKind,
     metrics: Arc<Metrics>,
@@ -205,7 +223,7 @@ fn worker_loop(
                      replies: &rustc_hash::FxHashMap<u64, Sender<(u64, Vec<(VId, Vec<f32>)>)>>,
                      batcher_used: usize| {
         let targets: Vec<VId> = tags.iter().map(|t| t.target).collect();
-        match exec.embed_all_fused(&fused, &projected, &targets) {
+        match exec.embed_all(&shared.plan, &shared.state, &targets) {
             Ok(m) => {
                 metrics.record_block(batcher_used, block_size);
                 // Group rows back by request.

@@ -9,6 +9,20 @@ use crate::hetgraph::{FusedAdjacency, HetGraph};
 use crate::model::ModelConfig;
 
 /// Walk the per-semantic paradigm in target batches of `batch_size`.
+/// Thin back-compat wrapper for trace-only callers: builds the fused
+/// adjacency internally. Callers that already hold a plan should pass its
+/// adjacency to [`walk_per_semantic_batched_fused`].
+pub fn walk_per_semantic_batched<S: TraceSink>(
+    g: &HetGraph,
+    m: &ModelConfig,
+    batch_size: usize,
+    sink: &mut S,
+) {
+    let fused = FusedAdjacency::build(g);
+    walk_per_semantic_batched_fused(g, &fused, m, batch_size, sink);
+}
+
+/// Batched per-semantic walk over a pre-built vertex-major adjacency.
 ///
 /// Peak memory shrinks to one batch's partials, but every semantic pass
 /// is re-run per batch: shared neighbors are re-fetched across batches
@@ -20,15 +34,15 @@ use crate::model::ModelConfig;
 /// `partition_point`s per (semantic, batch) — the seed code binary-
 /// searched every (target, semantic) pair. The SF phase reads the fused
 /// vertex-major index. Event order is unchanged.
-pub fn walk_per_semantic_batched<S: TraceSink>(
+pub fn walk_per_semantic_batched_fused<S: TraceSink>(
     g: &HetGraph,
+    fused: &FusedAdjacency,
     m: &ModelConfig,
     batch_size: usize,
     sink: &mut S,
 ) {
     let hb = m.hidden_bytes();
     let targets = g.target_vertices();
-    let fused = FusedAdjacency::build(g);
     for batch in targets.chunks(batch_size.max(1)) {
         let (lo, hi) = (batch[0], *batch.last().unwrap());
         // NA per semantic, restricted to this batch.
@@ -114,6 +128,19 @@ mod tests {
         assert!(batched_semantic_passes(&g, 16) > batched_semantic_passes(&g, 256));
         let one_batch = batched_semantic_passes(&g, usize::MAX);
         assert_eq!(one_batch, g.num_semantics() as u64);
+    }
+
+    #[test]
+    fn fused_variant_matches_wrapper() {
+        let g = Dataset::Acm.load(0.05);
+        let m = ModelConfig::new(ModelKind::Rgcn);
+        let fused = g.fused();
+        let mut a = AccessCounter::default();
+        walk_per_semantic_batched(&g, &m, 19, &mut a);
+        let mut b = AccessCounter::default();
+        walk_per_semantic_batched_fused(&g, &fused, &m, 19, &mut b);
+        assert_eq!(a.total, b.total);
+        assert_eq!(a.unique(), b.unique());
     }
 
     #[test]

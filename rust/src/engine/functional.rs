@@ -8,13 +8,20 @@
 //! assert bitwise-identical outputs (same per-semantic reduction order,
 //! same fusion order).
 //!
-//! It also serves as the oracle for the AOT JAX/Pallas artifacts executed
-//! through PJRT (`runtime::executor`).
+//! Since the plan/state split, [`ReferenceEngine`] is a *thin oracle
+//! wrapper* over the shared pieces — one [`InferencePlan`] (parameters +
+//! fused adjacency, built once) and one [`FeatureState`] (the projected
+//! matrix) — so the serial reference paths and the parallel
+//! `engine::fused::FusedEngine` consume literally the same parameters and
+//! features. It also serves as the oracle for the AOT JAX/Pallas artifacts
+//! executed through PJRT (`runtime::executor`).
 
-use super::tensor::{axpy, dot, leaky_relu, Matrix};
+use super::plan::{FeatureState, InferencePlan, ModelParams};
+use super::tensor::{axpy, leaky_relu, Matrix};
 use crate::hetgraph::{HetGraph, SemanticId, VId};
-use crate::model::{ModelConfig, ModelKind};
+use crate::model::ModelConfig;
 use rustc_hash::FxHashMap;
+use std::sync::Arc;
 
 /// Deterministic pseudo-random f32 in [-1, 1) from (tag, i, j).
 /// SplitMix64-based so features are stable across platforms and match the
@@ -57,85 +64,84 @@ pub fn fusion_weight(sem_idx: usize) -> f32 {
     0.5 + 0.5 * det_f32(0xF05E, sem_idx as u64, 0).abs()
 }
 
-/// Reference engine: holds projected features and model parameters.
-pub struct ReferenceEngine<'g> {
-    pub g: &'g HetGraph,
-    pub m: ModelConfig,
-    /// Effective raw input dim per vertex type (capped for test speed; the
-    /// hashing-trick cap preserves the compute *pattern*).
-    pub in_dims: Vec<usize>,
-    pub hidden: usize,
-    /// Projected features h'_v for every vertex, indexed by VId.
-    pub projected: Matrix,
-    /// Per-semantic attention vectors (a_l, a_r) for RGAT-style weighting.
-    attn: Vec<(Vec<f32>, Vec<f32>)>,
-    /// Per-semantic fusion weights β_r (shared with `engine::fused` so the
-    /// fused engine reproduces the fusion bit-for-bit).
-    pub(crate) fusion_w: Vec<f32>,
-}
-
 pub const LEAKY_SLOPE: f32 = 0.01;
 
+/// Reference engine: the serial oracle over one plan and one state.
+pub struct ReferenceEngine<'g> {
+    /// The source graph (per-semantic CSR view — what the oracle walks).
+    pub g: &'g HetGraph,
+    plan: Arc<InferencePlan>,
+    state: FeatureState,
+}
+
 impl<'g> ReferenceEngine<'g> {
-    /// Build the engine: materialize raw features deterministically, project
-    /// them with per-type weights (the FP stage), set up per-semantic
-    /// attention and fusion parameters.
+    /// Build the engine: derive the plan (parameters + fused adjacency)
+    /// and run the serial FP stage. The oracle deliberately projects with
+    /// one thread — `FeatureState::project_all(plan, n)` is asserted
+    /// bitwise-equal to this in `rust/tests/plan_state.rs`.
     pub fn new(g: &'g HetGraph, m: ModelConfig, max_in_dim: usize) -> Self {
-        let hidden = m.hidden_dim as usize;
-        let n = g.num_vertices();
-        let in_dims: Vec<usize> =
-            g.vertex_types.iter().map(|t| (t.feat_dim as usize).min(max_in_dim)).collect();
+        let plan = Arc::new(InferencePlan::build(g, m, max_in_dim));
+        let state = FeatureState::project_all(&plan, 1);
+        ReferenceEngine { g, plan, state }
+    }
 
-        // Per-type projection weights W_t [in_dim, hidden].
-        let weights: Vec<Matrix> =
-            in_dims.iter().enumerate().map(|(t, &d)| projection_weight(t, d, hidden)).collect();
+    /// Wrap an existing plan and state (sharing the plan with other
+    /// engines/executors instead of rebuilding it).
+    pub fn with_plan(g: &'g HetGraph, plan: Arc<InferencePlan>, state: FeatureState) -> Self {
+        ReferenceEngine { g, plan, state }
+    }
 
-        // FP: project every vertex.
-        let mut projected = Matrix::zeros(n, hidden);
-        for (ti, _) in g.vertex_types.iter().enumerate() {
-            let tid = crate::hetgraph::VertexTypeId(ti as u16);
-            let d = in_dims[ti];
-            let w = &weights[ti];
-            for vid in g.type_range(tid) {
-                // Raw feature row for this vertex.
-                let x = raw_feature(vid, d);
-                let out = projected.row_mut(vid as usize);
-                for (i, &xv) in x.iter().enumerate() {
-                    if xv == 0.0 {
-                        continue;
-                    }
-                    axpy(out, w.row(i), xv);
-                }
-            }
-        }
+    /// The shared build-once plan.
+    #[inline]
+    pub fn plan(&self) -> &InferencePlan {
+        &self.plan
+    }
 
-        let attn = (0..g.num_semantics()).map(|s| attention_vectors(s, hidden)).collect();
-        let fusion_w: Vec<f32> = (0..g.num_semantics()).map(fusion_weight).collect();
+    /// A new handle on the shared plan (no copy).
+    pub fn share_plan(&self) -> Arc<InferencePlan> {
+        Arc::clone(&self.plan)
+    }
 
-        ReferenceEngine { g, m, in_dims, hidden, projected, attn, fusion_w }
+    /// The model parameters.
+    #[inline]
+    pub fn params(&self) -> &ModelParams {
+        &self.plan.params
+    }
+
+    /// The mutable feature state.
+    #[inline]
+    pub fn state(&self) -> &FeatureState {
+        &self.state
+    }
+
+    /// The projected feature table h'_v (row v ↔ `VId(v)`).
+    #[inline]
+    pub fn projected(&self) -> &Matrix {
+        &self.state.projected
+    }
+
+    /// Hidden dimension after projection.
+    #[inline]
+    pub fn hidden(&self) -> usize {
+        self.plan.params.hidden
+    }
+
+    /// The model configuration.
+    #[inline]
+    pub fn model(&self) -> &ModelConfig {
+        &self.plan.params.m
+    }
+
+    /// Scatter a layer's output back into the feature table (see
+    /// [`FeatureState::reseed`]) — multi-layer inference mutates only this.
+    pub fn reseed(&mut self, order: &[VId], out: &Matrix) {
+        self.state.reseed(order, out);
     }
 
     /// Edge weight α_{r,u,v} (ComputeEdgeWeight, Algorithm 1 line 5).
     /// `pub(crate)` so `engine::fused` computes identical weights.
     pub(crate) fn edge_weight(&self, sem: SemanticId, u: VId, v: VId, deg: usize) -> f32 {
-        match self.m.kind {
-            // RGCN / NARS: normalized mean aggregation.
-            ModelKind::Rgcn | ModelKind::Nars => 1.0 / deg as f32,
-            // RGAT: unnormalized attention logit through LeakyReLU.
-            // (Softmax normalization is folded into a deterministic scale so
-            // both paradigms compute it identically edge-local; the full
-            // softmax lives in the JAX model.)
-            ModelKind::Rgat => {
-                let (al, ar) = &self.attn[sem.0 as usize];
-                let hu = self.projected.row(u.idx());
-                let hv = self.projected.row(v.idx());
-                let mut e = dot(al, hu) + dot(ar, hv);
-                if e < 0.0 {
-                    e *= LEAKY_SLOPE;
-                }
-                (e / deg as f32).tanh() * 0.5 + 1.0 / deg as f32
-            }
-        }
+        self.plan.params.edge_weight(&self.state.projected, sem, u, v, deg)
     }
 
     /// Aggregate one (target, semantic): partial initialized from h'_v
@@ -146,11 +152,11 @@ impl<'g> ReferenceEngine<'g> {
         if ns.is_empty() {
             return None;
         }
-        let mut acc = self.projected.row(t.idx()).to_vec();
+        let mut acc = self.projected().row(t.idx()).to_vec();
         let deg = ns.len();
         for &u in ns {
             let a = self.edge_weight(csr.semantic, u, t, deg);
-            axpy(&mut acc, self.projected.row(u.idx()), a);
+            axpy(&mut acc, self.projected().row(u.idx()), a);
         }
         Some(acc)
     }
@@ -158,13 +164,13 @@ impl<'g> ReferenceEngine<'g> {
     /// Fuse per-semantic partials into the final embedding (SF stage):
     /// z_v = LeakyReLU( Σ_r β_r · h_v^r ), summed in semantic order.
     fn fuse(&self, t: VId, partials: &[(usize, Vec<f32>)]) -> Vec<f32> {
-        let mut z = vec![0.0f32; self.hidden];
+        let mut z = vec![0.0f32; self.hidden()];
         if partials.is_empty() {
             // Isolated target: embedding is activation of its projection.
-            z.copy_from_slice(self.projected.row(t.idx()));
+            z.copy_from_slice(self.projected().row(t.idx()));
         } else {
             for (sem_idx, p) in partials {
-                axpy(&mut z, p, self.fusion_w[*sem_idx]);
+                axpy(&mut z, p, self.plan.params.fusion_w[*sem_idx]);
             }
         }
         leaky_relu(&mut z, LEAKY_SLOPE);
@@ -172,7 +178,7 @@ impl<'g> ReferenceEngine<'g> {
     }
 
     /// Per-semantic paradigm: all partials computed and stored, then fused.
-    /// Returns embeddings for `order` targets (row i ↔ order[i]).
+    /// Returns embeddings for `order` targets (row i ↔ `order[i]`).
     pub fn embed_per_semantic(&self, order: &[VId]) -> Matrix {
         // Phase 1: NA per semantic, storing every partial (the memory
         // expansion the paper measures).
@@ -185,7 +191,7 @@ impl<'g> ReferenceEngine<'g> {
             }
         }
         // Phase 2: SF.
-        let mut out = Matrix::zeros(order.len(), self.hidden);
+        let mut out = Matrix::zeros(order.len(), self.hidden());
         for (i, &t) in order.iter().enumerate() {
             let partials: Vec<(usize, Vec<f32>)> = (0..self.g.num_semantics())
                 .filter_map(|ci| store.remove(&(t, ci)).map(|p| (ci, p)))
@@ -198,7 +204,7 @@ impl<'g> ReferenceEngine<'g> {
     /// Semantics-complete paradigm (Algorithm 1): per target, aggregate all
     /// semantics then fuse immediately; no global partial store.
     pub fn embed_semantics_complete(&self, order: &[VId]) -> Matrix {
-        let mut out = Matrix::zeros(order.len(), self.hidden);
+        let mut out = Matrix::zeros(order.len(), self.hidden());
         for (i, &t) in order.iter().enumerate() {
             let partials: Vec<(usize, Vec<f32>)> = (0..self.g.num_semantics())
                 .filter_map(|ci| self.aggregate_partial(t, ci).map(|p| (ci, p)))
@@ -213,6 +219,7 @@ impl<'g> ReferenceEngine<'g> {
 mod tests {
     use super::*;
     use crate::datasets::Dataset;
+    use crate::model::ModelKind;
 
     #[test]
     fn det_f32_is_stable_and_bounded() {
@@ -263,5 +270,19 @@ mod tests {
         let z = e.embed_semantics_complete(&order);
         assert!(z.data.iter().all(|v| v.is_finite()));
         assert!(z.data.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn oracle_over_shared_plan_matches_owned_plan() {
+        let g = Dataset::Acm.load(0.03);
+        let m = ModelConfig::new(ModelKind::Rgat);
+        let owned = ReferenceEngine::new(&g, m.clone(), 24);
+        let plan = owned.share_plan();
+        let state = FeatureState::project_all(&plan, 4);
+        let shared = ReferenceEngine::with_plan(&g, plan, state);
+        let order = g.target_vertices();
+        let a = owned.embed_semantics_complete(&order);
+        let b = shared.embed_semantics_complete(&order);
+        assert_eq!(a.max_abs_diff(&b), 0.0);
     }
 }

@@ -1,16 +1,19 @@
-//! Zero-allocation parallel semantics-complete engine over the fused
-//! vertex-major adjacency.
+//! Zero-allocation parallel semantics-complete executor over the plan/state
+//! split.
 //!
-//! [`FusedEngine`] computes the same embeddings as
-//! `ReferenceEngine::embed_semantics_complete` — **bitwise identical**,
-//! because per target it performs the exact same float operations in the
-//! exact same order (partial initialized from the target's projection,
-//! neighbors accumulated in CSR order with the same edge weights, partials
-//! fused in ascending-semantic order, LeakyReLU last) — but restructured
-//! the way the paper's Algorithm 1 intends:
+//! [`FusedEngine`] is a *thin executor* over one immutable
+//! [`InferencePlan`] (fused vertex-major adjacency + model parameters) and
+//! one [`FeatureState`] (the projected matrix). It computes the same
+//! embeddings as `ReferenceEngine::embed_semantics_complete` — **bitwise
+//! identical**, because per target it performs the exact same float
+//! operations in the exact same order (partial initialized from the
+//! target's projection, neighbors accumulated in CSR order with the same
+//! edge weights, partials fused in ascending-semantic order, LeakyReLU
+//! last) — but restructured the way the paper's Algorithm 1 intends:
 //!
-//! * adjacency reads go through [`FusedAdjacency`] — zero binary searches,
-//!   one contiguous entry slice per target;
+//! * adjacency reads go through the plan's [`FusedAdjacency`] — zero
+//!   binary searches, one contiguous entry slice per target, one transpose
+//!   shared by every layer and every engine;
 //! * one scratch partial buffer per worker, reused across every target —
 //!   no per-(target, semantic) allocation, no hash maps, no global partial
 //!   store (the memory-expansion driver of the per-semantic paradigm);
@@ -19,31 +22,37 @@
 //!   output matrix. Any thread count produces the same bits.
 
 use super::functional::{ReferenceEngine, LEAKY_SLOPE};
+use super::plan::{FeatureState, InferencePlan};
 use super::tensor::{axpy, leaky_relu, Matrix};
 use crate::grouping::Grouping;
 use crate::hetgraph::{FusedAdjacency, VId};
 
 /// Parallel semantics-complete executor (see module docs).
-pub struct FusedEngine<'e, 'g> {
-    eng: &'e ReferenceEngine<'g>,
-    fused: FusedAdjacency,
+pub struct FusedEngine<'a> {
+    plan: &'a InferencePlan,
+    state: &'a FeatureState,
 }
 
-impl<'e, 'g> FusedEngine<'e, 'g> {
-    /// Build the fused adjacency from the engine's graph and wrap it.
-    pub fn new(eng: &'e ReferenceEngine<'g>) -> Self {
-        let fused = FusedAdjacency::build(eng.g);
-        FusedEngine { eng, fused }
+impl<'a> FusedEngine<'a> {
+    /// Execute over an explicit plan and state — the primary constructor.
+    pub fn over(plan: &'a InferencePlan, state: &'a FeatureState) -> Self {
+        FusedEngine { plan, state }
     }
 
-    /// Wrap a pre-built adjacency (e.g. one shared across engines).
-    pub fn with_adjacency(eng: &'e ReferenceEngine<'g>, fused: FusedAdjacency) -> Self {
-        FusedEngine { eng, fused }
+    /// Borrow the pieces out of a reference engine (shares its plan's
+    /// adjacency — nothing is rebuilt).
+    pub fn new(eng: &'a ReferenceEngine<'_>) -> Self {
+        FusedEngine { plan: eng.plan(), state: eng.state() }
     }
 
     /// The underlying vertex-major adjacency.
     pub fn adjacency(&self) -> &FusedAdjacency {
-        &self.fused
+        self.plan.adjacency()
+    }
+
+    /// The plan this executor runs over.
+    pub fn plan(&self) -> &InferencePlan {
+        self.plan
     }
 
     /// Default worker count: one per available core.
@@ -52,11 +61,11 @@ impl<'e, 'g> FusedEngine<'e, 'g> {
     }
 
     /// Semantics-complete embeddings for `order` targets (row i ↔
-    /// order[i]), computed by `threads` workers. Bitwise identical to
+    /// `order[i]`), computed by `threads` workers. Bitwise identical to
     /// `ReferenceEngine::embed_semantics_complete(order)` for every thread
     /// count — parallelism is across targets, which are independent.
     pub fn embed_semantics_complete(&self, order: &[VId], threads: usize) -> Matrix {
-        let h = self.eng.hidden;
+        let h = self.plan.params.hidden;
         let mut out = Matrix::zeros(order.len(), h);
         if order.is_empty() || h == 0 {
             return out;
@@ -78,7 +87,7 @@ impl<'e, 'g> FusedEngine<'e, 'g> {
     }
 
     /// Embed in the locality-preserving grouped order (paper §IV-C):
-    /// returns `(flat order, embeddings)` with row i ↔ order[i].
+    /// returns `(flat order, embeddings)` with row i ↔ `order[i]`.
     pub fn embed_grouped(&self, grouping: &Grouping, threads: usize) -> (Vec<VId>, Matrix) {
         let order = grouping.flat_order();
         let m = self.embed_semantics_complete(&order, threads);
@@ -88,7 +97,7 @@ impl<'e, 'g> FusedEngine<'e, 'g> {
     /// One worker's stripe: a single scratch partial reused for every
     /// target; `out` holds `targets.len()` rows.
     fn embed_range(&self, targets: &[VId], out: &mut [f32]) {
-        let h = self.eng.hidden;
+        let h = self.plan.params.hidden;
         let mut partial = vec![0.0f32; h]; // the only allocation, per worker
         for (i, &t) in targets.iter().enumerate() {
             self.embed_into(t, &mut partial, &mut out[i * h..(i + 1) * h]);
@@ -99,24 +108,26 @@ impl<'e, 'g> FusedEngine<'e, 'g> {
     /// `ReferenceEngine::{aggregate_partial, fuse}`).
     #[inline]
     fn embed_into(&self, t: VId, partial: &mut [f32], z: &mut [f32]) {
-        let eng = self.eng;
-        let entries = self.fused.entries_of(t);
+        let params = &self.plan.params;
+        let projected = &self.state.projected;
+        let fused = self.plan.adjacency();
+        let entries = fused.entries_of(t);
         if entries.is_empty() {
             // Isolated target: embedding is activation of its projection.
-            z.copy_from_slice(eng.projected.row(t.idx()));
+            z.copy_from_slice(projected.row(t.idx()));
         } else {
             z.fill(0.0);
             for e in entries {
-                let ns = self.fused.neighbors(e);
+                let ns = fused.neighbors(e);
                 // Partial initialized from h'_v (Algorithm 1 line 3).
-                partial.copy_from_slice(eng.projected.row(t.idx()));
+                partial.copy_from_slice(projected.row(t.idx()));
                 let deg = ns.len();
                 for &u in ns {
-                    let a = eng.edge_weight(e.semantic, u, t, deg);
-                    axpy(partial, eng.projected.row(u.idx()), a);
+                    let a = params.edge_weight(projected, e.semantic, u, t, deg);
+                    axpy(partial, projected.row(u.idx()), a);
                 }
                 // Immediate fusion (line 9): the partial dies right here.
-                axpy(z, partial, eng.fusion_w[e.semantic.0 as usize]);
+                axpy(z, partial, params.fusion_w[e.semantic.0 as usize]);
             }
         }
         leaky_relu(z, LEAKY_SLOPE);
@@ -173,5 +184,19 @@ mod tests {
         let (order, m) = f.embed_grouped(&grouping, 2);
         assert_eq!(order.len(), g.target_vertices().len());
         assert_eq!(m.rows, order.len());
+    }
+
+    #[test]
+    fn over_explicit_plan_and_state_matches_reference() {
+        let g = Dataset::Dblp.load(0.03);
+        let m = ModelConfig::new(ModelKind::Rgat);
+        let plan = InferencePlan::build(&g, m.clone(), 24);
+        let state = FeatureState::project_all(&plan, 4);
+        let f = FusedEngine::over(&plan, &state);
+        let e = ReferenceEngine::new(&g, m, 24);
+        let order = g.target_vertices();
+        let want = e.embed_semantics_complete(&order);
+        let got = f.embed_semantics_complete(&order, 3);
+        assert_eq!(want.max_abs_diff(&got), 0.0);
     }
 }

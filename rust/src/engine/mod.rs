@@ -2,6 +2,13 @@
 //! semantics-complete), CPU reference numerics, the zero-allocation
 //! parallel fused engine, and the memory/access accounting behind the
 //! paper's motivation and evaluation metrics.
+//!
+//! The core is split along the paper's layer-invariance line (`plan`):
+//! an immutable [`InferencePlan`] (fused adjacency + [`ModelParams`],
+//! built once per (graph, model)) vs a mutable [`FeatureState`] (the
+//! projected matrix, re-seeded between layers). [`ReferenceEngine`] is
+//! the serial oracle over those pieces; [`FusedEngine`] the parallel
+//! executor; `multilayer` runs whole stacks on one plan.
 
 pub mod access;
 pub mod batchwise;
@@ -10,17 +17,25 @@ pub mod fused;
 pub mod multilayer;
 pub mod memory;
 pub mod paradigm;
+pub mod plan;
 pub mod tensor;
 pub mod trace;
 
 pub use access::{AccessCounter, AccessReport};
-pub use batchwise::{batched_semantic_passes, walk_per_semantic_batched};
+pub use batchwise::{
+    batched_semantic_passes, walk_per_semantic_batched, walk_per_semantic_batched_fused,
+};
 pub use functional::ReferenceEngine;
 pub use fused::FusedEngine;
 pub use memory::{MemoryReport, MemoryTracker};
+pub use multilayer::{
+    embed_layers_fused, embed_layers_per_semantic, embed_layers_semantics_complete,
+    walk_layers_semantics_complete,
+};
 pub use paradigm::{
     walk_per_semantic, walk_per_semantic_fused, walk_semantics_complete,
     walk_semantics_complete_fused, walk_semantics_complete_unfused,
 };
+pub use plan::{FeatureState, InferencePlan, ModelParams};
 pub use tensor::Matrix;
 pub use trace::{NullSink, StreamSink, TeeSink, TraceSink};

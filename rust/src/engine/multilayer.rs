@@ -1,46 +1,69 @@
-//! Multi-layer HGNN inference.
+//! Multi-layer HGNN inference over one shared plan.
 //!
 //! The paper's formulation (§II-B) is per-layer; real RGCN/RGAT stacks
 //! 2-3 layers where layer l+1 consumes layer l's embeddings as features.
-//! Under the semantics-complete paradigm each layer is a full
-//! vertex-centric pass; the embedding matrix simply replaces the
-//! projected-feature matrix between layers. This module provides the
-//! layered reference numerics (used to extend the equivalence proof to
-//! depth > 1) and the layered trace walk for memory accounting.
+//! Under the semantics-complete paradigm the graph structure is
+//! layer-invariant — only vertex features change — so a whole stack runs
+//! on **one** [`InferencePlan`] (one adjacency transpose, one parameter
+//! derivation): [`embed_layers_fused`] re-seeds a single [`FeatureState`]
+//! between layers and runs every layer on the parallel fused path. The
+//! per-semantic oracle ([`embed_layers_per_semantic`]) extends the
+//! equivalence proof to depth > 1, and the layered trace walk provides
+//! memory accounting.
 
+use super::fused::FusedEngine;
 use super::functional::ReferenceEngine;
+use super::plan::{FeatureState, InferencePlan};
 use super::tensor::Matrix;
 use super::trace::TraceSink;
 use crate::hetgraph::{FusedAdjacency, HetGraph, VId};
 use crate::model::ModelConfig;
 
-/// Layered embeddings via the semantics-complete schedule.
+/// Layered embeddings over a shared plan: every layer runs the parallel
+/// fused semantics-complete path with `threads` workers, and between
+/// layers the state is re-seeded with the previous layer's output for the
+/// targets (non-targets keep their projected raw features — the standard
+/// heterogeneous trick when only the target type is embedded).
 ///
-/// Layer 0 uses the engine's projected raw features; deeper layers re-seed
-/// `projected` with the previous layer's output for *all* vertices (target
-/// embeddings where available, re-projected features for non-targets — the
-/// standard heterogeneous trick when only the target type is embedded).
+/// Exactly one `FusedAdjacency` exists for the whole stack (the plan's),
+/// and the result is bitwise identical to the per-semantic oracle at every
+/// depth and thread count.
+pub fn embed_layers_fused(
+    plan: &InferencePlan,
+    state: &mut FeatureState,
+    order: &[VId],
+    layers: usize,
+    threads: usize,
+) -> Matrix {
+    assert!(layers >= 1);
+    let mut out = FusedEngine::over(plan, state).embed_semantics_complete(order, threads);
+    for _ in 1..layers {
+        // Scatter layer output back into the feature table; the plan
+        // (adjacency + parameters) is untouched.
+        state.reseed(order, &out);
+        out = FusedEngine::over(plan, state).embed_semantics_complete(order, threads);
+    }
+    out
+}
+
+/// Layered embeddings via the semantics-complete schedule — convenience
+/// wrapper that builds one plan, projects in parallel, and delegates to
+/// [`embed_layers_fused`] with one worker per core.
 pub fn embed_layers_semantics_complete(
     g: &HetGraph,
     m: &ModelConfig,
     layers: usize,
     max_in_dim: usize,
 ) -> Matrix {
-    assert!(layers >= 1);
-    let mut engine = ReferenceEngine::new(g, m.clone(), max_in_dim);
+    let threads = FusedEngine::default_threads();
+    let plan = InferencePlan::build(g, m.clone(), max_in_dim);
+    let mut state = FeatureState::project_all(&plan, threads);
     let order: Vec<VId> = g.target_vertices();
-    let mut out = engine.embed_semantics_complete(&order);
-    for _ in 1..layers {
-        // Scatter layer output back into the feature table.
-        for (i, &t) in order.iter().enumerate() {
-            engine.projected.row_mut(t.idx()).copy_from_slice(out.row(i));
-        }
-        out = engine.embed_semantics_complete(&order);
-    }
-    out
+    embed_layers_fused(&plan, &mut state, &order, layers, threads)
 }
 
-/// Same, under the per-semantic schedule — the layered equivalence oracle.
+/// Same, under the per-semantic schedule — the layered equivalence oracle
+/// (serial reference numerics, one re-seed between layers).
 pub fn embed_layers_per_semantic(
     g: &HetGraph,
     m: &ModelConfig,
@@ -52,9 +75,7 @@ pub fn embed_layers_per_semantic(
     let order: Vec<VId> = g.target_vertices();
     let mut out = engine.embed_per_semantic(&order);
     for _ in 1..layers {
-        for (i, &t) in order.iter().enumerate() {
-            engine.projected.row_mut(t.idx()).copy_from_slice(out.row(i));
-        }
+        engine.reseed(&order, &out);
         out = engine.embed_per_semantic(&order);
     }
     out
@@ -102,6 +123,18 @@ mod tests {
         let l1 = embed_layers_semantics_complete(&g, &m, 1, 24);
         let l2 = embed_layers_semantics_complete(&g, &m, 2, 24);
         assert!(l1.max_abs_diff(&l2) > 0.0);
+    }
+
+    #[test]
+    fn shared_plan_layers_match_wrapper() {
+        let g = Dataset::Imdb.load(0.03);
+        let m = ModelConfig::new(ModelKind::Rgat);
+        let want = embed_layers_semantics_complete(&g, &m, 3, 24);
+        let plan = InferencePlan::build(&g, m.clone(), 24);
+        let mut state = FeatureState::project_all(&plan, 2);
+        let order = g.target_vertices();
+        let got = embed_layers_fused(&plan, &mut state, &order, 3, 4);
+        assert_eq!(want.max_abs_diff(&got), 0.0);
     }
 
     #[test]

@@ -80,10 +80,11 @@ pub fn walk_per_semantic_fused<S: TraceSink>(
 
 /// Semantics-complete walk (Algorithm 1) over targets in `order`.
 ///
-/// Builds the fused adjacency once and delegates to
-/// [`walk_semantics_complete_fused`]; callers that walk repeatedly (e.g.
-/// multi-layer inference) should build [`FusedAdjacency`] themselves and
-/// call the fused variant directly.
+/// Thin back-compat wrapper for trace-only callers: builds the fused
+/// adjacency once and delegates to [`walk_semantics_complete_fused`].
+/// Callers that walk repeatedly (e.g. multi-layer inference) should hold
+/// an `engine::InferencePlan` (or a [`FusedAdjacency`]) and pass its
+/// adjacency to the fused variant directly.
 pub fn walk_semantics_complete<S: TraceSink>(
     g: &HetGraph,
     m: &ModelConfig,

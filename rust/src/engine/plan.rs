@@ -1,0 +1,315 @@
+//! Build-once inference plan vs per-layer feature state.
+//!
+//! The semantics-complete paradigm makes graph structure *layer-invariant*:
+//! across a multi-layer inference pass only the vertex features change, the
+//! fused adjacency and model parameters do not. This module splits the
+//! engine core along exactly that line:
+//!
+//! * [`ModelParams`] — per-vertex-type projection weights, per-semantic
+//!   attention vectors and fusion weights. Graph-borrow-free and cheap to
+//!   share; derived deterministically from the same hashes the Python side
+//!   uses (`engine::functional::det_f32`).
+//! * [`InferencePlan`] — the immutable build-once product of one
+//!   (graph, model) pair: an `Arc<FusedAdjacency>` (one transpose, reused
+//!   by every layer, engine, worker and simulator), the [`ModelParams`],
+//!   and the dataset metadata needed to project features without holding a
+//!   graph borrow (vertex-type bases). Sharable across threads via `Arc`.
+//! * [`FeatureState`] — the one mutable piece: the projected feature
+//!   matrix. [`FeatureState::project_all`] runs the FP stage in parallel
+//!   across vertex stripes (rows are independent, so any thread count is
+//!   bitwise identical to the serial seed path), and
+//!   [`FeatureState::reseed`] scatters a layer's output back into the
+//!   table so the next layer can run on the *same* plan.
+//!
+//! Executors compose the pieces: `FusedEngine` runs over
+//! `(&InferencePlan, &FeatureState)`, `ReferenceEngine` wraps one plan and
+//! one state as the serial oracle, and `engine::multilayer` re-seeds a
+//! single state between layers instead of rebuilding anything.
+
+use super::functional::{
+    attention_vectors, fusion_weight, projection_weight, raw_feature, LEAKY_SLOPE,
+};
+use super::tensor::{axpy, dot, Matrix};
+use crate::hetgraph::{FusedAdjacency, HetGraph, SemanticId, VId};
+use crate::model::{ModelConfig, ModelKind};
+use std::sync::Arc;
+
+/// Model parameters shared by every execution path (CPU reference, fused
+/// parallel engine, PJRT block executor regenerates the same values).
+/// Holds no graph borrow — deriving it consumes the graph's *shape* only.
+#[derive(Debug, Clone)]
+pub struct ModelParams {
+    /// The model configuration these parameters were derived for.
+    pub m: ModelConfig,
+    /// Effective raw input dim per vertex type (capped for test speed; the
+    /// hashing-trick cap preserves the compute *pattern*).
+    pub in_dims: Vec<usize>,
+    /// Hidden dimension after projection.
+    pub hidden: usize,
+    /// Per-type projection weights W_t `[in_dims[t], hidden]`.
+    pub weights: Vec<Matrix>,
+    /// Per-semantic attention vectors (a_l, a_r) for RGAT-style weighting.
+    attn: Vec<(Vec<f32>, Vec<f32>)>,
+    /// Per-semantic fusion weights β_r (shared by reference and fused
+    /// engines so fusion is bit-for-bit identical).
+    pub fusion_w: Vec<f32>,
+}
+
+impl ModelParams {
+    /// Derive all parameters for `(g, m)` deterministically.
+    pub fn derive(g: &HetGraph, m: ModelConfig, max_in_dim: usize) -> ModelParams {
+        let hidden = m.hidden_dim as usize;
+        let in_dims: Vec<usize> =
+            g.vertex_types.iter().map(|t| (t.feat_dim as usize).min(max_in_dim)).collect();
+        let weights: Vec<Matrix> =
+            in_dims.iter().enumerate().map(|(t, &d)| projection_weight(t, d, hidden)).collect();
+        let attn = (0..g.num_semantics()).map(|s| attention_vectors(s, hidden)).collect();
+        let fusion_w: Vec<f32> = (0..g.num_semantics()).map(fusion_weight).collect();
+        ModelParams { m, in_dims, hidden, weights, attn, fusion_w }
+    }
+
+    /// Edge weight α_{r,u,v} (ComputeEdgeWeight, Algorithm 1 line 5),
+    /// computed against a projected feature table. Identical math on every
+    /// execution path.
+    #[inline]
+    pub fn edge_weight(
+        &self,
+        projected: &Matrix,
+        sem: SemanticId,
+        u: VId,
+        v: VId,
+        deg: usize,
+    ) -> f32 {
+        match self.m.kind {
+            // RGCN / NARS: normalized mean aggregation.
+            ModelKind::Rgcn | ModelKind::Nars => 1.0 / deg as f32,
+            // RGAT: unnormalized attention logit through LeakyReLU.
+            // (Softmax normalization is folded into a deterministic scale so
+            // both paradigms compute it identically edge-local; the full
+            // softmax lives in the JAX model.)
+            ModelKind::Rgat => {
+                let (al, ar) = &self.attn[sem.0 as usize];
+                let hu = projected.row(u.idx());
+                let hv = projected.row(v.idx());
+                let mut e = dot(al, hu) + dot(ar, hv);
+                if e < 0.0 {
+                    e *= LEAKY_SLOPE;
+                }
+                (e / deg as f32).tanh() * 0.5 + 1.0 / deg as f32
+            }
+        }
+    }
+}
+
+/// The immutable build-once product of one (graph, model) pair: fused
+/// adjacency + parameters + the dataset metadata feature projection needs.
+/// See module docs. Share across threads as `Arc<InferencePlan>`.
+#[derive(Debug, Clone)]
+pub struct InferencePlan {
+    /// Source dataset name (diagnostics only).
+    pub dataset: String,
+    /// All model parameters.
+    pub params: ModelParams,
+    /// The vertex-major adjacency, transposed exactly once.
+    fused: Arc<FusedAdjacency>,
+    /// Ascending global base VId per vertex type, with a total-vertex-count
+    /// sentinel appended (types tile `0..num_vertices` contiguously).
+    type_base: Vec<u32>,
+    /// Total vertex count across all types.
+    num_vertices: usize,
+}
+
+impl InferencePlan {
+    /// Build the plan for `(g, m)`: one adjacency transpose + parameter
+    /// derivation. This is the only place the engine stack transposes.
+    pub fn build(g: &HetGraph, m: ModelConfig, max_in_dim: usize) -> InferencePlan {
+        Self::with_adjacency(g, m, max_in_dim, Arc::new(FusedAdjacency::build(g)))
+    }
+
+    /// Build around a pre-built (possibly already shared) adjacency.
+    pub fn with_adjacency(
+        g: &HetGraph,
+        m: ModelConfig,
+        max_in_dim: usize,
+        fused: Arc<FusedAdjacency>,
+    ) -> InferencePlan {
+        let params = ModelParams::derive(g, m, max_in_dim);
+        let mut type_base = g.type_base.clone();
+        type_base.push(g.num_vertices() as u32);
+        InferencePlan {
+            dataset: g.name.clone(),
+            params,
+            fused,
+            type_base,
+            num_vertices: g.num_vertices(),
+        }
+    }
+
+    /// The shared vertex-major adjacency.
+    #[inline]
+    pub fn adjacency(&self) -> &FusedAdjacency {
+        &self.fused
+    }
+
+    /// A new handle on the shared adjacency (no copy).
+    pub fn share_adjacency(&self) -> Arc<FusedAdjacency> {
+        Arc::clone(&self.fused)
+    }
+
+    /// Total vertex count of the source graph.
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.num_vertices
+    }
+
+    /// Hidden dimension of the model.
+    #[inline]
+    pub fn hidden(&self) -> usize {
+        self.params.hidden
+    }
+
+    /// Vertex-type index of a global vid (types are contiguous ascending
+    /// ranges, so this is one `partition_point` over a handful of bases).
+    #[inline]
+    pub fn type_of(&self, vid: u32) -> usize {
+        debug_assert!((vid as usize) < self.num_vertices);
+        self.type_base.partition_point(|&b| b <= vid) - 1
+    }
+}
+
+/// The mutable per-layer piece: the projected feature table h'_v for every
+/// vertex, indexed by `VId`. Built once by [`FeatureState::project_all`]
+/// (the FP stage), then re-seeded between layers.
+#[derive(Debug, Clone)]
+pub struct FeatureState {
+    /// Projected features, row v ↔ `VId(v)`.
+    pub projected: Matrix,
+}
+
+impl FeatureState {
+    /// FP stage: project every vertex through its type's weights, using
+    /// `threads` workers over contiguous vertex stripes. Rows are
+    /// independent, so **any thread count produces the same bits** as the
+    /// serial seed path (`threads == 1` *is* the seed path).
+    pub fn project_all(plan: &InferencePlan, threads: usize) -> FeatureState {
+        let n = plan.num_vertices;
+        let h = plan.params.hidden;
+        let mut projected = Matrix::zeros(n, h);
+        if n > 0 && h > 0 {
+            let threads = threads.clamp(1, n);
+            if threads == 1 {
+                project_rows(plan, 0, &mut projected.data);
+            } else {
+                let chunk = n.div_ceil(threads);
+                std::thread::scope(|s| {
+                    for (ci, stripe) in projected.data.chunks_mut(chunk * h).enumerate() {
+                        s.spawn(move || project_rows(plan, ci * chunk, stripe));
+                    }
+                });
+            }
+        }
+        FeatureState { projected }
+    }
+
+    /// Wrap an externally produced projection (e.g. the PJRT `fp_block`
+    /// output on the serving path).
+    pub fn from_projected(projected: Matrix) -> FeatureState {
+        FeatureState { projected }
+    }
+
+    /// Scatter layer-l output rows back into the feature table (row i of
+    /// `out` replaces the feature of `order[i]`), leaving every other
+    /// vertex untouched — multi-layer inference re-seeds one state instead
+    /// of rebuilding engines or adjacencies.
+    pub fn reseed(&mut self, order: &[VId], out: &Matrix) {
+        assert_eq!(order.len(), out.rows, "order/output row mismatch");
+        assert_eq!(out.cols, self.projected.cols, "hidden dim mismatch");
+        for (i, &t) in order.iter().enumerate() {
+            self.projected.row_mut(t.idx()).copy_from_slice(out.row(i));
+        }
+    }
+}
+
+/// Project the contiguous vid range starting at `base` into `out` (one row
+/// of `plan.hidden()` floats per vid). Exact same per-row float ops as the
+/// seed serial FP loop.
+fn project_rows(plan: &InferencePlan, base: usize, out: &mut [f32]) {
+    let h = plan.params.hidden;
+    debug_assert_eq!(out.len() % h.max(1), 0);
+    for (r, row) in out.chunks_exact_mut(h).enumerate() {
+        let vid = (base + r) as u32;
+        let ti = plan.type_of(vid);
+        let d = plan.params.in_dims[ti];
+        let w = &plan.params.weights[ti];
+        let x = raw_feature(vid, d);
+        for (i, &xv) in x.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            axpy(row, w.row(i), xv);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::Dataset;
+    use crate::model::ModelKind;
+
+    #[test]
+    fn plan_shares_one_adjacency() {
+        let g = Dataset::Acm.load(0.03);
+        let plan = InferencePlan::build(&g, ModelConfig::new(ModelKind::Rgcn), 16);
+        let a = plan.share_adjacency();
+        let b = plan.share_adjacency();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(plan.adjacency().num_targets(), g.target_vertices().len());
+        plan.adjacency().validate(&g).unwrap();
+    }
+
+    #[test]
+    fn type_of_matches_graph() {
+        let g = Dataset::Imdb.load(0.03);
+        let plan = InferencePlan::build(&g, ModelConfig::new(ModelKind::Rgcn), 16);
+        for vid in 0..g.num_vertices() as u32 {
+            let want = g.type_of(crate::hetgraph::VId(vid)).0 as usize;
+            assert_eq!(plan.type_of(vid), want, "vid {vid}");
+        }
+    }
+
+    #[test]
+    fn parallel_fp_bitwise_equals_serial() {
+        let g = Dataset::Acm.load(0.03);
+        let plan = InferencePlan::build(&g, ModelConfig::new(ModelKind::Rgat), 24);
+        let serial = FeatureState::project_all(&plan, 1);
+        for threads in [2usize, 3, 8, 64] {
+            let par = FeatureState::project_all(&plan, threads);
+            assert_eq!(serial.projected.max_abs_diff(&par.projected), 0.0, "t={threads}");
+        }
+    }
+
+    #[test]
+    fn reseed_scatters_only_ordered_rows() {
+        let g = Dataset::Acm.load(0.03);
+        let plan = InferencePlan::build(&g, ModelConfig::new(ModelKind::Rgcn), 16);
+        let mut state = FeatureState::project_all(&plan, 2);
+        let before = state.projected.clone();
+        let order = g.target_vertices();
+        let out = Matrix::from_fn(order.len(), plan.hidden(), |r, c| (r * 7 + c) as f32);
+        state.reseed(&order, &out);
+        for (i, &t) in order.iter().enumerate() {
+            assert_eq!(state.projected.row(t.idx()), out.row(i));
+        }
+        let target_range = g.type_range(g.target_type);
+        for vid in 0..g.num_vertices() as u32 {
+            if !target_range.contains(&vid) {
+                assert_eq!(
+                    state.projected.row(vid as usize),
+                    before.row(vid as usize),
+                    "non-target row {vid} changed"
+                );
+            }
+        }
+    }
+}

@@ -69,16 +69,46 @@ impl Matrix {
     }
 }
 
-/// Vector helpers used by aggregation.
+/// Vector helpers used by aggregation. Both are unrolled 4-wide with a
+/// scalar tail: the fused engine's hot loop is one `axpy` per edge at
+/// hidden=64, and the scalar seed loops left the optimizer with a strict
+/// sequential dependence. `axpy` lanes are element-independent, so the
+/// unrolled version is **bitwise identical** to the scalar seed; `dot`
+/// uses four independent accumulators, which changes the reduction order
+/// (not the math) — every engine and paradigm shares this one `dot`, so
+/// cross-engine equivalence stays bitwise.
 pub fn axpy(acc: &mut [f32], x: &[f32], a: f32) {
     debug_assert_eq!(acc.len(), x.len());
-    for (o, &v) in acc.iter_mut().zip(x) {
+    let wide = acc.len() / 4 * 4;
+    let (acc_w, acc_t) = acc.split_at_mut(wide);
+    let (x_w, x_t) = x.split_at(wide);
+    for (o, v) in acc_w.chunks_exact_mut(4).zip(x_w.chunks_exact(4)) {
+        o[0] += a * v[0];
+        o[1] += a * v[1];
+        o[2] += a * v[2];
+        o[3] += a * v[3];
+    }
+    for (o, &v) in acc_t.iter_mut().zip(x_t) {
         *o += a * v;
     }
 }
 
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    a.iter().zip(b).map(|(x, y)| x * y).sum()
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len().min(b.len());
+    let wide = n / 4 * 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for (x, y) in a[..wide].chunks_exact(4).zip(b[..wide].chunks_exact(4)) {
+        s0 += x[0] * y[0];
+        s1 += x[1] * y[1];
+        s2 += x[2] * y[2];
+        s3 += x[3] * y[3];
+    }
+    let mut tail = 0.0f32;
+    for (x, y) in a[wide..n].iter().zip(&b[wide..n]) {
+        tail += x * y;
+    }
+    (s0 + s1) + (s2 + s3) + tail
 }
 
 pub fn leaky_relu(x: &mut [f32], slope: f32) {
@@ -125,5 +155,33 @@ mod tests {
     #[test]
     fn dot_product() {
         assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+    }
+
+    #[test]
+    fn axpy_unrolled_matches_scalar_all_lengths() {
+        for n in 0..13usize {
+            let x: Vec<f32> = (0..n).map(|i| (i as f32) * 0.25 - 1.0).collect();
+            let mut got: Vec<f32> = (0..n).map(|i| i as f32).collect();
+            let mut want = got.clone();
+            axpy(&mut got, &x, 0.75);
+            for (o, &v) in want.iter_mut().zip(&x) {
+                *o += 0.75 * v;
+            }
+            assert_eq!(got, want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn dot_unrolled_covers_wide_and_tail() {
+        for n in 0..13usize {
+            let a: Vec<f32> = (0..n).map(|i| i as f32 + 1.0).collect();
+            let b: Vec<f32> = (0..n).map(|i| 2.0 - i as f32 * 0.5).collect();
+            let got = dot(&a, &b);
+            // Compare against a reference accumulation with tolerance: the
+            // 4-wide reduction order differs from strict left-to-right.
+            let want: f64 =
+                a.iter().zip(&b).map(|(x, y)| *x as f64 * *y as f64).sum();
+            assert!((got as f64 - want).abs() < 1e-4, "n={n}: {got} vs {want}");
+        }
     }
 }

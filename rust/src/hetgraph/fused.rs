@@ -175,6 +175,14 @@ impl FusedAdjacency {
         (i < self.num_targets).then_some(i)
     }
 
+    /// All target-type vertices (isolated ones included) in ascending VId
+    /// order — the same list as `HetGraph::target_vertices`, recoverable
+    /// from the transpose alone so plan-only consumers (engine executors,
+    /// multi-layer drivers) need no graph borrow to build an order.
+    pub fn target_vertices(&self) -> Vec<VId> {
+        (0..self.num_targets as u32).map(|i| VId(self.base + i)).collect()
+    }
+
     /// All cross-semantic neighborhoods of `t`, O(1) — no binary search.
     /// Empty for isolated targets and VIds outside the target range.
     #[inline]
@@ -312,6 +320,13 @@ mod tests {
         assert!(f.entries_of(VId(2)).is_empty()); // isolated target
         assert!(f.entries_of(VId(5)).is_empty()); // source-type vertex
         assert_eq!(f.total_degree(VId(2)), 0);
+    }
+
+    #[test]
+    fn target_vertices_match_graph() {
+        let g = tiny();
+        let f = FusedAdjacency::build(&g);
+        assert_eq!(f.target_vertices(), g.target_vertices());
     }
 
     #[test]

@@ -28,8 +28,8 @@ pub mod util;
 pub mod prelude {
     pub use crate::datasets::Dataset;
     pub use crate::engine::{
-        walk_per_semantic, walk_semantics_complete, AccessCounter, FusedEngine, MemoryReport,
-        MemoryTracker, ReferenceEngine, TraceSink,
+        walk_per_semantic, walk_semantics_complete, AccessCounter, FeatureState, FusedEngine,
+        InferencePlan, MemoryReport, MemoryTracker, ModelParams, ReferenceEngine, TraceSink,
     };
     pub use crate::hetgraph::{
         FusedAdjacency, HetGraph, HetGraphBuilder, SemanticId, VId, VertexTypeId,

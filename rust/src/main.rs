@@ -3,13 +3,15 @@
 //! Subcommands (arg parsing is hand-rolled — no CLI crates are vendored in
 //! this environment):
 //!
-//!   stats   <dataset> [--scale S]            graph statistics (Fig. 2 inputs)
-//!   sim     <dataset> [--model M] [--mode X] cycle simulation, one config
-//!   ablate  <dataset> [--model M]            all four -B/-S/-P/-O configs
-//!   group   <dataset> [--scale S]            grouping quality report
-//!   compare <dataset> [--model M]            TLV vs A100 vs HiHGNN
-//!   bench-table <fig2|fig7|fig8|fig9|table3|table4>   paper table
-//!   serve   [--model M] [--scale S]          demo serving loop (needs artifacts)
+//! ```text
+//! stats   <dataset> [--scale S]            graph statistics (Fig. 2 inputs)
+//! sim     <dataset> [--model M] [--mode X] cycle simulation, one config
+//! ablate  <dataset> [--model M]            all four -B/-S/-P/-O configs
+//! group   <dataset> [--scale S]            grouping quality report
+//! compare <dataset> [--model M]            TLV vs A100 vs HiHGNN
+//! bench-table <fig2|fig7|fig8|fig9|table3|table4>   paper table
+//! serve   [--model M] [--scale S]          demo serving loop (needs artifacts)
+//! ```
 
 use std::process::exit;
 use tlv_hgnn::baselines::{run_a100, run_hihgnn, GpuConfig, HiHgnnConfig};

@@ -19,7 +19,7 @@ use super::pjrt::{CompiledArtifact, PjrtRuntime};
 use crate::engine::functional::{
     attention_vectors, fusion_weight, projection_weight, raw_feature,
 };
-use crate::engine::Matrix;
+use crate::engine::{FeatureState, InferencePlan, Matrix};
 use crate::hetgraph::{FusedAdjacency, HetGraph, VId, VertexTypeId};
 use crate::model::ModelKind;
 use anyhow::{bail, Context, Result};
@@ -94,19 +94,16 @@ impl BlockExecutor {
         Ok(out)
     }
 
-    /// NA+SF for up to `profile.block` targets. `projected` is the FP
-    /// output for the whole graph. Returns `[targets.len(), D]`.
-    /// Convenience wrapper: transposes the adjacency per call — serving
-    /// paths should build [`FusedAdjacency`] once and use
-    /// [`Self::embed_block_fused`].
+    /// NA+SF for up to `profile.block` targets, over one build-once plan
+    /// (its shared adjacency; the state holds the FP output for the whole
+    /// graph). Returns `[targets.len(), D]`. No per-call transposes.
     pub fn embed_block(
         &self,
-        g: &HetGraph,
-        projected: &Matrix,
+        plan: &InferencePlan,
+        state: &FeatureState,
         targets: &[VId],
     ) -> Result<Matrix> {
-        let fused = FusedAdjacency::build(g);
-        self.embed_block_fused(&fused, projected, targets)
+        self.embed_block_fused(plan.adjacency(), &state.projected, targets)
     }
 
     /// NA+SF over the vertex-major fused adjacency: each target's
@@ -177,11 +174,15 @@ impl BlockExecutor {
         Ok(m)
     }
 
-    /// Embed an arbitrary target list, block by block (transposes the
-    /// adjacency once up front).
-    pub fn embed_all(&self, g: &HetGraph, projected: &Matrix, targets: &[VId]) -> Result<Matrix> {
-        let fused = FusedAdjacency::build(g);
-        self.embed_all_fused(&fused, projected, targets)
+    /// Embed an arbitrary target list, block by block, over one plan (its
+    /// shared adjacency — nothing is transposed here).
+    pub fn embed_all(
+        &self,
+        plan: &InferencePlan,
+        state: &FeatureState,
+        targets: &[VId],
+    ) -> Result<Matrix> {
+        self.embed_all_fused(plan.adjacency(), &state.projected, targets)
     }
 
     /// Embed an arbitrary target list over a pre-built fused adjacency.

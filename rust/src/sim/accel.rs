@@ -12,6 +12,7 @@
 //! * **-O** — four channels, overlap-driven vertex grouping (full
 //!   TLV-HGNN; groups stream out of the grouper pipelined with execution).
 
+use crate::engine::InferencePlan;
 use crate::grouping::{
     default_n_max, group_overlap_driven, group_random, group_sequential, simulate_grouper,
     GrouperConfig, GrouperStats, Grouping, OverlapHypergraph,
@@ -21,6 +22,7 @@ use crate::model::{ModelConfig, Workload};
 use crate::sim::cache::{CacheHierarchy, CacheOutcome};
 use crate::sim::dram::{DramStats, Hbm, HbmConfig};
 use crate::sim::rpe::{RpeArray, RpeConfig, RpeMode};
+use std::sync::Arc;
 
 /// Accelerator configuration (defaults = Table II / Table IV).
 #[derive(Debug, Clone)]
@@ -182,16 +184,23 @@ pub struct Simulator<'g> {
     pub cfg: AccelConfig,
     pub g: &'g HetGraph,
     pub m: ModelConfig,
-    /// Vertex-major adjacency, transposed once and reused by every run —
-    /// the simulated traversals read it instead of binary-searching the
-    /// per-semantic CSRs per (target, semantic).
-    fused: FusedAdjacency,
+    /// Vertex-major adjacency, transposed once (or shared from an
+    /// [`InferencePlan`]) and reused by every run — the simulated
+    /// traversals read it instead of binary-searching the per-semantic
+    /// CSRs per (target, semantic).
+    fused: Arc<FusedAdjacency>,
 }
 
 impl<'g> Simulator<'g> {
     pub fn new(cfg: AccelConfig, g: &'g HetGraph, m: ModelConfig) -> Self {
-        let fused = FusedAdjacency::build(g);
+        let fused = Arc::new(FusedAdjacency::build(g));
         Simulator { cfg, g, m, fused }
+    }
+
+    /// Build the simulator around an existing plan: the adjacency handle
+    /// is shared (no second transpose) and the model config is the plan's.
+    pub fn with_plan(cfg: AccelConfig, g: &'g HetGraph, plan: &InferencePlan) -> Self {
+        Simulator { cfg, g, m: plan.params.m.clone(), fused: plan.share_adjacency() }
     }
 
     /// Run one full inference pass in `mode`.
@@ -599,6 +608,17 @@ mod tests {
         let b = s.run(ExecMode::PerSemanticBaseline);
         let o = s.run(ExecMode::OverlapGrouped);
         assert!(b.peak_partial_bytes > o.peak_partial_bytes * 4);
+    }
+
+    #[test]
+    fn with_plan_matches_standalone_build() {
+        let (g, m) = sim(Dataset::Acm, ModelKind::Rgcn);
+        let plan = InferencePlan::build(&g, m.clone(), 16);
+        let a = Simulator::new(AccelConfig::tlv_default(), &g, m).run(ExecMode::OverlapGrouped);
+        let b =
+            Simulator::with_plan(AccelConfig::tlv_default(), &g, &plan).run(ExecMode::OverlapGrouped);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.dram.accesses, b.dram.accesses);
     }
 
     #[test]

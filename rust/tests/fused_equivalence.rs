@@ -5,10 +5,11 @@
 //! at any thread count. The fused trace walk likewise matches the seed
 //! walk event-for-event.
 
+use std::sync::Arc;
 use tlv_hgnn::datasets::Dataset;
 use tlv_hgnn::engine::{
-    walk_semantics_complete, walk_semantics_complete_unfused, AccessCounter, FusedEngine,
-    MemoryTracker, ReferenceEngine,
+    walk_semantics_complete, walk_semantics_complete_unfused, AccessCounter, FeatureState,
+    FusedEngine, InferencePlan, MemoryTracker, ReferenceEngine,
 };
 use tlv_hgnn::grouping::{default_n_max, group_overlap_driven, OverlapHypergraph};
 use tlv_hgnn::hetgraph::{FusedAdjacency, VId};
@@ -71,16 +72,18 @@ fn fused_engine_deterministic_across_runs_and_threads() {
 
 #[test]
 fn shared_adjacency_reuse_is_equivalent() {
-    // One pre-built adjacency serving several engines (the serving-path
-    // pattern) must behave exactly like per-engine builds.
+    // One pre-built adjacency serving several plans/engines (the
+    // serving-path pattern) must behave exactly like per-engine builds.
     let g = Dataset::Dblp.load(0.03);
     let order = g.target_vertices();
-    let fused = FusedAdjacency::build(&g);
+    let fused = Arc::new(FusedAdjacency::build(&g));
     fused.validate(&g).unwrap();
     for kind in ModelKind::ALL {
+        let plan =
+            InferencePlan::with_adjacency(&g, ModelConfig::new(kind), 24, Arc::clone(&fused));
+        let state = FeatureState::project_all(&plan, 2);
+        let got = FusedEngine::over(&plan, &state).embed_semantics_complete(&order, 2);
         let e = ReferenceEngine::new(&g, ModelConfig::new(kind), 24);
-        let f = FusedEngine::with_adjacency(&e, fused.clone());
-        let got = f.embed_semantics_complete(&order, 2);
         let want = e.embed_semantics_complete(&order);
         assert_eq!(want.max_abs_diff(&got), 0.0, "{kind:?}");
     }

@@ -1,0 +1,108 @@
+//! Integration: the plan/state split is a pure structural transform —
+//! one [`InferencePlan`] (one adjacency transpose) serves every layer,
+//! engine, and thread count with **bitwise identical** results:
+//!
+//! * multi-layer fused inference over one shared plan vs the per-semantic
+//!   oracle, at depth 1–3 × {RGCN, RGAT, NARS} × threads {1, 4};
+//! * the parallel FP stage vs the serial seed FP;
+//! * one plan shared across the reference oracle and the fused executor.
+
+use std::sync::Arc;
+use tlv_hgnn::datasets::Dataset;
+use tlv_hgnn::engine::{
+    embed_layers_fused, embed_layers_per_semantic, embed_layers_semantics_complete, FeatureState,
+    FusedEngine, InferencePlan, ReferenceEngine,
+};
+use tlv_hgnn::model::{ModelConfig, ModelKind};
+
+/// Acceptance matrix: depth 1–3 × all models × threads {1, 4} on
+/// ACM/IMDB/DBLP, every cell running on ONE plan (one `FusedAdjacency`
+/// for all depths and thread counts) and bitwise-equal to the layered
+/// per-semantic oracle.
+#[test]
+fn multilayer_fused_matches_per_semantic_oracle() {
+    for d in [Dataset::Acm, Dataset::Imdb, Dataset::Dblp] {
+        let g = d.load(0.03);
+        let order = g.target_vertices();
+        for kind in ModelKind::ALL {
+            let m = ModelConfig::new(kind);
+            // Built once per (graph, model): the only transpose below.
+            let plan = InferencePlan::build(&g, m.clone(), 24);
+            let seed = FeatureState::project_all(&plan, 4);
+            for layers in [1usize, 2, 3] {
+                let want = embed_layers_per_semantic(&g, &m, layers, 24);
+                for threads in [1usize, 4] {
+                    let mut state = seed.clone();
+                    let got = embed_layers_fused(&plan, &mut state, &order, layers, threads);
+                    assert_eq!(
+                        want.max_abs_diff(&got),
+                        0.0,
+                        "{} {kind:?} layers={layers} threads={threads}",
+                        d.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The depth-3 convenience wrapper (parallel FP + parallel fused layers on
+/// an internally built plan) must agree with the oracle too.
+#[test]
+fn multilayer_wrapper_matches_oracle_depth3() {
+    let g = Dataset::Acm.load(0.03);
+    for kind in ModelKind::ALL {
+        let m = ModelConfig::new(kind);
+        let want = embed_layers_per_semantic(&g, &m, 3, 24);
+        let got = embed_layers_semantics_complete(&g, &m, 3, 24);
+        assert_eq!(want.max_abs_diff(&got), 0.0, "{kind:?}");
+    }
+}
+
+/// Parallel FP is bitwise-equal to the serial seed FP (which is what
+/// `ReferenceEngine::new` still runs), for every model kind.
+#[test]
+fn parallel_fp_bitwise_matches_serial_seed() {
+    let g = Dataset::Dblp.load(0.04);
+    for kind in ModelKind::ALL {
+        let m = ModelConfig::new(kind);
+        let plan = InferencePlan::build(&g, m.clone(), 24);
+        let serial = FeatureState::project_all(&plan, 1);
+        let eng = ReferenceEngine::new(&g, m, 24);
+        assert_eq!(
+            serial.projected.max_abs_diff(eng.projected()),
+            0.0,
+            "{kind:?}: serial project_all != seed FP"
+        );
+        for threads in [2usize, 3, 5, 16] {
+            let par = FeatureState::project_all(&plan, threads);
+            assert_eq!(
+                serial.projected.max_abs_diff(&par.projected),
+                0.0,
+                "{kind:?} threads={threads}"
+            );
+        }
+    }
+}
+
+/// One `Arc<InferencePlan>` shared by the serial oracle and the parallel
+/// executor produces identical embeddings — the serving-path pattern.
+#[test]
+fn one_plan_shared_across_engines() {
+    let g = Dataset::Imdb.load(0.03);
+    let m = ModelConfig::new(ModelKind::Rgat);
+    let plan = Arc::new(InferencePlan::build(&g, m, 24));
+    let state = FeatureState::project_all(&plan, 4);
+    let order = g.target_vertices();
+    let oracle = ReferenceEngine::with_plan(&g, Arc::clone(&plan), state.clone());
+    let want = oracle.embed_semantics_complete(&order);
+    let fe = FusedEngine::over(&plan, &state);
+    for threads in [1usize, 4] {
+        let got = fe.embed_semantics_complete(&order, threads);
+        assert_eq!(want.max_abs_diff(&got), 0.0, "threads={threads}");
+    }
+    // The engines really do share one adjacency, and the order is
+    // recoverable from the transpose alone (no graph borrow needed).
+    assert!(std::ptr::eq(oracle.plan().adjacency(), fe.adjacency()));
+    assert_eq!(plan.adjacency().target_vertices(), order);
+}

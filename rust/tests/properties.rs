@@ -6,7 +6,7 @@
 use rustc_hash::FxHashSet;
 use tlv_hgnn::engine::{
     walk_per_semantic, walk_per_semantic_batched, walk_semantics_complete, AccessCounter,
-    MemoryTracker, ReferenceEngine,
+    FeatureState, FusedEngine, InferencePlan, Matrix, MemoryTracker, ReferenceEngine,
 };
 use tlv_hgnn::grouping::{
     default_n_max, group_overlap_driven, group_random, group_sequential, simulate_grouper,
@@ -73,6 +73,45 @@ fn prop_fused_engine_matches_reference() {
             let got = f.embed_semantics_complete(&order, threads);
             assert_eq!(want.max_abs_diff(&got), 0.0, "{kind:?} t={threads}");
         }
+    });
+}
+
+#[test]
+fn prop_feature_state_reseed_roundtrip() {
+    check("reseed-roundtrip", 12, |rng| {
+        let g = gen::hetgraph(rng);
+        let kind = [ModelKind::Rgcn, ModelKind::Rgat, ModelKind::Nars][rng.gen_index(3)];
+        let plan = InferencePlan::build(&g, ModelConfig::new(kind), 16);
+        let mut state = FeatureState::project_all(&plan, 1 + rng.gen_index(4));
+        let original = state.projected.clone();
+        let order = g.target_vertices();
+        if order.is_empty() {
+            return;
+        }
+        // Save the target rows, scatter a layer's output in, check that
+        // exactly the ordered rows changed, then scatter the saved rows
+        // back and require the original table bit-for-bit.
+        let mut saved = Matrix::zeros(order.len(), plan.hidden());
+        for (i, &t) in order.iter().enumerate() {
+            saved.row_mut(i).copy_from_slice(original.row(t.idx()));
+        }
+        let out = FusedEngine::over(&plan, &state).embed_semantics_complete(&order, 2);
+        state.reseed(&order, &out);
+        for (i, &t) in order.iter().enumerate() {
+            assert_eq!(state.projected.row(t.idx()), out.row(i), "row {t} not scattered");
+        }
+        let target_range = g.type_range(g.target_type);
+        for vid in 0..g.num_vertices() as u32 {
+            if !target_range.contains(&vid) {
+                assert_eq!(
+                    state.projected.row(vid as usize),
+                    original.row(vid as usize),
+                    "non-target row {vid} changed"
+                );
+            }
+        }
+        state.reseed(&order, &saved);
+        assert_eq!(state.projected.max_abs_diff(&original), 0.0, "round-trip not exact");
     });
 }
 

@@ -5,7 +5,7 @@
 //! Requires `make artifacts` (skips with a message otherwise, so plain
 //! `cargo test` works before the Python side has run).
 
-use tlv_hgnn::engine::ReferenceEngine;
+use tlv_hgnn::engine::{FeatureState, InferencePlan, ReferenceEngine};
 use tlv_hgnn::hetgraph::{HetGraphBuilder, VId};
 use tlv_hgnn::model::{ModelConfig, ModelKind};
 use tlv_hgnn::runtime::{BlockExecutor, Manifest};
@@ -52,18 +52,22 @@ fn run_model(kind: ModelKind, tol: f32) {
     }
     let g = profile_friendly_graph(11);
     let exec = BlockExecutor::load(&Manifest::default_dir(), kind).expect("load artifacts");
-    let projected = exec.project_graph(&g).expect("fp pass");
+    let state = FeatureState::from_projected(exec.project_graph(&g).expect("fp pass"));
 
     let m = ModelConfig::new(kind);
-    let reference = ReferenceEngine::new(&g, m, exec.manifest.profile.in_dim);
+    let max_in_dim = exec.manifest.profile.in_dim;
+    let reference = ReferenceEngine::new(&g, m, max_in_dim);
 
     // FP cross-check: PJRT projection vs CPU projection.
-    let diff_fp = projected.max_abs_diff(&reference.projected);
+    let diff_fp = state.projected.max_abs_diff(reference.projected());
     assert!(diff_fp < tol, "{kind:?} FP diff {diff_fp}");
 
-    // Full block path vs reference semantics-complete embeddings.
+    // Full block path vs reference semantics-complete embeddings, over
+    // the reference engine's own build-once plan (the executor no longer
+    // transposes per call, and nothing is derived twice).
+    let plan = reference.share_plan();
     let targets = g.target_vertices();
-    let got = exec.embed_all(&g, &projected, &targets).expect("embed");
+    let got = exec.embed_all(&plan, &state, &targets).expect("embed");
     let want = reference.embed_semantics_complete(&targets);
     let diff = got.max_abs_diff(&want);
     assert!(diff < tol, "{kind:?} embedding diff {diff}");
@@ -94,10 +98,15 @@ fn block_padding_is_exact() {
     // A block smaller than B must give identical rows to a full pass.
     let g = profile_friendly_graph(13);
     let exec = BlockExecutor::load(&Manifest::default_dir(), ModelKind::Rgcn).unwrap();
-    let projected = exec.project_graph(&g).unwrap();
+    let state = FeatureState::from_projected(exec.project_graph(&g).unwrap());
+    let plan = InferencePlan::build(
+        &g,
+        ModelConfig::new(ModelKind::Rgcn),
+        exec.manifest.profile.in_dim,
+    );
     let targets = g.target_vertices();
-    let all = exec.embed_all(&g, &projected, &targets).unwrap();
-    let first3 = exec.embed_block(&g, &projected, &targets[..3]).unwrap();
+    let all = exec.embed_all(&plan, &state, &targets).unwrap();
+    let first3 = exec.embed_block(&plan, &state, &targets[..3]).unwrap();
     for r in 0..3 {
         assert_eq!(first3.row(r), all.row(r), "row {r} differs under padding");
     }
