@@ -7,7 +7,12 @@
 //!   workload is run through the cycle simulator and baseline models to
 //!   produce the paper-metric table.
 //!
-//! Requires `make artifacts`. Results recorded in EXPERIMENTS.md §E2E.
+//! With `make artifacts` built, the serving path runs through PJRT and is
+//! validated within float tolerance. Without artifacts (e.g. CI), the
+//! coordinator falls back to the in-process CPU fused engine
+//! (`ExecutorKind::Cpu` — group-affinity routing + group-local tiles) and
+//! is held to **bitwise** equality, so the example is a complete smoke
+//! test on any host. Results recorded in EXPERIMENTS.md §E2E.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -18,29 +23,40 @@ use tlv_hgnn::energy::{tlv_energy, EnergyTable};
 use tlv_hgnn::engine::{FeatureState, FusedEngine, InferencePlan, ReferenceEngine};
 use tlv_hgnn::hetgraph::VId;
 use tlv_hgnn::model::{ModelConfig, ModelKind};
-use tlv_hgnn::runtime::Manifest;
+use tlv_hgnn::runtime::{Manifest, PjrtRuntime};
 use tlv_hgnn::sim::{AccelConfig, ExecMode, Simulator};
 use tlv_hgnn::util::table::{f2, Table};
 
 fn main() -> anyhow::Result<()> {
-    if Manifest::load(&Manifest::default_dir()).is_err() {
-        eprintln!("artifacts missing — run `make artifacts` first");
-        std::process::exit(1);
-    }
+    let have_artifacts =
+        Manifest::load(&Manifest::default_dir()).is_ok() && PjrtRuntime::cpu().is_ok();
 
     // A real small workload: ACM at 10% — ~1.1k targets, real numerics.
     let g = Arc::new(Dataset::Acm.load(0.10));
     println!(
-        "workload: ACM@0.10 — {} vertices, {} edges, {} semantics, {} targets\n",
+        "workload: ACM@0.10 — {} vertices, {} edges, {} semantics, {} targets",
         g.num_vertices(),
         g.num_edges(),
         g.num_semantics(),
         g.target_vertices().len()
     );
+    println!(
+        "executor: {}\n",
+        if have_artifacts {
+            "PJRT (AOT artifacts found)"
+        } else {
+            "CPU fused engine (no artifacts — bitwise serving path)"
+        }
+    );
 
-    // ---- Serving path: coordinator + PJRT artifacts ----
+    // ---- Serving path: coordinator, PJRT or CPU workers ----
+    let cfg = if have_artifacts {
+        ServerConfig::new(ModelKind::Rgcn)
+    } else {
+        ServerConfig::cpu(ModelKind::Rgcn)
+    };
     let t0 = Instant::now();
-    let server = Server::start(Arc::clone(&g), ServerConfig::new(ModelKind::Rgcn))?;
+    let server = Server::start(Arc::clone(&g), cfg)?;
     let startup = t0.elapsed();
 
     let targets: Vec<VId> = g.target_vertices();
@@ -58,19 +74,28 @@ fn main() -> anyhow::Result<()> {
     println!("  throughput {:.0} emb/s; latency p50={p50}us p95={p95}us p99={p99}us", served as f64 / serve_wall.as_secs_f64());
 
     // ---- Numeric validation vs the CPU reference ----
-    // K-truncation (profile K=16) is the serving-time neighbor sampling;
-    // validate exactly on the subset of targets with deg<=K per semantic.
+    // PJRT: K-truncation (profile K=16) is the serving-time neighbor
+    // sampling; validate exactly on the subset of targets with deg<=K per
+    // semantic, within float tolerance. CPU executor: every target, zero
+    // tolerance (the fused group-tile path is bitwise-identical).
     // One build-once plan backs the reference oracle here AND the cycle
     // simulator below (one adjacency transpose for the whole example).
     let plan = Arc::new(InferencePlan::build(&g, ModelConfig::new(ModelKind::Rgcn), 64));
     let state = FeatureState::project_all(&plan, FusedEngine::default_threads());
     let reference = ReferenceEngine::with_plan(&g, Arc::clone(&plan), state);
-    let k = 16;
-    let exact: Vec<VId> = targets
-        .iter()
-        .copied()
-        .filter(|&t| g.csrs.iter().all(|c| c.neighbors(t).len() <= k))
-        .collect();
+    let (exact, tolerance): (Vec<VId>, f32) = if have_artifacts {
+        let k = 16;
+        (
+            targets
+                .iter()
+                .copied()
+                .filter(|&t| g.csrs.iter().all(|c| c.neighbors(t).len() <= k))
+                .collect(),
+            5e-4,
+        )
+    } else {
+        (targets.clone(), 0.0)
+    };
     let want = reference.embed_semantics_complete(&exact);
     let mut max_diff = 0f32;
     let mut checked = 0usize;
@@ -89,11 +114,29 @@ fn main() -> anyhow::Result<()> {
         }
     }
     println!(
-        "  validation: {checked}/{} exact-degree targets checked, max |diff| = {max_diff:.2e} {}",
+        "  validation: {checked}/{} targets checked, max |diff| = {max_diff:.2e} (bound {tolerance:.0e}) {}",
         exact.len(),
-        if max_diff < 5e-4 { "(PASS)" } else { "(FAIL)" }
+        if max_diff <= tolerance { "(PASS)" } else { "(FAIL)" }
     );
-    assert!(max_diff < 5e-4, "numeric validation failed");
+    assert_eq!(checked, exact.len(), "some targets never served");
+    assert!(max_diff <= tolerance, "numeric validation failed");
+
+    // ---- Group-affinity engine on the same workload ----
+    let grouped = {
+        use tlv_hgnn::grouping::{default_n_max, group_overlap_driven, OverlapHypergraph};
+        let h = OverlapHypergraph::build(&g, 0.01);
+        group_overlap_driven(&h, default_n_max(targets.len(), 4), 4)
+    };
+    let engine = FusedEngine::over(&plan, reference.state());
+    let striped = engine.embed_semantics_complete(&grouped.flat_order(), 4);
+    let (_, tiled, reuse) = engine.embed_grouped_with_reuse(&grouped, 4);
+    assert_eq!(striped.max_abs_diff(&tiled), 0.0, "group-tile path diverged");
+    println!(
+        "  group tiles: {:.2}x row reuse over {} groups ({:.1}% of loads absorbed), bitwise OK",
+        reuse.reuse_factor(),
+        reuse.groups,
+        reuse.saved_fraction() * 100.0
+    );
 
     // ---- Paper-metric table on the same workload ----
     let m = ModelConfig::new(ModelKind::Rgcn);

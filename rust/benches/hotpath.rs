@@ -16,8 +16,8 @@ use std::sync::Arc;
 use tlv_hgnn::datasets::Dataset;
 use tlv_hgnn::engine::{
     embed_layers_fused, walk_per_semantic_fused, walk_semantics_complete_fused,
-    walk_semantics_complete_unfused, AccessCounter, FeatureState, FusedEngine, InferencePlan,
-    ReferenceEngine,
+    walk_semantics_complete_unfused, AccessCounter, FeatureState, FusedEngine, GroupSchedule,
+    InferencePlan, ReferenceEngine,
 };
 use tlv_hgnn::grouping::{default_n_max, group_overlap_driven, OverlapHypergraph};
 use tlv_hgnn::hetgraph::{FusedAdjacency, VId};
@@ -159,22 +159,70 @@ fn main() {
         );
     }
 
-    // Grouped order (the -O schedule) through the fused engine.
+    // ---- Grouped execution: striped flat order vs group-affinity ----
+    // Striped = the pre-scheduler behavior (flat grouped order chunked
+    // contiguously); scheduled = whole groups LPT-packed onto workers,
+    // each aggregated out of a group-local neighbor tile. Same bits.
     let h = OverlapHypergraph::build(&g, 0.01);
     let grouping = group_overlap_driven(&h, default_n_max(order.len(), 4), 4);
     let grouped_order = grouping.flat_order();
     let nt = FusedEngine::default_threads();
-    let s = bench("embed fused engine, grouped order, all threads", 3, || {
+    let striped = bench("embed grouped order, striped (pre-scheduler)", 3, || {
         fe.embed_semantics_complete(&grouped_order, nt).data.len()
     });
     record(
         &mut results,
-        &s,
+        &striped,
         &[
             ("threads", nt as f64),
-            ("edge_events_per_s_m", evs(&s)),
-            ("embeddings_per_s", targets / s.median.as_secs_f64()),
+            ("edge_events_per_s_m", evs(&striped)),
+            ("embeddings_per_s", targets / striped.median.as_secs_f64()),
         ],
+    );
+
+    let schedule = GroupSchedule::build(&grouping, plan.adjacency(), nt);
+    let (_, reuse) = fe.embed_scheduled(&schedule);
+    println!(
+        "-- group-affinity: {} groups, LPT imbalance {:.3}, tile reuse {:.2}x ({:.1}% of loads absorbed) --",
+        grouping.groups.len(),
+        schedule.work_imbalance(),
+        reuse.reuse_factor(),
+        reuse.saved_fraction() * 100.0
+    );
+    let sched = bench("embed group-affinity + group tiles", 3, || {
+        fe.embed_scheduled(&schedule).0.data.len()
+    });
+    let grouped_vs_striped = striped.median.as_secs_f64() / sched.median.as_secs_f64();
+    println!("  -> group-affinity speedup vs striped: {grouped_vs_striped:.2}x");
+    record(
+        &mut results,
+        &sched,
+        &[
+            ("threads", nt as f64),
+            ("edge_events_per_s_m", evs(&sched)),
+            ("embeddings_per_s", targets / sched.median.as_secs_f64()),
+            ("speedup_vs_striped", grouped_vs_striped),
+            ("tile_reuse_factor", reuse.reuse_factor()),
+            ("tile_saved_fraction", reuse.saved_fraction()),
+        ],
+    );
+
+    // Tile-vs-direct at one worker: isolates the tile gather's cache
+    // effect from scheduling/parallelism (same order, same single thread).
+    let schedule1 = GroupSchedule::build(&grouping, plan.adjacency(), 1);
+    let direct1 = bench("embed grouped order, direct rows, 1 thread", 3, || {
+        fe.embed_semantics_complete(&grouped_order, 1).data.len()
+    });
+    record(&mut results, &direct1, &[("threads", 1.0)]);
+    let tile1 = bench("embed grouped order, group tiles, 1 worker", 3, || {
+        fe.embed_scheduled(&schedule1).0.data.len()
+    });
+    let tile_vs_direct = direct1.median.as_secs_f64() / tile1.median.as_secs_f64();
+    println!("  -> tile speedup vs direct rows (1 thread): {tile_vs_direct:.2}x");
+    record(
+        &mut results,
+        &tile1,
+        &[("threads", 1.0), ("speedup_vs_direct", tile_vs_direct)],
     );
 
     // ---- Depth-3 multi-layer: shared plan vs per-layer rebuild ----
@@ -267,6 +315,12 @@ fn main() {
         "axpy_unroll",
         "single-thread fused embed must improve vs the pre-unroll baseline".into(),
     );
+    targets_json.set(
+        "grouped_vs_striped",
+        "group-affinity + tiles must not lose to striping at full threads; \
+         expect >= 1.0x with gains growing with graph scale vs LLC"
+            .into(),
+    );
 
     let mut out = Json::obj();
     out.set("generated_by", "cargo bench --bench hotpath".into());
@@ -275,6 +329,10 @@ fn main() {
     out.set("walk_fused_speedup_vs_seed", walk_speedup.into());
     out.set("fp_parallel_speedup_4t", fp_speedup_4t.into());
     out.set("multilayer_shared_plan_speedup_depth3", ml_speedup.into());
+    out.set("grouped_vs_striped_speedup", grouped_vs_striped.into());
+    out.set("tile_vs_direct_speedup_1t", tile_vs_direct.into());
+    out.set("tile_reuse_factor", reuse.reuse_factor().into());
+    out.set("tile_saved_fraction", reuse.saved_fraction().into());
     out.set("results", Json::Arr(results));
     println!(
         "acceptance: fused walk speedup {:.2}x vs target >= 3.0x: {}",

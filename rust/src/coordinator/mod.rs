@@ -1,14 +1,17 @@
 //! L3 serving coordinator: request router (group affinity), dynamic block
-//! batcher, multi-channel worker pool over PJRT, and serving metrics.
+//! batcher, keyed inference-plan cache, multi-channel worker pool over
+//! PJRT or the in-process CPU fused engine, and serving metrics.
 
 pub mod batcher;
 pub mod metrics;
+pub mod plans;
 pub mod request;
 pub mod router;
 pub mod server;
 
 pub use batcher::{BlockBatcher, Tagged};
 pub use metrics::Metrics;
+pub use plans::PlanCache;
 pub use request::{InferenceRequest, InferenceResponse};
 pub use router::Router;
-pub use server::{Server, ServerConfig};
+pub use server::{ExecutorKind, Server, ServerConfig};

@@ -1,0 +1,213 @@
+//! Keyed inference-plan cache for the serving coordinator.
+//!
+//! A multi-model server builds one [`InferencePlan`] per (graph, model,
+//! dims) — but the expensive part, the vertex-major adjacency transpose,
+//! depends on the *graph only*. [`PlanCache`] therefore keeps two keyed
+//! maps: one `Arc<FusedAdjacency>` per live graph, and one
+//! `Arc<InferencePlan>` per (graph, model config, input-dim cap), where
+//! every plan of the same graph shares the single adjacency via
+//! [`InferencePlan::with_adjacency`]. Servers for different models over
+//! the same graph then cost one transpose total, and restarting a server
+//! with the same config costs nothing.
+//!
+//! Graphs are identified by `Arc` pointer, guarded by a stored
+//! [`Weak`] handle: if the graph behind a cached entry has been dropped
+//! (or the address was reused by a different allocation), the entry is
+//! rebuilt and replaced instead of being served stale.
+
+use crate::engine::InferencePlan;
+use crate::hetgraph::{FusedAdjacency, HetGraph};
+use crate::model::ModelConfig;
+use rustc_hash::FxHashMap;
+use std::sync::{Arc, Mutex, Weak};
+
+/// Cache key: graph identity (by pointer, liveness-checked) + the full
+/// model config + the raw-input cap the parameters were derived at.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct PlanKey {
+    graph: usize,
+    m: ModelConfig,
+    max_in_dim: usize,
+}
+
+#[derive(Debug, Default)]
+struct CacheInner {
+    adjacencies: FxHashMap<usize, (Weak<HetGraph>, Arc<FusedAdjacency>)>,
+    plans: FxHashMap<PlanKey, (Weak<HetGraph>, Arc<InferencePlan>)>,
+}
+
+/// Thread-safe keyed plan cache (see module docs).
+#[derive(Debug, Default)]
+pub struct PlanCache {
+    inner: Mutex<CacheInner>,
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache::default()
+    }
+
+    /// The plan for `(g, m, max_in_dim)` — built on first request, shared
+    /// (same `Arc`) on every subsequent one; all plans of `g` share one
+    /// adjacency. The O(edges) adjacency transpose and the parameter
+    /// derivation run **outside** the cache lock, so concurrent
+    /// `Server::start`s over unrelated graphs never serialize on a miss;
+    /// on a publish race the first writer wins (losers adopt the cached
+    /// entry, discarding their duplicate work, which keeps the
+    /// one-adjacency-per-graph invariant).
+    pub fn get_or_build(
+        &self,
+        g: &Arc<HetGraph>,
+        m: ModelConfig,
+        max_in_dim: usize,
+    ) -> Arc<InferencePlan> {
+        let gid = Arc::as_ptr(g) as usize;
+        let key = PlanKey { graph: gid, m, max_in_dim };
+        let live = |weak: &Weak<HetGraph>| weak.upgrade().is_some_and(|l| Arc::ptr_eq(&l, g));
+
+        // Fast path + adjacency lookup under a short lock.
+        let cached_adj = {
+            let inner = self.inner.lock().expect("plan cache poisoned");
+            if let Some((weak, plan)) = inner.plans.get(&key) {
+                if live(weak) {
+                    return Arc::clone(plan);
+                }
+            }
+            match inner.adjacencies.get(&gid) {
+                Some((weak, adj)) if live(weak) => Some(Arc::clone(adj)),
+                _ => None,
+            }
+        };
+
+        // Slow path: build with the lock released.
+        let fused = cached_adj.unwrap_or_else(|| Arc::new(FusedAdjacency::build(g)));
+        let plan =
+            Arc::new(InferencePlan::with_adjacency(g, key.m.clone(), max_in_dim, Arc::clone(&fused)));
+
+        // Publish under the lock, re-checking for a racing builder.
+        let mut inner = self.inner.lock().expect("plan cache poisoned");
+        if let Some((weak, existing)) = inner.plans.get(&key) {
+            if live(weak) {
+                return Arc::clone(existing);
+            }
+        }
+        // Two steps so the map borrow ends before the miss-path insert.
+        let canonical = match inner.adjacencies.get(&gid) {
+            Some((weak, adj)) if live(weak) => Some(Arc::clone(adj)),
+            _ => None,
+        };
+        let canonical = canonical.unwrap_or_else(|| {
+            inner.adjacencies.insert(gid, (Arc::downgrade(g), Arc::clone(&fused)));
+            Arc::clone(&fused)
+        });
+        // If another thread published a different adjacency first, rebuild
+        // the (cheap) plan wrapper around the canonical one so every plan
+        // of this graph shares a single transpose.
+        let plan = if Arc::ptr_eq(&canonical, &fused) {
+            plan
+        } else {
+            Arc::new(InferencePlan::with_adjacency(g, key.m.clone(), max_in_dim, canonical))
+        };
+        inner.plans.insert(key, (Arc::downgrade(g), Arc::clone(&plan)));
+        plan
+    }
+
+    /// Number of cached plans (diagnostics/tests).
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("plan cache poisoned").plans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop entries whose graph is gone (long-running multi-tenant
+    /// servers call this between graph swaps).
+    pub fn evict_dead(&self) {
+        let mut inner = self.inner.lock().expect("plan cache poisoned");
+        inner.plans.retain(|_, (w, _)| w.upgrade().is_some());
+        inner.adjacencies.retain(|_, (w, _)| w.upgrade().is_some());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::Dataset;
+    use crate::model::ModelKind;
+
+    #[test]
+    fn same_key_returns_same_plan() {
+        let g = Arc::new(Dataset::Acm.load(0.03));
+        let cache = PlanCache::new();
+        let a = cache.get_or_build(&g, ModelConfig::new(ModelKind::Rgcn), 24);
+        let b = cache.get_or_build(&g, ModelConfig::new(ModelKind::Rgcn), 24);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn models_share_one_adjacency_per_graph() {
+        let g = Arc::new(Dataset::Acm.load(0.03));
+        let cache = PlanCache::new();
+        let plans: Vec<_> = ModelKind::ALL
+            .iter()
+            .map(|&k| cache.get_or_build(&g, ModelConfig::new(k), 24))
+            .collect();
+        assert_eq!(cache.len(), 3);
+        let adj = plans[0].share_adjacency();
+        for p in &plans[1..] {
+            assert!(Arc::ptr_eq(&adj, &p.share_adjacency()), "adjacency not shared");
+        }
+    }
+
+    #[test]
+    fn different_dims_are_different_plans() {
+        let g = Arc::new(Dataset::Imdb.load(0.03));
+        let cache = PlanCache::new();
+        let a = cache.get_or_build(&g, ModelConfig::new(ModelKind::Rgcn), 16);
+        let b = cache.get_or_build(&g, ModelConfig::new(ModelKind::Rgcn), 24);
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert!(Arc::ptr_eq(&a.share_adjacency(), &b.share_adjacency()));
+    }
+
+    #[test]
+    fn distinct_graphs_get_distinct_adjacencies() {
+        let g1 = Arc::new(Dataset::Acm.load(0.03));
+        let g2 = Arc::new(Dataset::Acm.load(0.03));
+        let cache = PlanCache::new();
+        let a = cache.get_or_build(&g1, ModelConfig::new(ModelKind::Rgcn), 24);
+        let b = cache.get_or_build(&g2, ModelConfig::new(ModelKind::Rgcn), 24);
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert!(!Arc::ptr_eq(&a.share_adjacency(), &b.share_adjacency()));
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn evict_dead_prunes_dropped_graphs() {
+        let cache = PlanCache::new();
+        let keep = Arc::new(Dataset::Acm.load(0.03));
+        cache.get_or_build(&keep, ModelConfig::new(ModelKind::Rgcn), 24);
+        {
+            let transient = Arc::new(Dataset::Imdb.load(0.03));
+            cache.get_or_build(&transient, ModelConfig::new(ModelKind::Rgcn), 24);
+            assert_eq!(cache.len(), 2);
+        }
+        cache.evict_dead();
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn cached_plan_is_usable() {
+        use crate::engine::{FeatureState, FusedEngine, ReferenceEngine};
+        let g = Arc::new(Dataset::Dblp.load(0.03));
+        let cache = PlanCache::new();
+        let plan = cache.get_or_build(&g, ModelConfig::new(ModelKind::Rgat), 24);
+        let state = FeatureState::project_all(&plan, 2);
+        let order = g.target_vertices();
+        let got = FusedEngine::over(&plan, &state).embed_semantics_complete(&order, 2);
+        let want = ReferenceEngine::new(&g, ModelConfig::new(ModelKind::Rgat), 24)
+            .embed_semantics_complete(&order);
+        assert_eq!(want.max_abs_diff(&got), 0.0);
+    }
+}

@@ -1,23 +1,32 @@
-//! The serving coordinator: multi-channel worker pool executing AOT
-//! artifacts through PJRT, fed by a group-affinity router and per-channel
-//! dynamic block batchers.
+//! The serving coordinator: multi-channel worker pool fed by a
+//! group-affinity router, executing either AOT artifacts through PJRT or
+//! the in-process CPU fused engine.
 //!
 //! Threading model (std threads — the environment vendors no async
-//! runtime, and the workload is CPU-bound PJRT execution):
+//! runtime, and the workload is CPU-bound execution):
 //!
 //! * `Server::start` computes the FP pass once (projected features are
-//!   shared read-only, like the accelerator's feature cache), builds the
-//!   router from the overlap-driven grouping, and spawns one worker per
-//!   channel. Each worker owns its own PJRT client + compiled executable
-//!   (clients are not shared across threads).
+//!   shared read-only, like the accelerator's feature cache), resolves
+//!   the inference plan through a keyed [`PlanCache`] (one adjacency
+//!   transpose per graph, one plan per (graph, model, dims), shared as
+//!   `Arc<InferencePlan>` by every worker), builds the router from the
+//!   overlap-driven grouping, and spawns one worker per channel.
+//! * With [`ExecutorKind::Pjrt`], each worker owns its own PJRT client +
+//!   compiled executable (clients are not shared across threads) and
+//!   batches targets into fixed blocks. With [`ExecutorKind::Cpu`], each
+//!   worker drives `FusedEngine::embed_group_tile` over the shared plan —
+//!   its routed slice is group-affine, so the tile is the channel's
+//!   working set — and needs no artifacts at all (bitwise-exact serving,
+//!   used by CI and artifact-less hosts).
 //! * `submit` splits a request by channel affinity, enqueues the parts,
 //!   and assembles the response; rows come back tagged by vertex.
 
 use super::batcher::BlockBatcher;
 use super::metrics::Metrics;
+use super::plans::PlanCache;
 use super::request::{InferenceRequest, InferenceResponse};
 use super::router::Router;
-use crate::engine::{FeatureState, InferencePlan};
+use crate::engine::{FeatureState, FusedEngine, InferencePlan, TileScratch};
 use crate::grouping::{default_n_max, group_overlap_driven, OverlapHypergraph};
 use crate::hetgraph::{HetGraph, VId};
 use crate::model::{ModelConfig, ModelKind};
@@ -38,13 +47,26 @@ struct WorkItem {
 }
 
 /// The build-once serving context every channel worker shares read-only:
-/// one [`InferencePlan`] (fused adjacency + parameters + metadata) and the
-/// FP output wrapped as a [`FeatureState`]. One `Arc` replaces the former
-/// pair of separate fused/projected `Arc`s.
+/// one cache-resolved `Arc<InferencePlan>` (fused adjacency + parameters +
+/// metadata) and the FP output wrapped as a [`FeatureState`].
 struct PlanState {
-    plan: InferencePlan,
+    plan: Arc<InferencePlan>,
     state: FeatureState,
 }
+
+/// Which execution backend the channel workers run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecutorKind {
+    /// AOT artifacts through PJRT (requires `make artifacts`).
+    Pjrt,
+    /// In-process CPU fused engine over group-local tiles — bitwise equal
+    /// to `ReferenceEngine`, no artifacts needed.
+    Cpu,
+}
+
+/// Raw-input cap for CPU-executor plans (matches the engine defaults used
+/// across tests and examples).
+const CPU_MAX_IN_DIM: usize = 64;
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -54,6 +76,11 @@ pub struct ServerConfig {
     pub artifacts_dir: PathBuf,
     /// Use overlap-driven routing (false = round-robin, the -P analogue).
     pub overlap_routing: bool,
+    /// Worker backend (PJRT artifacts vs in-process CPU engine).
+    pub executor: ExecutorKind,
+    /// Keyed plan cache; pass a shared handle to let several servers over
+    /// the same graph (or several models) share adjacency transposes.
+    pub plans: Arc<PlanCache>,
 }
 
 impl ServerConfig {
@@ -63,7 +90,14 @@ impl ServerConfig {
             kind,
             artifacts_dir: Manifest::default_dir(),
             overlap_routing: true,
+            executor: ExecutorKind::Pjrt,
+            plans: Arc::new(PlanCache::new()),
         }
+    }
+
+    /// CPU-executor configuration (no artifacts required).
+    pub fn cpu(kind: ModelKind) -> Self {
+        ServerConfig { executor: ExecutorKind::Cpu, ..ServerConfig::new(kind) }
     }
 }
 
@@ -79,29 +113,43 @@ pub struct Server {
 impl Server {
     /// Build everything and spawn workers. Blocking: includes the FP pass.
     pub fn start(g: Arc<HetGraph>, cfg: ServerConfig) -> Result<Server> {
-        // FP pass once, in the caller's thread, with a throwaway executor.
-        let fp_exec = BlockExecutor::load(&cfg.artifacts_dir, cfg.kind)
-            .context("load artifacts for FP pass")?;
-        let max_in_dim = fp_exec.manifest.profile.in_dim;
-        let hidden = fp_exec.manifest.profile.hidden;
-        let state =
-            FeatureState::from_projected(fp_exec.project_graph(&g).context("FP pass")?);
-        drop(fp_exec);
-
-        // One inference plan per (graph, model): the adjacency is
-        // transposed once and shared read-only by every worker together
-        // with the FP output, so the aggregation gather in the request
-        // path runs without per-(target, semantic) binary searches and
-        // without per-worker rebuilds. The plan is derived at the
-        // artifact profile's dimensions (not the CPU defaults) so its
-        // parameters describe the state it is paired with — a CPU
-        // executor over (plan, state) stays well-formed.
-        let mut model = ModelConfig::new(cfg.kind);
-        model.hidden_dim = hidden as u32;
-        model.fusion_dim = hidden as u32;
-        let plan = InferencePlan::build(&g, model, max_in_dim);
-        debug_assert_eq!(plan.hidden(), state.projected.cols);
-        let shared = Arc::new(PlanState { plan, state });
+        // One inference plan per (graph, model, dims), resolved through
+        // the keyed plan cache: the adjacency is transposed at most once
+        // per graph and shared read-only by every worker (and every other
+        // server over the same graph) together with the FP output, so the
+        // aggregation gather in the request path runs without
+        // per-(target, semantic) binary searches and without per-worker
+        // rebuilds.
+        let shared = match cfg.executor {
+            ExecutorKind::Pjrt => {
+                // FP pass once, in the caller's thread, with a throwaway
+                // executor. The plan is derived at the artifact profile's
+                // dimensions (not the CPU defaults) so its parameters
+                // describe the state it is paired with — a CPU executor
+                // over (plan, state) stays well-formed.
+                let fp_exec = BlockExecutor::load(&cfg.artifacts_dir, cfg.kind)
+                    .context("load artifacts for FP pass")?;
+                let max_in_dim = fp_exec.manifest.profile.in_dim;
+                let hidden = fp_exec.manifest.profile.hidden;
+                let state =
+                    FeatureState::from_projected(fp_exec.project_graph(&g).context("FP pass")?);
+                drop(fp_exec);
+                let mut model = ModelConfig::new(cfg.kind);
+                model.hidden_dim = hidden as u32;
+                model.fusion_dim = hidden as u32;
+                let plan = cfg.plans.get_or_build(&g, model, max_in_dim);
+                debug_assert_eq!(plan.hidden(), state.projected.cols);
+                Arc::new(PlanState { plan, state })
+            }
+            ExecutorKind::Cpu => {
+                // FP pass through the parallel in-process projector — the
+                // plan and its bitwise-reference parameters come straight
+                // from the cache.
+                let plan = cfg.plans.get_or_build(&g, ModelConfig::new(cfg.kind), CPU_MAX_IN_DIM);
+                let state = FeatureState::project_all(&plan, cfg.channels.max(1));
+                Arc::new(PlanState { plan, state })
+            }
+        };
 
         // Grouping → router (the streaming grouper runs up front here; the
         // cycle-level pipelining is modeled in sim::accel).
@@ -130,10 +178,14 @@ impl Server {
             let dir = cfg.artifacts_dir.clone();
             let kind = cfg.kind;
             let ready = ready_tx.clone();
+            let executor = cfg.executor;
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("tlv-worker-{ch}"))
-                    .spawn(move || worker_loop(rx, shared, dir, kind, metrics, ready))
+                    .spawn(move || match executor {
+                        ExecutorKind::Pjrt => worker_loop(rx, shared, dir, kind, metrics, ready),
+                        ExecutorKind::Cpu => worker_loop_cpu(rx, shared, metrics, ready),
+                    })
                     .context("spawn worker")?,
             );
         }
@@ -191,6 +243,28 @@ impl Server {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+    }
+}
+
+/// CPU channel worker: the routed slice of each request is group-affine
+/// (the router keeps whole vertex groups on one channel), so it is
+/// aggregated as a single group-local neighbor tile over the shared plan.
+/// No artifacts, no compilation — ready immediately.
+fn worker_loop_cpu(
+    rx: Receiver<WorkItem>,
+    shared: Arc<PlanState>,
+    metrics: Arc<Metrics>,
+    ready: Sender<Result<(), String>>,
+) {
+    let _ = ready.send(Ok(()));
+    let engine = FusedEngine::over(&shared.plan, &shared.state);
+    let mut scratch = TileScratch::default();
+    while let Ok(w) = rx.recv() {
+        let (m, _reuse) = engine.embed_group_tile_reusing(&w.targets, &mut scratch);
+        metrics.record_block(w.targets.len(), w.targets.len().max(1));
+        let rows: Vec<(VId, Vec<f32>)> =
+            w.targets.iter().enumerate().map(|(i, &t)| (t, m.row(i).to_vec())).collect();
+        let _ = w.reply.send((w.req, rows));
     }
 }
 

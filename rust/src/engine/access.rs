@@ -52,6 +52,68 @@ pub struct AccessReport {
     pub redundant_fraction: f64,
 }
 
+/// Group-local tile reuse accounting: per group, how many projected-row
+/// loads the aggregation *performs* (`total_loads`, one per target plus
+/// one per edge — the event count of `walk_semantics_complete_fused`) vs
+/// how many **distinct** rows the group-local tile actually gathers from
+/// the feature table (`distinct_loads`). The gap is traffic the tile path
+/// keeps inside the worker's compact tile instead of re-reading the full
+/// `projected` matrix — the software analogue of the accelerator's
+/// on-chip neighbor buffer. Also a [`TraceSink`]: trace walks report one
+/// [`TraceSink::group_tile`] event per group.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct TileReuse {
+    /// Groups accounted.
+    pub groups: u64,
+    /// Row loads the aggregation performs (targets + edges).
+    pub total_loads: u64,
+    /// Distinct rows gathered into group-local tiles (≤ `total_loads`).
+    pub distinct_loads: u64,
+}
+
+impl TileReuse {
+    /// Account one group.
+    pub fn record_group(&mut self, distinct: u64, total: u64) {
+        debug_assert!(distinct <= total);
+        self.groups += 1;
+        self.distinct_loads += distinct;
+        self.total_loads += total;
+    }
+
+    /// Fold another counter in (per-worker counters merge into one).
+    pub fn merge(&mut self, other: &TileReuse) {
+        self.groups += other.groups;
+        self.total_loads += other.total_loads;
+        self.distinct_loads += other.distinct_loads;
+    }
+
+    /// Average loads served per row gathered (≥ 1.0; higher = more reuse).
+    pub fn reuse_factor(&self) -> f64 {
+        if self.distinct_loads == 0 {
+            return 1.0;
+        }
+        self.total_loads as f64 / self.distinct_loads as f64
+    }
+
+    /// Fraction of feature-table reads the tiles absorb.
+    pub fn saved_fraction(&self) -> f64 {
+        if self.total_loads == 0 {
+            return 0.0;
+        }
+        (self.total_loads - self.distinct_loads) as f64 / self.total_loads as f64
+    }
+}
+
+impl TraceSink for TileReuse {
+    fn feature_access(&mut self, _v: VId) {}
+    fn partial_alloc(&mut self, _t: VId, _s: SemanticId, _b: u64) {}
+    fn partial_free(&mut self, _t: VId, _s: SemanticId, _b: u64) {}
+    fn embedding_write(&mut self, _v: VId, _b: u64) {}
+    fn group_tile(&mut self, distinct: u64, total: u64) {
+        self.record_group(distinct, total);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -71,5 +133,27 @@ mod tests {
     fn empty_is_zero() {
         let c = AccessCounter::default();
         assert_eq!(c.redundant_fraction(), 0.0);
+    }
+
+    #[test]
+    fn tile_reuse_accumulates_and_merges() {
+        let mut a = TileReuse::default();
+        a.record_group(3, 10);
+        a.record_group(5, 5);
+        assert_eq!(a.groups, 2);
+        assert_eq!((a.distinct_loads, a.total_loads), (8, 15));
+        let mut b = TileReuse::default();
+        b.record_group(2, 4);
+        a.merge(&b);
+        assert_eq!((a.groups, a.distinct_loads, a.total_loads), (3, 10, 19));
+        assert!((a.reuse_factor() - 1.9).abs() < 1e-12);
+        assert!((a.saved_fraction() - 9.0 / 19.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tile_reuse_defaults_are_neutral() {
+        let r = TileReuse::default();
+        assert_eq!(r.reuse_factor(), 1.0);
+        assert_eq!(r.saved_fraction(), 0.0);
     }
 }

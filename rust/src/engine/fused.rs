@@ -1,5 +1,5 @@
 //! Zero-allocation parallel semantics-complete executor over the plan/state
-//! split.
+//! split, with cache-aware group-affinity execution.
 //!
 //! [`FusedEngine`] is a *thin executor* over one immutable
 //! [`InferencePlan`] (fused vertex-major adjacency + model parameters) and
@@ -17,20 +17,63 @@
 //! * one scratch partial buffer per worker, reused across every target —
 //!   no per-(target, semantic) allocation, no hash maps, no global partial
 //!   store (the memory-expansion driver of the per-semantic paradigm);
-//! * targets are independent, so the order slice is chunked across
-//!   `std::thread::scope` workers, each writing its disjoint stripe of the
-//!   output matrix. Any thread count produces the same bits.
+//! * targets are independent, so [`embed_semantics_complete`] chunks the
+//!   order slice across `std::thread::scope` workers, each writing its
+//!   disjoint stripe of the output matrix. Any thread count produces the
+//!   same bits.
+//!
+//! **Group-affinity + group-local tiles** (paper §IV-C made real on the
+//! software hot path): [`embed_scheduled`] executes a
+//! [`GroupSchedule`] — whole vertex groups LPT-packed onto workers — and
+//! aggregates each group out of a *group-local neighbor tile*: every
+//! distinct projected row the group touches is gathered exactly once into
+//! a compact worker-local buffer, and all per-edge reads hit the tile
+//! (the software analogue of the accelerator's on-chip neighbor buffer).
+//! Tiles hold unmodified row copies and the per-target op order is
+//! untouched, so this path is bitwise identical too — see
+//! `engine::schedule` module docs for the full argument. The returned
+//! [`TileReuse`] counters report distinct vs total row loads per group,
+//! making the locality win measurable instead of asserted.
+//!
+//! [`embed_semantics_complete`]: FusedEngine::embed_semantics_complete
+//! [`embed_scheduled`]: FusedEngine::embed_scheduled
 
+use super::access::TileReuse;
 use super::functional::{ReferenceEngine, LEAKY_SLOPE};
 use super::plan::{FeatureState, InferencePlan};
+use super::schedule::{GroupSchedule, WorkerPlan};
 use super::tensor::{axpy, leaky_relu, Matrix};
 use crate::grouping::Grouping;
 use crate::hetgraph::{FusedAdjacency, VId};
+use rustc_hash::FxHashMap;
 
 /// Parallel semantics-complete executor (see module docs).
 pub struct FusedEngine<'a> {
     plan: &'a InferencePlan,
     state: &'a FeatureState,
+}
+
+/// Reusable per-worker scratch for group-tile aggregation. Buffers grow
+/// to the largest group footprint the worker sees, then every subsequent
+/// group is allocation-free. Opaque to callers — long-lived loops (e.g.
+/// the CPU serving workers) hold one and pass it to
+/// [`FusedEngine::embed_group_tile_reusing`].
+#[derive(Debug, Default)]
+pub struct TileScratch {
+    /// VId → tile slot of the current group.
+    slot_of: FxHashMap<VId, u32>,
+    /// Slot → VId, insertion-ordered (the gather list).
+    tile_ids: Vec<VId>,
+    /// Tile slot of every edge source, in aggregation order — the inner
+    /// numeric loop walks this sequentially, so the one hash lookup per
+    /// edge happens in the indexing pass, never in the float loop.
+    edge_slots: Vec<u32>,
+    /// Tile slot of every target of the group, in group order.
+    target_slots: Vec<u32>,
+    /// The tile: one gathered row per distinct VId the group touches.
+    tile: Vec<f32>,
+    /// The per-target partial (Algorithm 1's register).
+    partial: Vec<f32>,
 }
 
 impl<'a> FusedEngine<'a> {
@@ -61,7 +104,8 @@ impl<'a> FusedEngine<'a> {
     }
 
     /// Semantics-complete embeddings for `order` targets (row i ↔
-    /// `order[i]`), computed by `threads` workers. Bitwise identical to
+    /// `order[i]`), computed by `threads` workers over contiguous stripes.
+    /// Bitwise identical to
     /// `ReferenceEngine::embed_semantics_complete(order)` for every thread
     /// count — parallelism is across targets, which are independent.
     pub fn embed_semantics_complete(&self, order: &[VId], threads: usize) -> Matrix {
@@ -88,10 +132,103 @@ impl<'a> FusedEngine<'a> {
 
     /// Embed in the locality-preserving grouped order (paper §IV-C):
     /// returns `(flat order, embeddings)` with row i ↔ `order[i]`.
+    /// Since the group-affinity scheduler landed, this runs whole groups
+    /// on workers with group-local neighbor tiles — not contiguous stripes
+    /// of the flat order — and stays bitwise identical to the striped and
+    /// reference paths.
     pub fn embed_grouped(&self, grouping: &Grouping, threads: usize) -> (Vec<VId>, Matrix) {
-        let order = grouping.flat_order();
-        let m = self.embed_semantics_complete(&order, threads);
+        let (order, m, _) = self.embed_grouped_with_reuse(grouping, threads);
         (order, m)
+    }
+
+    /// [`embed_grouped`](FusedEngine::embed_grouped) plus the tile-reuse
+    /// counters of the run.
+    pub fn embed_grouped_with_reuse(
+        &self,
+        grouping: &Grouping,
+        threads: usize,
+    ) -> (Vec<VId>, Matrix, TileReuse) {
+        let schedule = GroupSchedule::build(grouping, self.plan.adjacency(), threads.max(1));
+        let (m, reuse) = self.embed_scheduled(&schedule);
+        (grouping.flat_order(), m, reuse)
+    }
+
+    /// Execute a pre-built group-affinity schedule: one OS worker per
+    /// non-empty [`WorkerPlan`], each aggregating its whole groups out of
+    /// group-local tiles, then a scatter pass that lands every row in the
+    /// caller's order (`schedule` row i ↔ `Grouping::flat_order()[i]`).
+    /// Bitwise identical to the striped path on the same flat order.
+    pub fn embed_scheduled(&self, schedule: &GroupSchedule) -> (Matrix, TileReuse) {
+        let h = self.plan.params.hidden;
+        let mut out = Matrix::zeros(schedule.num_rows(), h);
+        let mut reuse = TileReuse::default();
+        if schedule.num_rows() == 0 || h == 0 {
+            return (out, reuse);
+        }
+        let busy: Vec<&WorkerPlan> =
+            schedule.workers.iter().filter(|w| !w.targets.is_empty()).collect();
+        let outputs: Vec<(Vec<f32>, TileReuse)> = if busy.len() == 1 {
+            vec![self.run_worker(busy[0])]
+        } else {
+            std::thread::scope(|s| {
+                let handles: Vec<_> =
+                    busy.iter().map(|&wp| s.spawn(move || self.run_worker(wp))).collect();
+                handles.into_iter().map(|hd| hd.join().expect("worker panicked")).collect()
+            })
+        };
+        // Scatter: worker-local rows → caller-order rows. The schedule's
+        // rows are a permutation (validated at build), so every output row
+        // is written exactly once.
+        for (wp, (local, r)) in busy.iter().zip(&outputs) {
+            reuse.merge(r);
+            for (i, &row) in wp.rows.iter().enumerate() {
+                out.row_mut(row as usize).copy_from_slice(&local[i * h..(i + 1) * h]);
+            }
+        }
+        (out, reuse)
+    }
+
+    /// Aggregate one ad-hoc target list as a single group-local tile
+    /// (row i ↔ `targets[i]`). This is the serving-path entry: a channel
+    /// worker's request slice is group-affine by routing, so tiling it
+    /// keeps the channel's working set compact.
+    pub fn embed_group_tile(&self, targets: &[VId]) -> (Matrix, TileReuse) {
+        self.embed_group_tile_reusing(targets, &mut TileScratch::default())
+    }
+
+    /// [`embed_group_tile`](FusedEngine::embed_group_tile) with a
+    /// caller-held scratch, so per-request serving loops stay
+    /// allocation-free after warm-up.
+    pub fn embed_group_tile_reusing(
+        &self,
+        targets: &[VId],
+        scratch: &mut TileScratch,
+    ) -> (Matrix, TileReuse) {
+        let h = self.plan.params.hidden;
+        let mut out = Matrix::zeros(targets.len(), h);
+        let mut reuse = TileReuse::default();
+        if !targets.is_empty() && h > 0 {
+            let (d, t) = self.embed_group_tiled(targets, scratch, &mut out.data);
+            reuse.record_group(d, t);
+        }
+        (out, reuse)
+    }
+
+    /// One schedule worker: every assigned group through the tile path,
+    /// into one contiguous worker-local buffer (scattered by the caller).
+    fn run_worker(&self, wp: &WorkerPlan) -> (Vec<f32>, TileReuse) {
+        let h = self.plan.params.hidden;
+        let mut local = vec![0.0f32; wp.targets.len() * h];
+        let mut scratch = TileScratch::default();
+        let mut reuse = TileReuse::default();
+        let mut base = 0usize;
+        for (targets, _rows) in wp.iter_groups() {
+            let out = &mut local[base * h..(base + targets.len()) * h];
+            let (d, t) = self.embed_group_tiled(targets, &mut scratch, out);
+            reuse.record_group(d, t);
+            base += targets.len();
+        }
+        (local, reuse)
     }
 
     /// One worker's stripe: a single scratch partial reused for every
@@ -132,12 +269,98 @@ impl<'a> FusedEngine<'a> {
         }
         leaky_relu(z, LEAKY_SLOPE);
     }
+
+    /// Algorithm 1 for one whole group through a group-local tile. Three
+    /// passes: (1) index — assign each distinct touched row a tile slot,
+    /// recording per-edge and per-target slots so the numeric loop never
+    /// hashes; (2) gather — copy each distinct row once out of the full
+    /// feature table; (3) aggregate — the exact per-target op order of
+    /// [`embed_into`](Self::embed_into), reading rows from the tile.
+    /// Rows are unmodified copies, so the result is bitwise identical.
+    /// Returns `(distinct, total)` row-load counts for the group.
+    fn embed_group_tiled(
+        &self,
+        targets: &[VId],
+        scratch: &mut TileScratch,
+        out: &mut [f32],
+    ) -> (u64, u64) {
+        let h = self.plan.params.hidden;
+        let params = &self.plan.params;
+        let projected = &self.state.projected;
+        let fused = self.plan.adjacency();
+        debug_assert_eq!(out.len(), targets.len() * h);
+
+        let TileScratch { slot_of, tile_ids, edge_slots, target_slots, tile, partial } = scratch;
+        slot_of.clear();
+        tile_ids.clear();
+        edge_slots.clear();
+        target_slots.clear();
+        partial.resize(h, 0.0);
+
+        // Pass 1: index.
+        {
+            let mut slot = |v: VId| -> u32 {
+                *slot_of.entry(v).or_insert_with(|| {
+                    tile_ids.push(v);
+                    (tile_ids.len() - 1) as u32
+                })
+            };
+            for &t in targets {
+                target_slots.push(slot(t));
+                for e in fused.entries_of(t) {
+                    for &u in fused.neighbors(e) {
+                        edge_slots.push(slot(u));
+                    }
+                }
+            }
+        }
+
+        // Pass 2: gather — each distinct row fetched exactly once.
+        tile.clear();
+        for &v in tile_ids.iter() {
+            tile.extend_from_slice(projected.row(v.idx()));
+        }
+
+        // Pass 3: aggregate from the tile, same op order as embed_into.
+        let mut cursor = 0usize;
+        for (i, &t) in targets.iter().enumerate() {
+            let ts = target_slots[i] as usize * h;
+            let z = &mut out[i * h..(i + 1) * h];
+            let entries = fused.entries_of(t);
+            if entries.is_empty() {
+                z.copy_from_slice(&tile[ts..ts + h]);
+            } else {
+                z.fill(0.0);
+                for e in entries {
+                    partial.copy_from_slice(&tile[ts..ts + h]);
+                    let deg = e.degree();
+                    for _ in 0..deg {
+                        let us = edge_slots[cursor] as usize * h;
+                        cursor += 1;
+                        let a = params.edge_weight_rows(
+                            e.semantic,
+                            &tile[us..us + h],
+                            &tile[ts..ts + h],
+                            deg,
+                        );
+                        axpy(partial, &tile[us..us + h], a);
+                    }
+                    axpy(z, partial, params.fusion_w[e.semantic.0 as usize]);
+                }
+            }
+            leaky_relu(z, LEAKY_SLOPE);
+        }
+        debug_assert_eq!(cursor, edge_slots.len());
+        (tile_ids.len() as u64, (targets.len() + edge_slots.len()) as u64)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::datasets::Dataset;
+    use crate::engine::schedule::measure_reuse;
+    use crate::grouping::{default_n_max, group_overlap_driven, OverlapHypergraph};
     use crate::model::{ModelConfig, ModelKind};
 
     #[test]
@@ -173,17 +396,73 @@ mod tests {
         assert_eq!(m.rows, 0);
     }
 
+    fn acm_grouping(g: &crate::hetgraph::HetGraph) -> Grouping {
+        let h = OverlapHypergraph::build(g, 0.0);
+        group_overlap_driven(&h, default_n_max(g.target_vertices().len(), 4), 4)
+    }
+
     #[test]
     fn grouped_embed_covers_all_targets() {
-        use crate::grouping::{default_n_max, group_overlap_driven, OverlapHypergraph};
         let g = Dataset::Acm.load(0.03);
         let e = ReferenceEngine::new(&g, ModelConfig::new(ModelKind::Rgcn), 24);
         let f = FusedEngine::new(&e);
-        let h = OverlapHypergraph::build(&g, 0.0);
-        let grouping = group_overlap_driven(&h, default_n_max(g.target_vertices().len(), 4), 4);
+        let grouping = acm_grouping(&g);
         let (order, m) = f.embed_grouped(&grouping, 2);
         assert_eq!(order.len(), g.target_vertices().len());
         assert_eq!(m.rows, order.len());
+    }
+
+    #[test]
+    fn grouped_tile_path_bitwise_matches_striped() {
+        let g = Dataset::Acm.load(0.03);
+        let grouping = acm_grouping(&g);
+        let order = grouping.flat_order();
+        for kind in ModelKind::ALL {
+            let e = ReferenceEngine::new(&g, ModelConfig::new(kind), 24);
+            let f = FusedEngine::new(&e);
+            let want = e.embed_semantics_complete(&order);
+            for threads in [1usize, 3, 8] {
+                let (got_order, got, reuse) = f.embed_grouped_with_reuse(&grouping, threads);
+                assert_eq!(got_order, order);
+                assert_eq!(want.max_abs_diff(&got), 0.0, "{kind:?} t={threads}");
+                assert!(reuse.distinct_loads <= reuse.total_loads);
+                assert_eq!(reuse.groups as usize, grouping.groups.len());
+            }
+        }
+    }
+
+    #[test]
+    fn overlap_grouping_exhibits_actual_reuse() {
+        // The acceptance criterion: on an overlapping-group dataset the
+        // tiles must absorb reads — strictly fewer distinct loads than
+        // total loads, i.e. the path is not a no-op.
+        let g = Dataset::Acm.load(0.05);
+        let e = ReferenceEngine::new(&g, ModelConfig::new(ModelKind::Rgcn), 24);
+        let f = FusedEngine::new(&e);
+        let grouping = acm_grouping(&g);
+        let (_, _, reuse) = f.embed_grouped_with_reuse(&grouping, 4);
+        assert!(
+            reuse.distinct_loads < reuse.total_loads,
+            "no reuse: distinct {} !< total {}",
+            reuse.distinct_loads,
+            reuse.total_loads
+        );
+        assert!(reuse.reuse_factor() > 1.0);
+        // Execution-side counters must agree with the structural measure.
+        assert_eq!(reuse, measure_reuse(&grouping, f.adjacency()));
+    }
+
+    #[test]
+    fn single_group_tile_matches_striped() {
+        let g = Dataset::Dblp.load(0.03);
+        let e = ReferenceEngine::new(&g, ModelConfig::new(ModelKind::Rgat), 24);
+        let f = FusedEngine::new(&e);
+        let order = g.target_vertices();
+        let want = f.embed_semantics_complete(&order, 1);
+        let (got, reuse) = f.embed_group_tile(&order);
+        assert_eq!(want.max_abs_diff(&got), 0.0);
+        assert_eq!(reuse.groups, 1);
+        assert!(reuse.distinct_loads <= reuse.total_loads);
     }
 
     #[test]

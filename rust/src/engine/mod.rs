@@ -8,7 +8,9 @@
 //! built once per (graph, model)) vs a mutable [`FeatureState`] (the
 //! projected matrix, re-seeded between layers). [`ReferenceEngine`] is
 //! the serial oracle over those pieces; [`FusedEngine`] the parallel
-//! executor; `multilayer` runs whole stacks on one plan.
+//! executor; `schedule` bin-packs whole vertex groups onto its workers
+//! (group-affinity execution with group-local neighbor tiles);
+//! `multilayer` runs whole stacks on one plan.
 
 pub mod access;
 pub mod batchwise;
@@ -18,15 +20,16 @@ pub mod multilayer;
 pub mod memory;
 pub mod paradigm;
 pub mod plan;
+pub mod schedule;
 pub mod tensor;
 pub mod trace;
 
-pub use access::{AccessCounter, AccessReport};
+pub use access::{AccessCounter, AccessReport, TileReuse};
 pub use batchwise::{
     batched_semantic_passes, walk_per_semantic_batched, walk_per_semantic_batched_fused,
 };
 pub use functional::ReferenceEngine;
-pub use fused::FusedEngine;
+pub use fused::{FusedEngine, TileScratch};
 pub use memory::{MemoryReport, MemoryTracker};
 pub use multilayer::{
     embed_layers_fused, embed_layers_per_semantic, embed_layers_semantics_complete,
@@ -34,8 +37,10 @@ pub use multilayer::{
 };
 pub use paradigm::{
     walk_per_semantic, walk_per_semantic_fused, walk_semantics_complete,
-    walk_semantics_complete_fused, walk_semantics_complete_unfused,
+    walk_semantics_complete_fused, walk_semantics_complete_tiled,
+    walk_semantics_complete_unfused,
 };
 pub use plan::{FeatureState, InferencePlan, ModelParams};
+pub use schedule::{group_tile_counts, measure_reuse, GroupSchedule, WorkerPlan};
 pub use tensor::Matrix;
 pub use trace::{NullSink, StreamSink, TeeSink, TraceSink};

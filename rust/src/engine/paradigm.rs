@@ -129,6 +129,27 @@ pub fn walk_semantics_complete_fused<S: TraceSink>(
     }
 }
 
+/// Semantics-complete walk over a grouping with group-local tile
+/// accounting: per group, the exact per-target events of
+/// [`walk_semantics_complete_fused`] (so the flat access stream is
+/// unchanged), followed by one [`TraceSink::group_tile`] event reporting
+/// the `(distinct, total)` row loads of the group — the trace-side
+/// producer for `access::TileReuse` used as a sink (the numeric engine
+/// reports the same counters from its execution directly).
+pub fn walk_semantics_complete_tiled<S: TraceSink>(
+    fused: &FusedAdjacency,
+    m: &ModelConfig,
+    grouping: &crate::grouping::Grouping,
+    sink: &mut S,
+) {
+    let mut seen = rustc_hash::FxHashSet::default();
+    for group in &grouping.groups {
+        walk_semantics_complete_fused(fused, m, group, sink);
+        let (distinct, total) = super::schedule::group_tile_counts(fused, group, &mut seen);
+        sink.group_tile(distinct, total);
+    }
+}
+
 /// The seed (pre-fused) semantics-complete walk: one binary search per
 /// (target, semantic) and a live-semantics `Vec` per target. Kept only as
 /// the comparison baseline for `benches/hotpath.rs`; emits the exact same
@@ -249,6 +270,36 @@ mod tests {
         walk_semantics_complete_unfused(&g, &m, &order, &mut seed_mem);
         assert_eq!(fused_mem.peak_bytes, seed_mem.peak_bytes);
         assert_eq!(fused_mem.embedding_bytes, seed_mem.embedding_bytes);
+    }
+
+    #[test]
+    fn tiled_walk_feeds_reuse_sink_and_matches_measure() {
+        use crate::engine::access::TileReuse;
+        use crate::engine::schedule::measure_reuse;
+        use crate::engine::trace::TeeSink;
+        use crate::grouping::{default_n_max, group_overlap_driven, OverlapHypergraph};
+        use crate::hetgraph::FusedAdjacency;
+        let (g, m) = setup();
+        let fused = FusedAdjacency::build(&g);
+        let h = OverlapHypergraph::build(&g, 0.0);
+        let grouping =
+            group_overlap_driven(&h, default_n_max(g.target_vertices().len(), 4), 4);
+        // TileReuse as a sink collects exactly what measure_reuse reports,
+        // and the access stream equals the plain flat-order walk.
+        let mut reuse = TileReuse::default();
+        let mut acc = AccessCounter::default();
+        {
+            let mut tee = TeeSink(&mut reuse, &mut acc);
+            walk_semantics_complete_tiled(&fused, &m, &grouping, &mut tee);
+        }
+        assert_eq!(reuse, measure_reuse(&grouping, &fused));
+        assert!(reuse.groups > 0);
+        let mut flat_acc = AccessCounter::default();
+        walk_semantics_complete_fused(&fused, &m, &grouping.flat_order(), &mut flat_acc);
+        assert_eq!(acc.total, flat_acc.total);
+        assert_eq!(acc.unique(), flat_acc.unique());
+        // The access totals are the counters' denominator.
+        assert_eq!(acc.total, reuse.total_loads);
     }
 
     #[test]

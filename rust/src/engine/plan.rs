@@ -80,6 +80,16 @@ impl ModelParams {
         v: VId,
         deg: usize,
     ) -> f32 {
+        self.edge_weight_rows(sem, projected.row(u.idx()), projected.row(v.idx()), deg)
+    }
+
+    /// Edge weight from the two projected rows directly (the group-tile
+    /// path reads rows out of a worker-local tile instead of the full
+    /// feature table; tile rows are unmodified copies, so this is the one
+    /// implementation every path funnels through — bitwise by
+    /// construction).
+    #[inline]
+    pub fn edge_weight_rows(&self, sem: SemanticId, hu: &[f32], hv: &[f32], deg: usize) -> f32 {
         match self.m.kind {
             // RGCN / NARS: normalized mean aggregation.
             ModelKind::Rgcn | ModelKind::Nars => 1.0 / deg as f32,
@@ -89,8 +99,6 @@ impl ModelParams {
             // softmax lives in the JAX model.)
             ModelKind::Rgat => {
                 let (al, ar) = &self.attn[sem.0 as usize];
-                let hu = projected.row(u.idx());
-                let hv = projected.row(v.idx());
                 let mut e = dot(al, hu) + dot(ar, hv);
                 if e < 0.0 {
                     e *= LEAKY_SLOPE;

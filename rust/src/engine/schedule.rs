@@ -1,0 +1,363 @@
+//! Group-affinity work scheduling: whole vertex groups bin-packed onto
+//! workers, with a scatter map back to the caller's row order.
+//!
+//! The overlap-driven grouping (paper §IV-C) exists so that the targets
+//! sharing neighbor rows are processed *together*, letting one fetch of a
+//! shared row serve the whole group. Striping a flattened group order
+//! contiguously across workers — what `FusedEngine::embed_semantics_complete`
+//! does — destroys exactly that property at every stripe boundary and
+//! ignores the wildly skewed per-group aggregation work (hub groups hold
+//! the top-degree targets). This module is the software analogue of the
+//! accelerator's channel dispatcher:
+//!
+//! * **Work model.** A target costs `1 + |entries| + Σ deg` — one row
+//!   write, one fused-entry scan, one `axpy` per neighbor — summed over a
+//!   group. This mirrors the event counts of the trace walks, so the
+//!   schedule balances the same quantity the cycle simulator charges.
+//! * **LPT bin-packing.** Groups are assigned in descending-cost order,
+//!   each to the currently least-loaded worker (longest-processing-time
+//!   heuristic, ≤ 4/3·OPT makespan). Ties break on ascending group and
+//!   worker index, so the schedule is deterministic for a given
+//!   (grouping, adjacency, worker count).
+//! * **Scatter map.** Workers receive whole groups, not stripes, so their
+//!   output rows are no longer contiguous in the caller's order.
+//!   [`WorkerPlan::rows`] records, per worker-local target, the row in the
+//!   caller's order (`Grouping::flat_order`) its embedding belongs to;
+//!   collectively the rows form a permutation of `0..num_rows` (checked by
+//!   [`GroupSchedule::validate`] and the property tests).
+//!
+//! **Bitwise-preservation argument.** Scheduling never changes per-target
+//! numerics: every target is embedded by exactly one worker using the
+//! same per-target op order as the reference engine, and the scatter map
+//! puts each row where the striped path would have written it. The
+//! group-tile execution in `engine::fused` preserves bits for the same
+//! reason — tiles hold *unmodified copies* of projected rows, and copying
+//! a row does not change the floats the per-target loop reads. Hence any
+//! (grouping, worker count) produces output bitwise identical to
+//! `ReferenceEngine::embed_semantics_complete` on the same order.
+
+use super::access::TileReuse;
+use crate::grouping::Grouping;
+use crate::hetgraph::{FusedAdjacency, VId};
+use rustc_hash::FxHashSet;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// One worker's share of a schedule: whole groups, concatenated.
+/// (Constructed only by [`GroupSchedule::build`], which maintains the
+/// `group_offsets` sentinel invariant.)
+#[derive(Debug, Clone)]
+pub struct WorkerPlan {
+    /// Concatenated targets of every group assigned to this worker.
+    pub targets: Vec<VId>,
+    /// Caller-order row of each target (`rows[i]` is the output row of
+    /// `targets[i]`). Disjoint across workers; union is a permutation.
+    pub rows: Vec<u32>,
+    /// Group boundaries into `targets`/`rows`: group `k` of this worker is
+    /// `targets[group_offsets[k] as usize..group_offsets[k + 1] as usize]`.
+    group_offsets: Vec<u32>,
+    /// Modeled aggregation work assigned to this worker.
+    pub work: u64,
+}
+
+impl WorkerPlan {
+    fn new() -> WorkerPlan {
+        WorkerPlan { targets: Vec::new(), rows: Vec::new(), group_offsets: vec![0], work: 0 }
+    }
+
+    /// Number of whole groups assigned to this worker.
+    pub fn num_groups(&self) -> usize {
+        self.group_offsets.len() - 1
+    }
+
+    /// Iterate `(targets, rows)` slices of each assigned group.
+    pub fn iter_groups(&self) -> impl Iterator<Item = (&[VId], &[u32])> + '_ {
+        self.group_offsets.windows(2).map(move |w| {
+            let (a, b) = (w[0] as usize, w[1] as usize);
+            (&self.targets[a..b], &self.rows[a..b])
+        })
+    }
+}
+
+/// A complete group-affinity schedule (see module docs).
+#[derive(Debug, Clone)]
+pub struct GroupSchedule {
+    /// Per-worker plans; empty workers are kept (stable indexing).
+    pub workers: Vec<WorkerPlan>,
+    num_rows: usize,
+}
+
+/// Modeled aggregation cost of one target: one output-row write + one
+/// fused-entry scan + one weighted accumulate per neighbor. Matches the
+/// per-target event count of `walk_semantics_complete_fused`.
+#[inline]
+pub fn target_cost(fused: &FusedAdjacency, t: VId) -> u64 {
+    let entries = fused.entries_of(t);
+    1 + entries.len() as u64 + entries.iter().map(|e| e.degree() as u64).sum::<u64>()
+}
+
+impl GroupSchedule {
+    /// LPT bin-packing of `grouping`'s groups onto `workers` workers.
+    /// Row `i` of the caller's order is `grouping.flat_order()[i]`.
+    pub fn build(grouping: &Grouping, fused: &FusedAdjacency, workers: usize) -> GroupSchedule {
+        let workers = workers.max(1);
+        let num_rows = grouping.total_vertices();
+
+        // Per-group (cost, row base in the flat order).
+        let mut base = 0u32;
+        let mut costs: Vec<(u64, u32)> = Vec::with_capacity(grouping.groups.len());
+        for group in &grouping.groups {
+            let cost: u64 = group.iter().map(|&t| target_cost(fused, t)).sum();
+            costs.push((cost, base));
+            base += group.len() as u32;
+        }
+
+        // Descending cost, ascending group index on ties (deterministic).
+        let mut order: Vec<usize> = (0..grouping.groups.len()).collect();
+        order.sort_by_key(|&gi| (Reverse(costs[gi].0), gi));
+
+        // Min-heap of (load, worker): pops the least-loaded worker, lowest
+        // index first on equal load.
+        let mut plans: Vec<WorkerPlan> = (0..workers).map(|_| WorkerPlan::new()).collect();
+        let mut heap: BinaryHeap<Reverse<(u64, usize)>> =
+            (0..workers).map(|w| Reverse((0u64, w))).collect();
+        for gi in order {
+            let Reverse((load, w)) = heap.pop().expect("worker heap never empty");
+            let (cost, row_base) = costs[gi];
+            let plan = &mut plans[w];
+            let group = &grouping.groups[gi];
+            plan.targets.extend_from_slice(group);
+            plan.rows.extend(row_base..row_base + group.len() as u32);
+            plan.group_offsets.push(plan.targets.len() as u32);
+            plan.work += cost;
+            heap.push(Reverse((load + cost, w)));
+        }
+
+        let schedule = GroupSchedule { workers: plans, num_rows };
+        debug_assert!(schedule.validate().is_ok());
+        schedule
+    }
+
+    /// Total output rows (== caller-order length).
+    #[inline]
+    pub fn num_rows(&self) -> usize {
+        self.num_rows
+    }
+
+    /// Ratio of the busiest worker's modeled work to the mean — 1.0 is a
+    /// perfect balance (diagnostics; LPT guarantees ≤ 4/3·OPT makespan).
+    pub fn work_imbalance(&self) -> f64 {
+        let loads: Vec<u64> = self.workers.iter().map(|w| w.work).collect();
+        let total: u64 = loads.iter().sum();
+        if total == 0 {
+            return 1.0;
+        }
+        let mean = total as f64 / loads.len() as f64;
+        *loads.iter().max().unwrap() as f64 / mean
+    }
+
+    /// Structural check: per-worker lengths consistent, group offsets
+    /// monotone, and the scatter rows form a permutation of `0..num_rows`.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut seen = vec![false; self.num_rows];
+        for (w, plan) in self.workers.iter().enumerate() {
+            if plan.targets.len() != plan.rows.len() {
+                return Err(format!("worker {w}: targets/rows length mismatch"));
+            }
+            if plan.group_offsets.first() != Some(&0)
+                || *plan.group_offsets.last().unwrap() as usize != plan.targets.len()
+                || !plan.group_offsets.windows(2).all(|x| x[0] <= x[1])
+            {
+                return Err(format!("worker {w}: bad group offsets"));
+            }
+            for &r in &plan.rows {
+                let r = r as usize;
+                if r >= self.num_rows {
+                    return Err(format!("worker {w}: row {r} out of range"));
+                }
+                if seen[r] {
+                    return Err(format!("worker {w}: row {r} assigned twice"));
+                }
+                seen[r] = true;
+            }
+        }
+        match seen.iter().position(|&s| !s) {
+            Some(r) => Err(format!("row {r} never assigned")),
+            None => Ok(()),
+        }
+    }
+}
+
+/// Distinct vs total row-load counts of one group: `total` is one load
+/// per target plus one per edge (the event count of
+/// `walk_semantics_complete_fused` over the group); `distinct` is the
+/// number of unique rows a group-local tile would gather. `seen` is
+/// caller-held scratch (cleared here) so repeated calls don't reallocate.
+/// This is the single definition of the counter semantics — the engine's
+/// tile path, the trace walk, the simulator and [`measure_reuse`] all
+/// agree by construction.
+pub fn group_tile_counts(
+    fused: &FusedAdjacency,
+    group: &[VId],
+    seen: &mut FxHashSet<VId>,
+) -> (u64, u64) {
+    seen.clear();
+    let mut total = 0u64;
+    for &t in group {
+        seen.insert(t);
+        total += 1;
+        for e in fused.entries_of(t) {
+            for &u in fused.neighbors(e) {
+                seen.insert(u);
+                total += 1;
+            }
+        }
+    }
+    (seen.len() as u64, total)
+}
+
+/// Structural tile-reuse measurement for a grouping — the same counters
+/// the engine's tile path reports, computed without running numerics (per
+/// group: distinct rows touched vs total loads = targets + edges). Feeds
+/// `report::reuse_table` and cross-checks the execution-side counters.
+pub fn measure_reuse(grouping: &Grouping, fused: &FusedAdjacency) -> TileReuse {
+    let mut reuse = TileReuse::default();
+    let mut seen: FxHashSet<VId> = FxHashSet::default();
+    for group in &grouping.groups {
+        let (distinct, total) = group_tile_counts(fused, group, &mut seen);
+        reuse.record_group(distinct, total);
+    }
+    reuse
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::Dataset;
+    use crate::grouping::{default_n_max, group_overlap_driven, group_random, OverlapHypergraph};
+    use crate::hetgraph::FusedAdjacency;
+
+    fn setup() -> (crate::hetgraph::HetGraph, Grouping) {
+        let g = Dataset::Acm.load(0.05);
+        let h = OverlapHypergraph::build(&g, 0.0);
+        let n_max = default_n_max(g.target_vertices().len(), 4);
+        let grouping = group_overlap_driven(&h, n_max, 4);
+        (g, grouping)
+    }
+
+    #[test]
+    fn schedule_is_a_permutation() {
+        let (g, grouping) = setup();
+        let fused = FusedAdjacency::build(&g);
+        for workers in [1usize, 2, 3, 8, 64] {
+            let s = GroupSchedule::build(&grouping, &fused, workers);
+            s.validate().unwrap();
+            assert_eq!(s.num_rows(), g.target_vertices().len(), "w={workers}");
+            assert_eq!(s.workers.len(), workers);
+        }
+    }
+
+    #[test]
+    fn groups_stay_whole() {
+        let (g, grouping) = setup();
+        let fused = FusedAdjacency::build(&g);
+        let s = GroupSchedule::build(&grouping, &fused, 4);
+        // Every scheduled group slice must equal one grouping group.
+        let mut scheduled: Vec<Vec<VId>> = Vec::new();
+        for plan in &s.workers {
+            for (ts, rows) in plan.iter_groups() {
+                assert_eq!(ts.len(), rows.len());
+                // Rows of one group are contiguous in the caller's order.
+                assert!(rows.windows(2).all(|w| w[1] == w[0] + 1), "non-contiguous group rows");
+                scheduled.push(ts.to_vec());
+            }
+        }
+        let mut want: Vec<Vec<VId>> = grouping.groups.clone();
+        scheduled.sort();
+        want.sort();
+        assert_eq!(scheduled, want);
+    }
+
+    #[test]
+    fn rows_agree_with_flat_order() {
+        let (g, grouping) = setup();
+        let fused = FusedAdjacency::build(&g);
+        let flat = grouping.flat_order();
+        let s = GroupSchedule::build(&grouping, &fused, 3);
+        for plan in &s.workers {
+            for (i, &t) in plan.targets.iter().enumerate() {
+                assert_eq!(flat[plan.rows[i] as usize], t);
+            }
+        }
+    }
+
+    #[test]
+    fn lpt_respects_greedy_makespan_bound() {
+        let (g, grouping) = setup();
+        let fused = FusedAdjacency::build(&g);
+        let workers = 4u64;
+        let s = GroupSchedule::build(&grouping, &fused, workers as usize);
+        let costs: Vec<u64> = grouping
+            .groups
+            .iter()
+            .map(|gr| gr.iter().map(|&t| target_cost(&fused, t)).sum())
+            .collect();
+        let total: u64 = costs.iter().sum();
+        let max_cost = costs.iter().copied().max().unwrap_or(0);
+        let max_load = s.workers.iter().map(|w| w.work).max().unwrap();
+        assert_eq!(s.workers.iter().map(|w| w.work).sum::<u64>(), total);
+        // Greedy least-loaded invariant: the busiest worker's load is at
+        // most the mean plus one group (holds for any greedy order, so it
+        // is a theorem, not an empirical observation about this dataset).
+        assert!(
+            max_load <= total / workers + max_cost,
+            "max {max_load} > {} + {max_cost}",
+            total / workers
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let (g, grouping) = setup();
+        let fused = FusedAdjacency::build(&g);
+        let a = GroupSchedule::build(&grouping, &fused, 5);
+        let b = GroupSchedule::build(&grouping, &fused, 5);
+        for (x, y) in a.workers.iter().zip(&b.workers) {
+            assert_eq!(x.targets, y.targets);
+            assert_eq!(x.rows, y.rows);
+            assert_eq!(x.work, y.work);
+        }
+    }
+
+    #[test]
+    fn random_grouping_schedules_cleanly() {
+        let g = Dataset::Imdb.load(0.05);
+        let fused = FusedAdjacency::build(&g);
+        let grouping = group_random(&g, 37, 0xBEEF);
+        let s = GroupSchedule::build(&grouping, &fused, 6);
+        s.validate().unwrap();
+        assert_eq!(s.num_rows(), g.target_vertices().len());
+    }
+
+    #[test]
+    fn measured_reuse_never_exceeds_totals() {
+        let (g, grouping) = setup();
+        let fused = FusedAdjacency::build(&g);
+        let r = measure_reuse(&grouping, &fused);
+        assert_eq!(r.groups as usize, grouping.groups.len());
+        assert!(r.distinct_loads <= r.total_loads);
+        // Each group's distinct count is at least its target count, so the
+        // global distinct total is at least the number of targets.
+        assert!(r.distinct_loads >= g.target_vertices().len() as u64);
+    }
+
+    #[test]
+    fn empty_grouping_is_valid() {
+        let grouping = Grouping { groups: Vec::new(), hub_groups: 0, intra_weight_fraction: 0.0 };
+        let g = Dataset::Acm.load(0.03);
+        let fused = FusedAdjacency::build(&g);
+        let s = GroupSchedule::build(&grouping, &fused, 4);
+        s.validate().unwrap();
+        assert_eq!(s.num_rows(), 0);
+    }
+}

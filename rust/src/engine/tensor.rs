@@ -69,24 +69,29 @@ impl Matrix {
     }
 }
 
-/// Vector helpers used by aggregation. Both are unrolled 4-wide with a
-/// scalar tail: the fused engine's hot loop is one `axpy` per edge at
-/// hidden=64, and the scalar seed loops left the optimizer with a strict
-/// sequential dependence. `axpy` lanes are element-independent, so the
-/// unrolled version is **bitwise identical** to the scalar seed; `dot`
-/// uses four independent accumulators, which changes the reduction order
-/// (not the math) — every engine and paradigm shares this one `dot`, so
+/// Vector helpers used by aggregation. Both are unrolled 8-wide with a
+/// scalar tail (one full AVX2 f32 vector / two NEON vectors per step):
+/// the fused engine's hot loop is one `axpy` per edge at hidden=64, and
+/// narrower unrolls left latency-bound dependency chains on wide cores.
+/// `axpy` lanes are element-independent, so the unrolled version is
+/// **bitwise identical** to the scalar seed at any width; `dot` uses
+/// eight independent accumulators, which changes the reduction order (not
+/// the math) — every engine and paradigm shares this one `dot`, so
 /// cross-engine equivalence stays bitwise.
 pub fn axpy(acc: &mut [f32], x: &[f32], a: f32) {
     debug_assert_eq!(acc.len(), x.len());
-    let wide = acc.len() / 4 * 4;
+    let wide = acc.len() / 8 * 8;
     let (acc_w, acc_t) = acc.split_at_mut(wide);
     let (x_w, x_t) = x.split_at(wide);
-    for (o, v) in acc_w.chunks_exact_mut(4).zip(x_w.chunks_exact(4)) {
+    for (o, v) in acc_w.chunks_exact_mut(8).zip(x_w.chunks_exact(8)) {
         o[0] += a * v[0];
         o[1] += a * v[1];
         o[2] += a * v[2];
         o[3] += a * v[3];
+        o[4] += a * v[4];
+        o[5] += a * v[5];
+        o[6] += a * v[6];
+        o[7] += a * v[7];
     }
     for (o, &v) in acc_t.iter_mut().zip(x_t) {
         *o += a * v;
@@ -96,19 +101,23 @@ pub fn axpy(acc: &mut [f32], x: &[f32], a: f32) {
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
     let n = a.len().min(b.len());
-    let wide = n / 4 * 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-    for (x, y) in a[..wide].chunks_exact(4).zip(b[..wide].chunks_exact(4)) {
-        s0 += x[0] * y[0];
-        s1 += x[1] * y[1];
-        s2 += x[2] * y[2];
-        s3 += x[3] * y[3];
+    let wide = n / 8 * 8;
+    let mut s = [0.0f32; 8];
+    for (x, y) in a[..wide].chunks_exact(8).zip(b[..wide].chunks_exact(8)) {
+        s[0] += x[0] * y[0];
+        s[1] += x[1] * y[1];
+        s[2] += x[2] * y[2];
+        s[3] += x[3] * y[3];
+        s[4] += x[4] * y[4];
+        s[5] += x[5] * y[5];
+        s[6] += x[6] * y[6];
+        s[7] += x[7] * y[7];
     }
     let mut tail = 0.0f32;
     for (x, y) in a[wide..n].iter().zip(&b[wide..n]) {
         tail += x * y;
     }
-    (s0 + s1) + (s2 + s3) + tail
+    ((s[0] + s[1]) + (s[2] + s[3])) + ((s[4] + s[5]) + (s[6] + s[7])) + tail
 }
 
 pub fn leaky_relu(x: &mut [f32], slope: f32) {
@@ -159,7 +168,9 @@ mod tests {
 
     #[test]
     fn axpy_unrolled_matches_scalar_all_lengths() {
-        for n in 0..13usize {
+        // Lengths cover zero, every tail 1..=7, one full 8-wide step, and
+        // multiple steps with every tail again (through 2*8+7).
+        for n in 0..24usize {
             let x: Vec<f32> = (0..n).map(|i| (i as f32) * 0.25 - 1.0).collect();
             let mut got: Vec<f32> = (0..n).map(|i| i as f32).collect();
             let mut want = got.clone();
@@ -173,15 +184,24 @@ mod tests {
 
     #[test]
     fn dot_unrolled_covers_wide_and_tail() {
-        for n in 0..13usize {
+        for n in 0..24usize {
             let a: Vec<f32> = (0..n).map(|i| i as f32 + 1.0).collect();
             let b: Vec<f32> = (0..n).map(|i| 2.0 - i as f32 * 0.5).collect();
             let got = dot(&a, &b);
             // Compare against a reference accumulation with tolerance: the
-            // 4-wide reduction order differs from strict left-to-right.
+            // 8-wide reduction order differs from strict left-to-right.
             let want: f64 =
                 a.iter().zip(&b).map(|(x, y)| *x as f64 * *y as f64).sum();
-            assert!((got as f64 - want).abs() < 1e-4, "n={n}: {got} vs {want}");
+            assert!((got as f64 - want).abs() < 1e-3, "n={n}: {got} vs {want}");
         }
+    }
+
+    #[test]
+    fn dot_deterministic_across_calls() {
+        // The shared reduction order is what keeps cross-engine
+        // equivalence bitwise: same inputs must give identical bits.
+        let a: Vec<f32> = (0..67).map(|i| (i as f32).sin()).collect();
+        let b: Vec<f32> = (0..67).map(|i| (i as f32).cos()).collect();
+        assert_eq!(dot(&a, &b).to_bits(), dot(&a, &b).to_bits());
     }
 }

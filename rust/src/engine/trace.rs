@@ -19,6 +19,10 @@ pub trait TraceSink {
     /// A new aggregation workload (target vertex) begins. Lets cache models
     /// align group boundaries.
     fn begin_target(&mut self, _v: VId) {}
+    /// A group-local neighbor tile was gathered: `distinct` rows fetched
+    /// from the feature table served `total` aggregation reads for the
+    /// group just processed (see `access::TileReuse`).
+    fn group_tile(&mut self, _distinct: u64, _total: u64) {}
 }
 
 /// No-op sink (pure-numerics runs).
@@ -54,6 +58,10 @@ impl<A: TraceSink, B: TraceSink> TraceSink for TeeSink<'_, A, B> {
     fn begin_target(&mut self, v: VId) {
         self.0.begin_target(v);
         self.1.begin_target(v);
+    }
+    fn group_tile(&mut self, distinct: u64, total: u64) {
+        self.0.group_tile(distinct, total);
+        self.1.group_tile(distinct, total);
     }
 }
 

@@ -29,7 +29,8 @@ pub mod prelude {
     pub use crate::datasets::Dataset;
     pub use crate::engine::{
         walk_per_semantic, walk_semantics_complete, AccessCounter, FeatureState, FusedEngine,
-        InferencePlan, MemoryReport, MemoryTracker, ModelParams, ReferenceEngine, TraceSink,
+        GroupSchedule, InferencePlan, MemoryReport, MemoryTracker, ModelParams, ReferenceEngine,
+        TileReuse, TraceSink,
     };
     pub use crate::hetgraph::{
         FusedAdjacency, HetGraph, HetGraphBuilder, SemanticId, VId, VertexTypeId,

@@ -8,15 +8,20 @@
 //! sim     <dataset> [--model M] [--mode X] cycle simulation, one config
 //! ablate  <dataset> [--model M]            all four -B/-S/-P/-O configs
 //! group   <dataset> [--scale S]            grouping quality report
+//! engine  <dataset> [--model M] [--threads N]  host engine: group-affinity
+//!                                          tiles vs contiguous stripes
 //! compare <dataset> [--model M]            TLV vs A100 vs HiHGNN
-//! bench-table <fig2|fig7|fig8|fig9|table3|table4>   paper table
-//! serve   [--model M] [--scale S]          demo serving loop (needs artifacts)
+//! bench-table <fig2|fig7|fig8|fig9|table3|table4|reuse>  paper table
+//! serve   [--model M] [--scale S] [--cpu]  demo serving loop (PJRT needs
+//!                                          artifacts; --cpu needs none)
 //! ```
 
 use std::process::exit;
+use std::time::Instant;
 use tlv_hgnn::baselines::{run_a100, run_hihgnn, GpuConfig, HiHgnnConfig};
 use tlv_hgnn::datasets::Dataset;
 use tlv_hgnn::energy::{tlv_energy, EnergyTable};
+use tlv_hgnn::engine::{FeatureState, FusedEngine, InferencePlan};
 use tlv_hgnn::grouping::{default_n_max, group_overlap_driven, OverlapHypergraph};
 use tlv_hgnn::hetgraph::stats;
 use tlv_hgnn::model::{ModelConfig, ModelKind};
@@ -26,9 +31,9 @@ use tlv_hgnn::util::table::{f2, human_bytes, human_count, pct};
 
 fn usage() -> ! {
     eprintln!(
-        "usage: tlv-hgnn <stats|sim|ablate|group|compare|bench-table|serve> [args]\n\
+        "usage: tlv-hgnn <stats|sim|ablate|group|engine|compare|bench-table|serve> [args]\n\
          datasets: acm imdb dblp am fb | models: rgcn rgat nars\n\
-         modes: -B -S -P -O | flags: --scale S --model M --mode X"
+         modes: -B -S -P -O | flags: --scale S --model M --mode X --threads N --cpu"
     );
     exit(2)
 }
@@ -120,6 +125,14 @@ fn main() {
             println!("  dram traffic   {}", human_bytes(r.dram.bytes));
             println!("  row hit rate   {}", pct(r.dram.row_hit_rate()));
             println!("  cache hit rate {}", pct(r.cache_hit_rate()));
+            if r.tile_reuse.groups > 0 {
+                println!(
+                    "  tile reuse     {:.2}x over {} groups ({} of loads absorbed)",
+                    r.tile_reuse.reuse_factor(),
+                    r.tile_reuse.groups,
+                    pct(r.tile_reuse.saved_fraction()),
+                );
+            }
             println!("  energy         {:.2} mJ ({} DRAM)", e.total_mj(), pct(e.dram_fraction()));
         }
         "ablate" => {
@@ -160,6 +173,52 @@ fn main() {
             println!("  groups (n_max={n_max})   {}", gr.groups.len());
             println!("  hub groups               {}", gr.hub_groups);
             println!("  intra-group weight       {}", pct(gr.intra_weight_fraction));
+        }
+        "engine" => {
+            // Host-engine comparison: contiguous stripes vs group-affinity
+            // scheduling with group-local tiles, same bits required.
+            let d = rest.first().map(|s| parse_dataset(s)).unwrap_or(Dataset::Acm);
+            let kind = flag(rest, "--model").map(|s| parse_model(&s)).unwrap_or(ModelKind::Rgcn);
+            let scale =
+                flag(rest, "--scale").and_then(|s| s.parse().ok()).unwrap_or(d.bench_scale());
+            let threads = flag(rest, "--threads")
+                .and_then(|s| s.parse().ok())
+                .unwrap_or_else(FusedEngine::default_threads);
+            let g = d.load(scale);
+            let plan = InferencePlan::build(&g, ModelConfig::new(kind), 64);
+            let state = FeatureState::project_all(&plan, threads);
+            let engine = FusedEngine::over(&plan, &state);
+            let h = OverlapHypergraph::build(&g, 0.01);
+            let grouping =
+                group_overlap_driven(&h, default_n_max(g.target_vertices().len(), threads), threads);
+            let order = grouping.flat_order();
+
+            let t0 = Instant::now();
+            let striped = engine.embed_semantics_complete(&order, threads);
+            let striped_t = t0.elapsed();
+            let t1 = Instant::now();
+            let (_, grouped, reuse) = engine.embed_grouped_with_reuse(&grouping, threads);
+            let grouped_t = t1.elapsed();
+
+            println!("{} {} @ scale {scale}, {threads} thread(s)", d.name(), kind.name());
+            println!("  targets            {}", order.len());
+            println!("  striped embed      {striped_t:.2?}");
+            println!("  group-tile embed   {grouped_t:.2?}");
+            println!(
+                "  speedup            {:.2}x",
+                striped_t.as_secs_f64() / grouped_t.as_secs_f64()
+            );
+            println!(
+                "  tile reuse         {:.2}x over {} groups ({} of loads absorbed)",
+                reuse.reuse_factor(),
+                reuse.groups,
+                pct(reuse.saved_fraction()),
+            );
+            let diff = striped.max_abs_diff(&grouped);
+            println!("  max |diff|         {diff:e} {}", if diff == 0.0 { "(bitwise)" } else { "(FAIL)" });
+            if diff != 0.0 {
+                exit(1);
+            }
         }
         "compare" => {
             let d = rest.first().map(|s| parse_dataset(s)).unwrap_or(Dataset::Acm);
@@ -210,17 +269,26 @@ fn main() {
                 Some("fig9") => println!("{}", report::fig9_ablation().render()),
                 Some("table3") => println!("{}", report::table3_expansion().render()),
                 Some("table4") => println!("{}", report::table4_area_power().render()),
+                Some("reuse") => println!("{}", report::reuse_table().render()),
                 _ => usage(),
             };
         }
         "serve" => {
-            // Thin wrapper over the serve_inference example flow.
+            // Thin wrapper over the serve_inference example flow. With
+            // --cpu the workers run the in-process fused engine and no
+            // artifacts are needed.
             let kind = flag(rest, "--model").map(|s| parse_model(&s)).unwrap_or(ModelKind::Rgcn);
             let scale = flag(rest, "--scale").and_then(|s| s.parse().ok()).unwrap_or(0.1);
+            let cpu = rest.iter().any(|a| a == "--cpu");
             let g = std::sync::Arc::new(Dataset::Acm.load(scale));
+            let cfg = if cpu {
+                tlv_hgnn::coordinator::ServerConfig::cpu(kind)
+            } else {
+                tlv_hgnn::coordinator::ServerConfig::new(kind)
+            };
             let server = match tlv_hgnn::coordinator::Server::start(
                 std::sync::Arc::clone(&g),
-                tlv_hgnn::coordinator::ServerConfig::new(kind),
+                cfg,
             ) {
                 Ok(s) => s,
                 Err(e) => {

@@ -33,7 +33,9 @@ impl ModelKind {
 
 /// Hyperparameters (HGB defaults, as the paper trains "with the
 /// hyperparameters specified in their original papers").
-#[derive(Debug, Clone, PartialEq)]
+/// `Eq`/`Hash` so a (model, dims) tuple can key the serving coordinator's
+/// plan cache — every field is integral, so both derives are exact.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct ModelConfig {
     pub kind: ModelKind,
     /// Hidden dimension after feature projection.

@@ -9,11 +9,12 @@ use crate::energy::{
     area_power_report, chip_area_mm2, chip_power_w, gpu_energy, hihgnn_energy, tlv_energy,
     EnergyTable,
 };
-use crate::engine::{walk_per_semantic, MemoryTracker};
+use crate::engine::{measure_reuse, walk_per_semantic, MemoryTracker};
+use crate::grouping::{default_n_max, group_overlap_driven, OverlapHypergraph};
 use crate::hetgraph::stats;
 use crate::model::{ModelConfig, ModelKind};
 use crate::sim::{AccelConfig, ExecMode, SimResult, Simulator};
-use crate::util::table::{f2, fx, pct, Table};
+use crate::util::table::{f2, fx, human_count, pct, Table};
 
 /// Geometric mean helper (the paper reports GM across workloads).
 pub fn geomean(xs: &[f64]) -> f64 {
@@ -261,6 +262,41 @@ pub fn table4_area_power() -> Table {
     t
 }
 
+/// Group-local tile reuse per dataset (the §IV-C locality the scheduler
+/// exploits on the host hot path): distinct vs total neighbor-row loads
+/// under overlap-driven grouping at bench scale, plus the fraction of
+/// feature-table reads the group tiles absorb.
+pub fn reuse_table() -> Table {
+    let mut t = Table::new(&[
+        "dataset",
+        "groups",
+        "total_loads",
+        "distinct_loads",
+        "reuse",
+        "absorbed",
+    ]);
+    let mut factors = Vec::new();
+    for d in Dataset::ALL {
+        let g = d.load(d.bench_scale());
+        let fused = g.fused();
+        let h = OverlapHypergraph::build(&g, 0.01);
+        let n_max = default_n_max(g.target_vertices().len(), 4);
+        let grouping = group_overlap_driven(&h, n_max, 4);
+        let r = measure_reuse(&grouping, &fused);
+        factors.push(r.reuse_factor());
+        t.row(&[
+            d.name().into(),
+            r.groups.to_string(),
+            human_count(r.total_loads),
+            human_count(r.distinct_loads),
+            f2(r.reuse_factor()),
+            pct(r.saved_fraction()),
+        ]);
+    }
+    t.row(&["GM".into(), "-".into(), "-".into(), "-".into(), f2(geomean(&factors)), "-".into()]);
+    t
+}
+
 /// §III-B companion: expansion measured from the trace walker itself
 /// (framework-independent lower bound).
 pub fn paradigm_expansion(d: Dataset, kind: ModelKind) -> (f64, f64) {
@@ -293,6 +329,19 @@ mod tests {
         let g = Dataset::Acm.load(0.05);
         let f = stats::redundant_access_fraction(&g);
         assert!(f > 0.0 && f < 1.0);
+    }
+
+    #[test]
+    fn reuse_measures_on_test_scale() {
+        // Smoke at small scale (the full table runs in benches/CLI).
+        let g = Dataset::Acm.load(0.05);
+        let fused = g.fused();
+        let h = OverlapHypergraph::build(&g, 0.0);
+        let grouping =
+            group_overlap_driven(&h, default_n_max(g.target_vertices().len(), 4), 4);
+        let r = measure_reuse(&grouping, &fused);
+        assert!(r.distinct_loads < r.total_loads, "ACM must show overlap reuse");
+        assert!(r.reuse_factor() > 1.0);
     }
 
     #[test]

@@ -12,7 +12,7 @@
 //! * **-O** — four channels, overlap-driven vertex grouping (full
 //!   TLV-HGNN; groups stream out of the grouper pipelined with execution).
 
-use crate::engine::InferencePlan;
+use crate::engine::{InferencePlan, TileReuse};
 use crate::grouping::{
     default_n_max, group_overlap_driven, group_random, group_sequential, simulate_grouper,
     GrouperConfig, GrouperStats, Grouping, OverlapHypergraph,
@@ -136,6 +136,11 @@ pub struct SimResult {
     /// Peak live intermediate bytes on-device (expansion accounting).
     pub peak_partial_bytes: u64,
     pub flops: u64,
+    /// Group-local tile reuse of the grouped schedules: distinct vs total
+    /// neighbor-row loads per group (zero for the -B baseline, which has
+    /// no groups). Mirrors the counters the software engine reports, so
+    /// simulated and host-side locality are directly comparable.
+    pub tile_reuse: TileReuse,
 }
 
 impl SimResult {
@@ -247,10 +252,10 @@ impl<'g> Simulator<'g> {
         }
         let mode_switch_stall = self.cfg.rpe.reconfig_cycles as u64;
 
-        let (na_cycles, grouper_stats, peak_partial_bytes) = match mode {
+        let (na_cycles, grouper_stats, peak_partial_bytes, tile_reuse) = match mode {
             ExecMode::PerSemanticBaseline => {
                 let c = self.run_per_semantic(&mut hbm, &mut caches, &mut events, &addr, fp_cycles + mode_switch_stall);
-                (c.0, None, c.1)
+                (c.0, None, c.1, TileReuse::default())
             }
             ExecMode::SemanticsComplete => {
                 let grouping = group_sequential(self.g, usize::MAX);
@@ -264,7 +269,7 @@ impl<'g> Simulator<'g> {
                     &addr,
                     fp_cycles + mode_switch_stall,
                 );
-                (c.0, None, c.1)
+                (c.0, None, c.1, c.2)
             }
             ExecMode::RandomGrouped => {
                 let n_max = default_n_max(self.g.target_vertices().len(), channels);
@@ -279,7 +284,7 @@ impl<'g> Simulator<'g> {
                     &addr,
                     fp_cycles + mode_switch_stall,
                 );
-                (c.0, None, c.1)
+                (c.0, None, c.1, c.2)
             }
             ExecMode::OverlapGrouped => {
                 let h = OverlapHypergraph::build(self.g, 0.01);
@@ -298,7 +303,7 @@ impl<'g> Simulator<'g> {
                     &addr,
                     fp_cycles + mode_switch_stall,
                 );
-                (c.0, Some(gs), c.1)
+                (c.0, Some(gs), c.1, c.2)
             }
         };
 
@@ -322,6 +327,7 @@ impl<'g> Simulator<'g> {
             mode_switches: arrays.iter().map(|a| a.mode_switches).sum(),
             peak_partial_bytes,
             flops: w.total_flops(),
+            tile_reuse,
         }
     }
 
@@ -434,7 +440,8 @@ impl<'g> Simulator<'g> {
     /// Grouped semantics-complete execution (-S / -P / -O).
     /// Groups are assigned round-robin to channels; with a grouper stats
     /// record, group g cannot start before its emit cycle (streaming
-    /// pipeline, §IV-C2). Returns (finish_cycle, peak_partial_bytes).
+    /// pipeline, §IV-C2). Returns (finish_cycle, peak_partial_bytes,
+    /// group-local tile reuse counters).
     #[allow(clippy::too_many_arguments)]
     fn run_grouped(
         &self,
@@ -446,7 +453,7 @@ impl<'g> Simulator<'g> {
         events: &mut SimEvents,
         addr: &AddrMap,
         start: u64,
-    ) -> (u64, u64) {
+    ) -> (u64, u64, TileReuse) {
         let arr = RpeArray::new(self.cfg.rpe.clone(), self.cfg.rpes_per_channel);
         let rpes = arr.count as u64;
         let mut ch_time = vec![start; channels];
@@ -478,6 +485,10 @@ impl<'g> Simulator<'g> {
             .collect();
         order.sort();
 
+        // Group-local tile accounting (distinct vs total row loads) —
+        // dispatch-independent, so it shares the engine's one counter
+        // definition instead of re-deriving it here.
+        let reuse = crate::engine::measure_reuse(grouping, &self.fused);
         for (ready, gi) in order {
             let group = &grouping.groups[gi];
             // Least-loaded channel at dispatch time.
@@ -527,7 +538,7 @@ impl<'g> Simulator<'g> {
             let compute_cycles = compute / rpes.max(1) + self.cfg.rpe.pipeline_depth as u64;
             ch_time[ch] = t + fetch_cycles.max(compute_cycles);
         }
-        (*ch_time.iter().max().unwrap_or(&start), peak_partials)
+        (*ch_time.iter().max().unwrap_or(&start), peak_partials, reuse)
     }
 }
 
@@ -619,6 +630,28 @@ mod tests {
             Simulator::with_plan(AccelConfig::tlv_default(), &g, &plan).run(ExecMode::OverlapGrouped);
         assert_eq!(a.cycles, b.cycles);
         assert_eq!(a.dram.accesses, b.dram.accesses);
+    }
+
+    #[test]
+    fn grouped_modes_report_tile_reuse() {
+        let (g, m) = sim(Dataset::Acm, ModelKind::Rgcn);
+        let s = Simulator::new(AccelConfig::tlv_default(), &g, m);
+        let b = s.run(ExecMode::PerSemanticBaseline);
+        assert_eq!(b.tile_reuse.groups, 0, "-B has no groups");
+        // -S is one whole-order group: any shared neighbor makes distinct
+        // strictly smaller than total (ACM's redundancy is the paper's
+        // Fig. 2b premise).
+        let sc = s.run(ExecMode::SemanticsComplete);
+        assert_eq!(sc.tile_reuse.groups, 1);
+        assert!(
+            sc.tile_reuse.distinct_loads < sc.tile_reuse.total_loads,
+            "no redundancy measured: {} !< {}",
+            sc.tile_reuse.distinct_loads,
+            sc.tile_reuse.total_loads
+        );
+        let o = s.run(ExecMode::OverlapGrouped);
+        assert!(o.tile_reuse.groups > 1);
+        assert!(o.tile_reuse.distinct_loads <= o.tile_reuse.total_loads);
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Integration: the serving coordinator end-to-end — router + batcher +
-//! multi-channel PJRT workers — validated against the CPU reference.
-//! Skips (with a message) when artifacts are not built.
+//! multi-channel workers — validated against the CPU reference. The PJRT
+//! tests skip (with a message) when artifacts are not built; the CPU
+//! executor tests run everywhere and are held to bitwise equality.
 
 use std::sync::Arc;
 use tlv_hgnn::coordinator::{Server, ServerConfig};
@@ -92,6 +93,68 @@ fn concurrent_requests_all_complete() {
     assert_eq!(m.requests.load(std::sync::atomic::Ordering::Relaxed), 4);
     let (p50, _, p99) = m.latency_percentiles();
     assert!(p50 > 0 && p99 >= p50);
+}
+
+#[test]
+fn cpu_executor_serves_bitwise_reference() {
+    // No artifacts needed: the CPU executor runs the fused engine's
+    // group-tile path over the cached plan, which is bitwise-identical to
+    // the reference oracle (not merely within tolerance).
+    let g = Arc::new(graph(11));
+    for kind in [ModelKind::Rgcn, ModelKind::Rgat, ModelKind::Nars] {
+        let server = Server::start(Arc::clone(&g), ServerConfig::cpu(kind)).unwrap();
+        let reference = ReferenceEngine::new(&g, ModelConfig::new(kind), 64);
+        let targets: Vec<VId> = (0..100).map(VId).collect();
+        let resp = server.submit(targets.clone()).unwrap();
+        assert_eq!(resp.embeddings.len(), targets.len());
+        let want = reference.embed_semantics_complete(&targets);
+        for (i, &t) in targets.iter().enumerate() {
+            let got = resp.embedding_of(t).expect("missing row");
+            assert_eq!(got, want.row(i), "{kind:?} target {t} not bitwise equal");
+        }
+        server.shutdown();
+    }
+}
+
+#[test]
+fn cpu_servers_share_plans_through_one_cache() {
+    use tlv_hgnn::coordinator::PlanCache;
+    let g = Arc::new(graph(13));
+    let cache = Arc::new(PlanCache::new());
+    let mk = |kind| ServerConfig { plans: Arc::clone(&cache), ..ServerConfig::cpu(kind) };
+    let a = Server::start(Arc::clone(&g), mk(ModelKind::Rgcn)).unwrap();
+    let b = Server::start(Arc::clone(&g), mk(ModelKind::Rgat)).unwrap();
+    let c = Server::start(Arc::clone(&g), mk(ModelKind::Rgcn)).unwrap();
+    // Two distinct models over one graph → two plans, one adjacency; the
+    // third server reuses the first plan outright.
+    assert_eq!(cache.len(), 2);
+    let resp = c.submit((0..10).map(VId).collect()).unwrap();
+    assert_eq!(resp.embeddings.len(), 10);
+    a.shutdown();
+    b.shutdown();
+    c.shutdown();
+}
+
+#[test]
+fn cpu_executor_concurrent_requests_complete() {
+    let g = Arc::new(graph(17));
+    let server = Arc::new(Server::start(Arc::clone(&g), ServerConfig::cpu(ModelKind::Rgcn)).unwrap());
+    let mut handles = Vec::new();
+    for c in 0..4u32 {
+        let server = Arc::clone(&server);
+        handles.push(std::thread::spawn(move || {
+            let targets: Vec<VId> = (c * 20..c * 20 + 20).map(VId).collect();
+            let resp = server.submit(targets.clone()).unwrap();
+            assert_eq!(resp.embeddings.len(), 20);
+            for &t in &targets {
+                assert!(resp.embedding_of(t).is_some());
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(server.metrics.requests.load(std::sync::atomic::Ordering::Relaxed), 4);
 }
 
 #[test]

@@ -5,8 +5,9 @@
 
 use rustc_hash::FxHashSet;
 use tlv_hgnn::engine::{
-    walk_per_semantic, walk_per_semantic_batched, walk_semantics_complete, AccessCounter,
-    FeatureState, FusedEngine, InferencePlan, Matrix, MemoryTracker, ReferenceEngine,
+    measure_reuse, walk_per_semantic, walk_per_semantic_batched, walk_semantics_complete,
+    AccessCounter, FeatureState, FusedEngine, GroupSchedule, InferencePlan, Matrix,
+    MemoryTracker, ReferenceEngine,
 };
 use tlv_hgnn::grouping::{
     default_n_max, group_overlap_driven, group_random, group_sequential, simulate_grouper,
@@ -151,6 +152,69 @@ fn prop_grouping_partitions_targets() {
                 assert!(!gr.is_empty());
             }
         }
+    });
+}
+
+#[test]
+fn prop_schedule_scatter_is_permutation() {
+    // The satellite property: for random graphs × random groupings ×
+    // random worker counts, the scatter map assigns every target row
+    // exactly once (a permutation of 0..num_rows), groups stay whole, and
+    // rows point back at the grouping's flat order.
+    check("schedule-permutation", 25, |rng| {
+        let g = gen::hetgraph(rng);
+        let fused = FusedAdjacency::build(&g);
+        let n_targets = g.target_vertices().len();
+        let n_max = 1 + rng.gen_index(n_targets.max(1));
+        let grouping = match rng.gen_index(3) {
+            0 => group_overlap_driven(&OverlapHypergraph::build(&g, 0.0), n_max, 4),
+            1 => group_random(&g, n_max, rng.gen_range(1 << 20)),
+            _ => group_sequential(&g, n_max),
+        };
+        let workers = 1 + rng.gen_index(9);
+        let schedule = GroupSchedule::build(&grouping, &fused, workers);
+        schedule.validate().unwrap();
+        assert_eq!(schedule.num_rows(), n_targets);
+
+        let flat = grouping.flat_order();
+        let mut seen = vec![false; n_targets];
+        for plan in &schedule.workers {
+            assert_eq!(plan.targets.len(), plan.rows.len());
+            for (i, &t) in plan.targets.iter().enumerate() {
+                let row = plan.rows[i] as usize;
+                assert!(!seen[row], "row {row} scattered twice");
+                seen[row] = true;
+                assert_eq!(flat[row], t, "scatter row does not match flat order");
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "some row never scattered");
+        // Work accounting is exact: total loads = targets + edges.
+        let r = measure_reuse(&grouping, &fused);
+        assert_eq!(r.total_loads, n_targets as u64 + g.num_edges() as u64);
+        assert!(r.distinct_loads <= r.total_loads);
+    });
+}
+
+#[test]
+fn prop_scheduled_tile_execution_matches_reference() {
+    check("scheduled-tile-equal", 8, |rng| {
+        let g = gen::hetgraph(rng);
+        let kind = [ModelKind::Rgcn, ModelKind::Rgat, ModelKind::Nars][rng.gen_index(3)];
+        let e = ReferenceEngine::new(&g, ModelConfig::new(kind), 16);
+        let f = FusedEngine::new(&e);
+        let n_targets = g.target_vertices().len();
+        if n_targets == 0 {
+            return;
+        }
+        let n_max = 1 + rng.gen_index(n_targets);
+        let grouping = group_random(&g, n_max, rng.gen_range(1 << 20));
+        let order = grouping.flat_order();
+        let want = e.embed_semantics_complete(&order);
+        let workers = 1 + rng.gen_index(5);
+        let schedule = GroupSchedule::build(&grouping, f.adjacency(), workers);
+        let (got, reuse) = f.embed_scheduled(&schedule);
+        assert_eq!(want.max_abs_diff(&got), 0.0, "{kind:?} w={workers}");
+        assert_eq!(reuse, measure_reuse(&grouping, f.adjacency()));
     });
 }
 

@@ -1,0 +1,150 @@
+//! Integration: group-affinity scheduling + group-local tiles are a pure
+//! performance transform. `FusedEngine::embed_scheduled` must be
+//! **bitwise identical** to the striped `embed_semantics_complete` (and
+//! hence to `ReferenceEngine`) for every model × dataset × thread count,
+//! and the reuse counters must prove the tiles absorb reads rather than
+//! being a no-op.
+
+use tlv_hgnn::datasets::Dataset;
+use tlv_hgnn::engine::{measure_reuse, FusedEngine, GroupSchedule, ReferenceEngine};
+use tlv_hgnn::grouping::{
+    default_n_max, group_overlap_driven, group_random, group_sequential, Grouping,
+    OverlapHypergraph,
+};
+use tlv_hgnn::hetgraph::HetGraph;
+use tlv_hgnn::model::{ModelConfig, ModelKind};
+
+fn overlap_grouping(g: &HetGraph) -> Grouping {
+    let h = OverlapHypergraph::build(g, 0.0);
+    group_overlap_driven(&h, default_n_max(g.target_vertices().len(), 4), 4)
+}
+
+#[test]
+fn scheduled_execution_bitwise_matches_striped_everywhere() {
+    // 3 models × 3 datasets × threads {1, 2, 8} — the satellite matrix.
+    for d in Dataset::SMALL {
+        let g = d.load(0.03);
+        let grouping = overlap_grouping(&g);
+        let order = grouping.flat_order();
+        for kind in ModelKind::ALL {
+            let e = ReferenceEngine::new(&g, ModelConfig::new(kind), 24);
+            let f = FusedEngine::new(&e);
+            let want = e.embed_semantics_complete(&order);
+            let striped = f.embed_semantics_complete(&order, 4);
+            assert_eq!(want.max_abs_diff(&striped), 0.0, "{} {kind:?}: striped", d.name());
+            for threads in [1usize, 2, 8] {
+                let schedule = GroupSchedule::build(&grouping, f.adjacency(), threads);
+                schedule.validate().unwrap();
+                let (got, reuse) = f.embed_scheduled(&schedule);
+                assert_eq!(
+                    want.max_abs_diff(&got),
+                    0.0,
+                    "{} {kind:?} t={threads}: scheduled != reference",
+                    d.name()
+                );
+                assert!(reuse.distinct_loads <= reuse.total_loads, "{} {kind:?}", d.name());
+                assert_eq!(reuse.groups as usize, grouping.groups.len());
+            }
+        }
+    }
+}
+
+#[test]
+fn scheduled_execution_deterministic_across_worker_counts() {
+    let g = Dataset::Imdb.load(0.04);
+    let grouping = overlap_grouping(&g);
+    let e = ReferenceEngine::new(&g, ModelConfig::new(ModelKind::Rgat), 24);
+    let f = FusedEngine::new(&e);
+    let s1 = GroupSchedule::build(&grouping, f.adjacency(), 1);
+    let (one, r1) = f.embed_scheduled(&s1);
+    for workers in [2usize, 3, 5, 16] {
+        let s = GroupSchedule::build(&grouping, f.adjacency(), workers);
+        let (many, r) = f.embed_scheduled(&s);
+        assert_eq!(one.max_abs_diff(&many), 0.0, "workers={workers}");
+        // Tiles are per group, not per worker: counters are schedule-
+        // independent.
+        assert_eq!(r1, r, "workers={workers}");
+    }
+}
+
+#[test]
+fn scheduled_matches_for_non_overlap_groupings_too() {
+    // The scheduler must be correct for *any* grouping, not just the
+    // overlap-driven one (the -S and -P ablation schedules included).
+    let g = Dataset::Dblp.load(0.04);
+    let e = ReferenceEngine::new(&g, ModelConfig::new(ModelKind::Rgcn), 24);
+    let f = FusedEngine::new(&e);
+    for (name, grouping) in [
+        ("sequential", group_sequential(&g, 64)),
+        ("random", group_random(&g, 37, 0xFACE)),
+        ("one-group", group_sequential(&g, usize::MAX)),
+    ] {
+        let order = grouping.flat_order();
+        let want = e.embed_semantics_complete(&order);
+        let schedule = GroupSchedule::build(&grouping, f.adjacency(), 3);
+        schedule.validate().unwrap();
+        let (got, reuse) = f.embed_scheduled(&schedule);
+        assert_eq!(want.max_abs_diff(&got), 0.0, "{name}");
+        assert_eq!(reuse, measure_reuse(&grouping, f.adjacency()), "{name}");
+    }
+}
+
+#[test]
+fn reuse_counters_satisfy_structural_invariants() {
+    // Invariants that hold for *any* grouping of any graph:
+    //  * total loads are grouping-independent (one per target + edge);
+    //  * distinct ≤ total, with strict inequality on ACM's overlap
+    //    grouping (the acceptance criterion: tiles absorb reads);
+    //  * coarsening can only help — merging everything into one group
+    //    absorbs at least as much as any partition (union distinct ≤ sum
+    //    of per-group distincts).
+    let g = Dataset::Acm.load(0.05);
+    let fused = g.fused();
+    let n_max = default_n_max(g.target_vertices().len(), 4);
+    let h = OverlapHypergraph::build(&g, 0.0);
+    let expected_total =
+        g.target_vertices().len() as u64 + g.num_edges() as u64;
+    let one = measure_reuse(&group_sequential(&g, usize::MAX), &fused);
+    for grouping in [
+        group_overlap_driven(&h, n_max, 4),
+        group_random(&g, n_max, 0xC0FFEE),
+        group_sequential(&g, 64),
+    ] {
+        let r = measure_reuse(&grouping, &fused);
+        assert_eq!(r.total_loads, expected_total);
+        assert!(r.distinct_loads <= r.total_loads);
+        assert!(one.distinct_loads <= r.distinct_loads, "coarsening hurt absorption");
+    }
+    let overlap = measure_reuse(&group_overlap_driven(&h, n_max, 4), &fused);
+    assert!(
+        overlap.distinct_loads < overlap.total_loads,
+        "overlap grouping shows no reuse: {} !< {}",
+        overlap.distinct_loads,
+        overlap.total_loads
+    );
+}
+
+#[test]
+fn multilayer_over_scheduled_path_matches_oracle() {
+    // Layer loop driven by the scheduled executor: reseed with the flat
+    // order and compare against the per-semantic oracle at depth 2.
+    use tlv_hgnn::engine::{embed_layers_per_semantic, FeatureState, InferencePlan};
+    let g = Dataset::Acm.load(0.03);
+    let m = ModelConfig::new(ModelKind::Rgcn);
+    let want = embed_layers_per_semantic(&g, &m, 2, 24);
+    let order_ref = g.target_vertices();
+
+    let plan = InferencePlan::build(&g, m, 24);
+    let mut state = FeatureState::project_all(&plan, 4);
+    let grouping = overlap_grouping(&g);
+    let schedule = GroupSchedule::build(&grouping, plan.adjacency(), 4);
+    let flat = grouping.flat_order();
+    for _ in 0..2 {
+        let (out, _) = FusedEngine::over(&plan, &state).embed_scheduled(&schedule);
+        state.reseed(&flat, &out);
+    }
+    // Compare via the feature table (row order is the graph's).
+    for (i, &t) in order_ref.iter().enumerate() {
+        assert_eq!(state.projected.row(t.idx()), want.row(i), "target {t}");
+    }
+}
