@@ -225,6 +225,45 @@ fn main() {
         &[("threads", 1.0), ("speedup_vs_direct", tile_vs_direct)],
     );
 
+    // ---- Streaming vs static dispatch: grouping pipelined with embed ----
+    // Both totals include the grouping run itself — that is the point:
+    // static materializes the grouping, LPT-packs it, then executes;
+    // streaming dispatches every group to the work-stealing workers the
+    // moment Algorithm 2 emits it, hiding grouping cost behind
+    // aggregation.
+    let bench_n_max = default_n_max(order.len(), 4);
+    let static_total = bench("grouped total, static (group -> LPT -> embed)", 3, || {
+        let gr = group_overlap_driven(&h, bench_n_max, 4);
+        let sched = GroupSchedule::build(&gr, plan.adjacency(), nt);
+        fe.embed_scheduled(&sched).0.data.len()
+    });
+    record(&mut results, &static_total, &[("threads", nt as f64)]);
+    let mut last_stats = None;
+    let streaming_total = bench("grouped total, streaming work-stealing dispatch", 3, || {
+        let (_, m, _, stats) = fe.embed_grouped_streaming(&h, bench_n_max, nt);
+        last_stats = Some(stats);
+        m.data.len()
+    });
+    let streaming_vs_static =
+        static_total.median.as_secs_f64() / streaming_total.median.as_secs_f64();
+    let dispatch_stats = last_stats.expect("bench ran at least once");
+    println!(
+        "  -> streaming dispatch speedup vs static total: {streaming_vs_static:.2}x \
+         ({} groups, {} steals, queue high-water {})",
+        dispatch_stats.groups, dispatch_stats.steals, dispatch_stats.high_water
+    );
+    record(
+        &mut results,
+        &streaming_total,
+        &[
+            ("threads", nt as f64),
+            ("speedup_vs_static", streaming_vs_static),
+            ("dispatch_steals", dispatch_stats.steals as f64),
+            ("dispatch_stolen_fraction", dispatch_stats.stolen_fraction()),
+            ("dispatch_queue_high_water", dispatch_stats.high_water as f64),
+        ],
+    );
+
     // ---- Depth-3 multi-layer: shared plan vs per-layer rebuild ----
     let ml_shared = bench("multilayer depth-3, shared plan (fused)", 3, || {
         let mut st = state.clone();
@@ -321,6 +360,13 @@ fn main() {
          expect >= 1.0x with gains growing with graph scale vs LLC"
             .into(),
     );
+    targets_json.set(
+        "streaming_vs_static",
+        "streaming work-stealing dispatch must not lose to the static \
+         (group -> LPT -> embed) total at full threads; wins grow with the \
+         grouping-cost : aggregation-cost ratio"
+            .into(),
+    );
 
     let mut out = Json::obj();
     out.set("generated_by", "cargo bench --bench hotpath".into());
@@ -333,6 +379,10 @@ fn main() {
     out.set("tile_vs_direct_speedup_1t", tile_vs_direct.into());
     out.set("tile_reuse_factor", reuse.reuse_factor().into());
     out.set("tile_saved_fraction", reuse.saved_fraction().into());
+    out.set("streaming_vs_static_speedup", streaming_vs_static.into());
+    out.set("dispatch_steals", (dispatch_stats.steals as f64).into());
+    out.set("dispatch_stolen_fraction", dispatch_stats.stolen_fraction().into());
+    out.set("dispatch_queue_high_water", (dispatch_stats.high_water as f64).into());
     out.set("results", Json::Arr(results));
     println!(
         "acceptance: fused walk speedup {:.2}x vs target >= 3.0x: {}",

@@ -13,11 +13,16 @@
 //!   overlap-driven grouping, and spawns one worker per channel.
 //! * With [`ExecutorKind::Pjrt`], each worker owns its own PJRT client +
 //!   compiled executable (clients are not shared across threads) and
-//!   batches targets into fixed blocks. With [`ExecutorKind::Cpu`], each
-//!   worker drives `FusedEngine::embed_group_tile` over the shared plan —
-//!   its routed slice is group-affine, so the tile is the channel's
-//!   working set — and needs no artifacts at all (bitwise-exact serving,
-//!   used by CI and artifact-less hosts).
+//!   batches targets into fixed blocks; each channel has a private mpsc
+//!   queue. With [`ExecutorKind::Cpu`], each worker drives
+//!   `FusedEngine::embed_group_tile` over the shared plan — its routed
+//!   slice is group-affine, so the tile is the channel's working set —
+//!   and needs no artifacts at all (bitwise-exact serving, used by CI and
+//!   artifact-less hosts). CPU workers all drain one shared
+//!   [`StealQueue`]: work is still *placed* on the channel the router
+//!   chose (preserving group affinity), but an idle channel steals from a
+//!   loaded one instead of sitting out a skewed request — the same
+//!   dispatcher the engine's streaming path uses.
 //! * `submit` splits a request by channel affinity, enqueues the parts,
 //!   and assembles the response; rows come back tagged by vertex.
 
@@ -26,7 +31,7 @@ use super::metrics::Metrics;
 use super::plans::PlanCache;
 use super::request::{InferenceRequest, InferenceResponse};
 use super::router::Router;
-use crate::engine::{FeatureState, FusedEngine, InferencePlan, TileScratch};
+use crate::engine::{FeatureState, FusedEngine, InferencePlan, StealQueue, TileScratch};
 use crate::grouping::{default_n_max, group_overlap_driven, OverlapHypergraph};
 use crate::hetgraph::{HetGraph, VId};
 use crate::model::{ModelConfig, ModelKind};
@@ -68,6 +73,11 @@ pub enum ExecutorKind {
 /// across tests and examples).
 const CPU_MAX_IN_DIM: usize = 64;
 
+/// Capacity of the shared CPU work-stealing queue. Generous — serving
+/// should block a submitter only under severe overload (backpressure),
+/// not in steady state.
+const CPU_QUEUE_CAP: usize = 4096;
+
 /// Server configuration.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
@@ -101,10 +111,19 @@ impl ServerConfig {
     }
 }
 
+/// How routed work reaches the channel workers: private mpsc queues for
+/// PJRT workers (each owns a compiled executable), one shared
+/// work-stealing queue for CPU workers (placed by affinity, stolen when
+/// idle).
+enum WorkQueues {
+    PerChannel(Vec<Sender<WorkItem>>),
+    Stealing(Arc<StealQueue<WorkItem>>),
+}
+
 /// The running coordinator.
 pub struct Server {
     router: Router,
-    queues: Vec<Sender<WorkItem>>,
+    queues: WorkQueues,
     workers: Vec<JoinHandle<()>>,
     pub metrics: Arc<Metrics>,
     next_id: std::sync::atomic::AtomicU64,
@@ -163,32 +182,51 @@ impl Server {
         };
 
         let metrics = Arc::new(Metrics::default());
-        let mut queues = Vec::new();
         let mut workers = Vec::new();
         // Readiness barrier: each worker compiles its PJRT executable up
         // front and signals before start() returns, so the first request
         // never pays compilation latency (it showed up as a seconds-scale
         // p99 outlier; EXPERIMENTS.md §Perf).
         let (ready_tx, ready_rx) = channel::<Result<(), String>>();
-        for ch in 0..cfg.channels {
-            let (tx, rx) = channel::<WorkItem>();
-            queues.push(tx);
-            let shared = Arc::clone(&shared);
-            let metrics = Arc::clone(&metrics);
-            let dir = cfg.artifacts_dir.clone();
-            let kind = cfg.kind;
-            let ready = ready_tx.clone();
-            let executor = cfg.executor;
-            workers.push(
-                std::thread::Builder::new()
-                    .name(format!("tlv-worker-{ch}"))
-                    .spawn(move || match executor {
-                        ExecutorKind::Pjrt => worker_loop(rx, shared, dir, kind, metrics, ready),
-                        ExecutorKind::Cpu => worker_loop_cpu(rx, shared, metrics, ready),
-                    })
-                    .context("spawn worker")?,
-            );
-        }
+        let queues = match cfg.executor {
+            ExecutorKind::Pjrt => {
+                let mut queues = Vec::new();
+                for ch in 0..cfg.channels {
+                    let (tx, rx) = channel::<WorkItem>();
+                    queues.push(tx);
+                    let shared = Arc::clone(&shared);
+                    let metrics = Arc::clone(&metrics);
+                    let dir = cfg.artifacts_dir.clone();
+                    let kind = cfg.kind;
+                    let ready = ready_tx.clone();
+                    workers.push(
+                        std::thread::Builder::new()
+                            .name(format!("tlv-worker-{ch}"))
+                            .spawn(move || worker_loop(rx, shared, dir, kind, metrics, ready))
+                            .context("spawn worker")?,
+                    );
+                }
+                WorkQueues::PerChannel(queues)
+            }
+            ExecutorKind::Cpu => {
+                // One shared work-stealing queue: routed parts are placed
+                // on their affine channel's deque, idle channels steal.
+                let queue = Arc::new(StealQueue::new(cfg.channels, CPU_QUEUE_CAP));
+                for ch in 0..cfg.channels {
+                    let queue = Arc::clone(&queue);
+                    let shared = Arc::clone(&shared);
+                    let metrics = Arc::clone(&metrics);
+                    let ready = ready_tx.clone();
+                    workers.push(
+                        std::thread::Builder::new()
+                            .name(format!("tlv-worker-{ch}"))
+                            .spawn(move || worker_loop_cpu(ch, queue, shared, metrics, ready))
+                            .context("spawn worker")?,
+                    );
+                }
+                WorkQueues::Stealing(queue)
+            }
+        };
         drop(ready_tx);
         for _ in 0..cfg.channels {
             ready_rx
@@ -221,9 +259,17 @@ impl Server {
             if part.is_empty() {
                 continue;
             }
-            self.queues[ch]
-                .send(WorkItem { req: req.id, targets: part, reply: reply_tx.clone() })
-                .map_err(|_| anyhow::anyhow!("worker {ch} gone"))?;
+            let item = WorkItem { req: req.id, targets: part, reply: reply_tx.clone() };
+            match &self.queues {
+                WorkQueues::PerChannel(qs) => {
+                    qs[ch].send(item).map_err(|_| anyhow::anyhow!("worker {ch} gone"))?
+                }
+                WorkQueues::Stealing(q) => {
+                    if !q.push_to(ch, item) {
+                        return Err(anyhow::anyhow!("server shut down"));
+                    }
+                }
+            }
         }
         drop(reply_tx);
         let mut rows = Vec::with_capacity(expected);
@@ -237,11 +283,38 @@ impl Server {
         Ok(InferenceResponse { id: req.id, embeddings: rows, latency })
     }
 
+    /// Work items stolen across CPU channels so far (`None` for the PJRT
+    /// executor, whose channels own private compiled executables and
+    /// cannot trade work).
+    pub fn steal_count(&self) -> Option<u64> {
+        match &self.queues {
+            WorkQueues::PerChannel(_) => None,
+            WorkQueues::Stealing(q) => Some(q.steals()),
+        }
+    }
+
     /// Stop workers and join them.
     pub fn shutdown(mut self) {
-        self.queues.clear(); // disconnects
+        match &mut self.queues {
+            WorkQueues::PerChannel(qs) => qs.clear(), // disconnects
+            WorkQueues::Stealing(q) => q.close(),
+        }
         for w in self.workers.drain(..) {
             let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    /// A `Server` dropped without [`Server::shutdown`] must still
+    /// terminate its workers: per-channel mpsc senders disconnect on drop
+    /// by themselves, but the shared steal queue holds a clone in every
+    /// CPU worker and has to be closed explicitly or the workers would
+    /// block in `pop` forever (leaked threads). Idempotent after
+    /// `shutdown`.
+    fn drop(&mut self) {
+        if let WorkQueues::Stealing(q) = &self.queues {
+            q.close();
         }
     }
 }
@@ -249,9 +322,12 @@ impl Server {
 /// CPU channel worker: the routed slice of each request is group-affine
 /// (the router keeps whole vertex groups on one channel), so it is
 /// aggregated as a single group-local neighbor tile over the shared plan.
-/// No artifacts, no compilation — ready immediately.
+/// No artifacts, no compilation — ready immediately. All CPU workers pop
+/// the one shared [`StealQueue`]: their own deque first (affinity-placed
+/// work), then whatever a loaded sibling channel has queued up.
 fn worker_loop_cpu(
-    rx: Receiver<WorkItem>,
+    ch: usize,
+    queue: Arc<StealQueue<WorkItem>>,
     shared: Arc<PlanState>,
     metrics: Arc<Metrics>,
     ready: Sender<Result<(), String>>,
@@ -259,7 +335,7 @@ fn worker_loop_cpu(
     let _ = ready.send(Ok(()));
     let engine = FusedEngine::over(&shared.plan, &shared.state);
     let mut scratch = TileScratch::default();
-    while let Ok(w) = rx.recv() {
+    while let Some((w, _stolen)) = queue.pop(ch) {
         let (m, _reuse) = engine.embed_group_tile_reusing(&w.targets, &mut scratch);
         metrics.record_block(w.targets.len(), w.targets.len().max(1));
         let rows: Vec<(VId, Vec<f32>)> =

@@ -1,0 +1,535 @@
+//! Streaming group dispatch: a bounded work-stealing queue that pipelines
+//! vertex-group *emission* with vertex-group *execution*.
+//!
+//! The static path ([`GroupSchedule`]) materializes every group up front
+//! and LPT-bin-packs them onto workers — a barrier between the Vertex
+//! Grouper and the channels that the hardware does not have: the paper's
+//! grouper streams groups out as Algorithm 2 discovers them, and channels
+//! start aggregating immediately (§IV-C2; `sim::accel` charges exactly
+//! that overlap). This module is the software analogue of that pipeline:
+//!
+//! * **[`StealQueue`]** — a bounded multi-worker queue with one deque per
+//!   worker. The producer round-robins ready groups across deques (the
+//!   initial balance), each worker pops its own deque FIFO (emission
+//!   order, so early groups execute early), and an idle worker *steals*
+//!   from the back of the longest other deque (the classic owner-FIFO /
+//!   thief-LIFO split, which fixes any load imbalance the round-robin
+//!   placement left behind). Bounded capacity gives backpressure: a
+//!   producer that races ahead of execution blocks instead of buffering
+//!   the whole schedule — which is what keeps this *streaming*.
+//!   Implementation note: one short-held mutex guards the deque metadata
+//!   (every operation is O(workers)); the environment vendors no lock-free
+//!   deque, and group-granular tasks are far too coarse for queue-pop
+//!   latency to matter.
+//! * **[`FusedEngine::embed_streaming`]** — the driver. A producer thread
+//!   runs a group-emitting closure (normally the streaming grouper,
+//!   [`stream_overlap_driven`]); worker threads pop/steal ready groups and
+//!   run the existing tile-gather + aggregate kernel immediately; the
+//!   calling thread scatters finished groups into the output matrix as
+//!   they complete. Grouping cost and aggregation cost overlap, exactly
+//!   like the hardware.
+//!
+//! **Bitwise-preservation argument.** The dispatcher assigns each emitted
+//! group the next contiguous row range of the caller-order output
+//! (`row_base` advances by group length, in emission order), so groups own
+//! disjoint output rows; every group is executed by exactly one worker
+//! with the *identical* per-target op order as the static tile path
+//! (`embed_group_tiled`), and the scatter writes each row exactly once.
+//! Dispatch order, steal interleaving and thread count therefore cannot
+//! change a single bit — the streaming result equals
+//! [`FusedEngine::embed_scheduled`] on the same grouping, which equals
+//! `ReferenceEngine::embed_semantics_complete` on the same flat order
+//! (see `engine::schedule` for that half of the argument). The property
+//! tests in `tests/dispatch.rs` exercise both halves: exactly-once
+//! execution under random steal interleavings, and bitwise equality
+//! across models × datasets × thread counts.
+//!
+//! The `target_cost` work model of the static scheduler still describes
+//! per-group cost here; streaming simply replaces the up-front LPT
+//! assignment with dynamic self-balancing (steal-on-idle), trading the
+//! ≤ 4/3·OPT makespan guarantee for zero scheduling barrier.
+//!
+//! [`GroupSchedule`]: super::schedule::GroupSchedule
+//! [`stream_overlap_driven`]: crate::grouping::stream_overlap_driven
+
+use super::access::TileReuse;
+use super::fused::{FusedEngine, TileScratch};
+use super::tensor::Matrix;
+use crate::grouping::{stream_overlap_driven, OverlapHypergraph};
+use crate::hetgraph::VId;
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Condvar, Mutex};
+
+/// How grouped execution is dispatched onto workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScheduleMode {
+    /// Materialize the whole grouping, LPT-bin-pack groups onto workers
+    /// (`GroupSchedule`), then execute. Deterministic assignment; grouping
+    /// is a barrier before execution.
+    Static,
+    /// Pipeline grouping with execution through the work-stealing queue:
+    /// groups dispatch the moment they are emitted.
+    Streaming,
+}
+
+impl ScheduleMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScheduleMode::Static => "static",
+            ScheduleMode::Streaming => "streaming",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ScheduleMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "static" => Some(ScheduleMode::Static),
+            "streaming" | "stream" => Some(ScheduleMode::Streaming),
+            _ => None,
+        }
+    }
+}
+
+/// One ready vertex group in flight through the dispatcher.
+#[derive(Debug)]
+pub struct GroupTask {
+    /// Emission index of the group (0-based).
+    pub seq: u32,
+    /// First caller-order output row of the group; the group owns rows
+    /// `row_base .. row_base + targets.len()` (disjoint by construction —
+    /// the dispatcher advances `row_base` by group length per emission).
+    pub row_base: u32,
+    /// The group's targets, in group order.
+    pub targets: Vec<VId>,
+}
+
+/// Counters of one streaming-dispatch run.
+#[derive(Debug, Clone, Default)]
+pub struct DispatchStats {
+    /// Groups dispatched (== groups executed; exactly-once).
+    pub groups: u64,
+    /// Tasks taken from another worker's deque.
+    pub steals: u64,
+    /// Peak number of emitted-but-unexecuted groups (≤ queue capacity).
+    pub high_water: usize,
+    /// Groups executed by each worker (sums to `groups`).
+    pub executed_per_worker: Vec<u64>,
+}
+
+impl DispatchStats {
+    /// Fraction of groups that moved between workers after placement.
+    pub fn stolen_fraction(&self) -> f64 {
+        if self.groups == 0 {
+            return 0.0;
+        }
+        self.steals as f64 / self.groups as f64
+    }
+}
+
+struct QueueInner<T> {
+    deques: Vec<VecDeque<T>>,
+    /// Items currently enqueued across all deques.
+    pending: usize,
+    closed: bool,
+    steals: u64,
+    high_water: usize,
+}
+
+/// Bounded multi-producer work-stealing queue (see module docs): one deque
+/// per worker, owner pops FIFO, idle workers steal from the back of the
+/// longest other deque, producers block while `pending == capacity`.
+#[derive(Debug)]
+pub struct StealQueue<T> {
+    inner: Mutex<QueueInner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+impl<T> std::fmt::Debug for QueueInner<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("QueueInner")
+            .field("pending", &self.pending)
+            .field("closed", &self.closed)
+            .field("steals", &self.steals)
+            .finish()
+    }
+}
+
+impl<T> StealQueue<T> {
+    /// A queue for `workers` workers holding at most `capacity` items.
+    pub fn new(workers: usize, capacity: usize) -> StealQueue<T> {
+        let workers = workers.max(1);
+        StealQueue {
+            inner: Mutex::new(QueueInner {
+                deques: (0..workers).map(|_| VecDeque::new()).collect(),
+                pending: 0,
+                closed: false,
+                steals: 0,
+                high_water: 0,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Number of worker deques.
+    pub fn workers(&self) -> usize {
+        self.inner.lock().expect("steal queue poisoned").deques.len()
+    }
+
+    /// Enqueue onto `worker`'s deque (any worker may still steal it).
+    /// Blocks while the queue is at capacity. Returns `false` if the queue
+    /// was closed (the item is dropped).
+    pub fn push_to(&self, worker: usize, item: T) -> bool {
+        let mut inner = self.inner.lock().expect("steal queue poisoned");
+        while inner.pending >= self.capacity && !inner.closed {
+            inner = self.not_full.wait(inner).expect("steal queue poisoned");
+        }
+        if inner.closed {
+            return false;
+        }
+        let w = worker % inner.deques.len();
+        inner.deques[w].push_back(item);
+        inner.pending += 1;
+        inner.high_water = inner.high_water.max(inner.pending);
+        drop(inner);
+        self.not_empty.notify_one();
+        true
+    }
+
+    /// Dequeue for `worker`: its own deque front first (emission order),
+    /// else steal from the back of the longest other deque, else block
+    /// until new work arrives. Returns `None` once the queue is closed
+    /// *and* drained. The returned flag is `true` when the item was
+    /// stolen from another worker.
+    pub fn pop(&self, worker: usize) -> Option<(T, bool)> {
+        let mut inner = self.inner.lock().expect("steal queue poisoned");
+        let w = worker % inner.deques.len();
+        loop {
+            if let Some(item) = inner.deques[w].pop_front() {
+                inner.pending -= 1;
+                self.not_full.notify_one();
+                return Some((item, false));
+            }
+            // Steal from the most-loaded victim (ties: lowest index).
+            let victim = (0..inner.deques.len())
+                .filter(|&v| v != w && !inner.deques[v].is_empty())
+                .max_by_key(|&v| (inner.deques[v].len(), usize::MAX - v));
+            if let Some(v) = victim {
+                let item = inner.deques[v].pop_back().expect("victim checked non-empty");
+                inner.pending -= 1;
+                inner.steals += 1;
+                self.not_full.notify_one();
+                return Some((item, true));
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.not_empty.wait(inner).expect("steal queue poisoned");
+        }
+    }
+
+    /// Mark the stream complete: producers stop, workers drain and exit.
+    pub fn close(&self) {
+        let mut inner = self.inner.lock().expect("steal queue poisoned");
+        inner.closed = true;
+        drop(inner);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Tasks taken from another worker's deque so far.
+    pub fn steals(&self) -> u64 {
+        self.inner.lock().expect("steal queue poisoned").steals
+    }
+
+    /// Peak enqueued-item count so far (≤ capacity).
+    pub fn high_water(&self) -> usize {
+        self.inner.lock().expect("steal queue poisoned").high_water
+    }
+
+    /// Items currently enqueued.
+    pub fn pending(&self) -> usize {
+        self.inner.lock().expect("steal queue poisoned").pending
+    }
+}
+
+/// Default bounded-queue capacity, per worker: deep enough to keep every
+/// worker fed across emission jitter, shallow enough that the producer
+/// never materializes more than a small window of the schedule.
+pub const STREAM_QUEUE_CAP_PER_WORKER: usize = 4;
+
+/// One finished group traveling back to the scatter loop.
+struct DoneGroup {
+    worker: usize,
+    row_base: u32,
+    rows: Vec<f32>,
+    distinct: u64,
+    total: u64,
+}
+
+/// Closes the queue when dropped — idempotent on the normal path (the
+/// producer already closed it), and on a scatter-loop panic it unblocks a
+/// producer waiting on a full queue so `thread::scope` can join
+/// everything and propagate the panic instead of hanging.
+struct CloseOnDrop<'q, T>(&'q StealQueue<T>);
+
+impl<T> Drop for CloseOnDrop<'_, T> {
+    fn drop(&mut self) {
+        self.0.close();
+    }
+}
+
+impl<'a> FusedEngine<'a> {
+    /// Streaming grouped execution (see module docs): `produce` runs on a
+    /// producer thread and emits vertex groups through its callback;
+    /// `threads` workers pop/steal ready groups off a bounded
+    /// [`StealQueue`] (capacity `queue_cap`) and aggregate each one
+    /// through the group-local tile kernel the moment it is ready, while
+    /// the calling thread scatters finished groups into the caller-order
+    /// output. The emitted groups must cover exactly `num_rows` targets.
+    ///
+    /// Returns `(order, embeddings, tile reuse, dispatch stats)` where
+    /// `order` is the concatenation of emitted groups (row i ↔ `order[i]`)
+    /// — for the overlap grouper this equals `Grouping::flat_order()`.
+    /// Bitwise identical to [`embed_scheduled`] on the same grouping at
+    /// every `threads`/`queue_cap` and under every steal interleaving.
+    ///
+    /// [`embed_scheduled`]: FusedEngine::embed_scheduled
+    pub fn embed_streaming<P>(
+        &self,
+        num_rows: usize,
+        threads: usize,
+        queue_cap: usize,
+        produce: P,
+    ) -> (Vec<VId>, Matrix, TileReuse, DispatchStats)
+    where
+        P: FnOnce(&mut dyn FnMut(Vec<VId>)) + Send,
+    {
+        let h = self.plan().params.hidden;
+        let workers = threads.max(1);
+        let mut out = Matrix::zeros(num_rows, h);
+        let mut reuse = TileReuse::default();
+        let mut stats =
+            DispatchStats { executed_per_worker: vec![0; workers], ..Default::default() };
+        if num_rows == 0 || h == 0 {
+            // Degenerate shapes: run the producer inline just to recover
+            // the emission order; there is nothing to aggregate.
+            let mut order = Vec::new();
+            let mut emit = |targets: Vec<VId>| {
+                order.extend_from_slice(&targets);
+                stats.groups += 1;
+            };
+            produce(&mut emit);
+            assert_eq!(order.len(), num_rows, "streamed groups must cover num_rows");
+            return (order, out, reuse, stats);
+        }
+
+        let queue: StealQueue<GroupTask> = StealQueue::new(workers, queue_cap);
+        let (done_tx, done_rx) = mpsc::channel::<DoneGroup>();
+        let order = std::thread::scope(|s| {
+            let producer = s.spawn(|| {
+                let mut order: Vec<VId> = Vec::with_capacity(num_rows);
+                let mut seq = 0u32;
+                let queue = &queue;
+                let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    let mut emit = |targets: Vec<VId>| {
+                        let row_base = order.len() as u32;
+                        assert!(
+                            order.len() + targets.len() <= num_rows,
+                            "producer emitted more than num_rows targets"
+                        );
+                        order.extend_from_slice(&targets);
+                        queue.push_to(seq as usize % workers, GroupTask { seq, row_base, targets });
+                        seq += 1;
+                    };
+                    produce(&mut emit);
+                }));
+                // Close *before* propagating any producer panic so workers
+                // (and the scatter loop) always terminate.
+                queue.close();
+                if let Err(e) = run {
+                    std::panic::resume_unwind(e);
+                }
+                order
+            });
+            for w in 0..workers {
+                let tx = done_tx.clone();
+                let queue = &queue;
+                s.spawn(move || {
+                    // If this worker panics (or bails because the scatter
+                    // loop died), close the queue so a producer blocked on
+                    // a full queue unblocks and everything joins — the
+                    // panic then propagates instead of hanging. Normal
+                    // exits only happen after close, so this is idempotent.
+                    let _close_guard = CloseOnDrop(queue);
+                    let mut scratch = TileScratch::default();
+                    while let Some((task, _stolen)) = queue.pop(w) {
+                        let mut rows = vec![0.0f32; task.targets.len() * h];
+                        let (distinct, total) =
+                            self.embed_group_tiled(&task.targets, &mut scratch, &mut rows);
+                        let done =
+                            DoneGroup { worker: w, row_base: task.row_base, rows, distinct, total };
+                        if tx.send(done).is_err() {
+                            break; // scatter loop gone (main thread panicked)
+                        }
+                    }
+                });
+            }
+            drop(done_tx);
+            let _close_guard = CloseOnDrop(&queue);
+            // Scatter finished groups as they complete — each owns a
+            // disjoint contiguous row range, so every output row is
+            // written exactly once regardless of completion order.
+            for d in done_rx {
+                reuse.record_group(d.distinct, d.total);
+                stats.executed_per_worker[d.worker] += 1;
+                let base = d.row_base as usize * h;
+                out.data[base..base + d.rows.len()].copy_from_slice(&d.rows);
+            }
+            producer.join().expect("group producer panicked")
+        });
+        assert_eq!(order.len(), num_rows, "streamed groups must cover num_rows");
+        stats.groups = reuse.groups;
+        stats.steals = queue.steals();
+        stats.high_water = queue.high_water();
+        (order, out, reuse, stats)
+    }
+
+    /// Overlap-driven grouping, streamed: Algorithm 2 runs on the producer
+    /// thread and each group is dispatched to the workers the moment it is
+    /// emitted — grouping cost overlaps aggregation cost, the software
+    /// analogue of the hardware pipeline `sim::accel` models for `-O`.
+    /// Emits the identical groups in the identical order as
+    /// `group_overlap_driven(h, n_max, _)`, so the returned order equals
+    /// that grouping's `flat_order()` and the embeddings are bitwise
+    /// identical to the static scheduled path.
+    pub fn embed_grouped_streaming(
+        &self,
+        h: &OverlapHypergraph,
+        n_max: usize,
+        threads: usize,
+    ) -> (Vec<VId>, Matrix, TileReuse, DispatchStats) {
+        let num_rows = h.num_supers() + h.rest.len();
+        let cap = threads.max(1) * STREAM_QUEUE_CAP_PER_WORKER;
+        self.embed_streaming(num_rows, threads, cap, |emit: &mut dyn FnMut(Vec<VId>)| {
+            stream_overlap_driven(h, n_max, |group| emit(group));
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_within_one_worker() {
+        let q: StealQueue<u32> = StealQueue::new(1, 16);
+        for i in 0..5 {
+            assert!(q.push_to(0, i));
+        }
+        q.close();
+        let mut got = Vec::new();
+        while let Some((v, stolen)) = q.pop(0) {
+            assert!(!stolen);
+            got.push(v);
+        }
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+        assert_eq!(q.steals(), 0);
+        assert!(q.pop(0).is_none(), "closed+drained stays None");
+    }
+
+    #[test]
+    fn push_after_close_is_rejected() {
+        let q: StealQueue<u32> = StealQueue::new(2, 4);
+        assert!(q.push_to(0, 1));
+        q.close();
+        assert!(!q.push_to(0, 2));
+        assert_eq!(q.pop(1), Some((1, true))); // worker 1 steals worker 0's item
+        assert_eq!(q.steals(), 1);
+        assert!(q.pop(1).is_none());
+    }
+
+    #[test]
+    fn capacity_bounds_high_water() {
+        let q: Arc<StealQueue<u64>> = Arc::new(StealQueue::new(1, 2));
+        let qp = Arc::clone(&q);
+        let producer = std::thread::spawn(move || {
+            for i in 0..20u64 {
+                assert!(qp.push_to(0, i)); // blocks at capacity
+            }
+            qp.close();
+        });
+        let mut sum = 0u64;
+        let mut n = 0u64;
+        while let Some((v, _)) = q.pop(0) {
+            std::thread::sleep(Duration::from_micros(200)); // slow consumer
+            sum += v;
+            n += 1;
+        }
+        producer.join().unwrap();
+        assert_eq!(n, 20);
+        assert_eq!(sum, (0..20).sum::<u64>());
+        assert!(q.high_water() <= 2, "high water {} exceeded capacity", q.high_water());
+    }
+
+    #[test]
+    fn idle_workers_steal_from_a_slow_one() {
+        // All 40 tasks land on worker 0's deque; worker 0 is slow, so
+        // workers 1..4 can only make progress by stealing.
+        let q: Arc<StealQueue<u32>> = Arc::new(StealQueue::new(4, 64));
+        for i in 0..40 {
+            assert!(q.push_to(0, i));
+        }
+        q.close();
+        let executed: Arc<Mutex<Vec<u32>>> = Arc::new(Mutex::new(Vec::new()));
+        let by_others = Arc::new(AtomicU64::new(0));
+        let mut handles = Vec::new();
+        for w in 0..4usize {
+            let q = Arc::clone(&q);
+            let executed = Arc::clone(&executed);
+            let by_others = Arc::clone(&by_others);
+            handles.push(std::thread::spawn(move || {
+                while let Some((v, _)) = q.pop(w) {
+                    if w == 0 {
+                        std::thread::sleep(Duration::from_millis(2));
+                    } else {
+                        by_others.fetch_add(1, Ordering::Relaxed);
+                    }
+                    executed.lock().unwrap().push(v);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut got = executed.lock().unwrap().clone();
+        got.sort_unstable();
+        assert_eq!(got, (0..40).collect::<Vec<_>>(), "each task exactly once");
+        assert!(q.steals() > 0, "no steals despite a slow loaded worker");
+        assert!(by_others.load(Ordering::Relaxed) > 0, "idle workers did no work");
+    }
+
+    #[test]
+    fn schedule_mode_parses() {
+        assert_eq!(ScheduleMode::parse("static"), Some(ScheduleMode::Static));
+        assert_eq!(ScheduleMode::parse("Streaming"), Some(ScheduleMode::Streaming));
+        assert_eq!(ScheduleMode::parse("stream"), Some(ScheduleMode::Streaming));
+        assert_eq!(ScheduleMode::parse("lpt"), None);
+        assert_eq!(ScheduleMode::Static.name(), "static");
+        assert_eq!(ScheduleMode::Streaming.name(), "streaming");
+    }
+
+    #[test]
+    fn stolen_fraction_is_guarded() {
+        let s = DispatchStats::default();
+        assert_eq!(s.stolen_fraction(), 0.0);
+        let s = DispatchStats { groups: 8, steals: 2, ..Default::default() };
+        assert!((s.stolen_fraction() - 0.25).abs() < 1e-12);
+    }
+}

@@ -35,6 +35,12 @@
 //! [`TileReuse`] counters report distinct vs total row loads per group,
 //! making the locality win measurable instead of asserted.
 //!
+//! The *streaming* alternative to `embed_scheduled` — groups dispatched
+//! to workers as the grouper emits them, through a bounded work-stealing
+//! queue instead of an up-front LPT bin-pack — lives in
+//! `engine::dispatch` (`FusedEngine::embed_streaming`) and runs the same
+//! per-group tile kernel, so it is bitwise identical as well.
+//!
 //! [`embed_semantics_complete`]: FusedEngine::embed_semantics_complete
 //! [`embed_scheduled`]: FusedEngine::embed_scheduled
 
@@ -278,7 +284,9 @@ impl<'a> FusedEngine<'a> {
     /// [`embed_into`](Self::embed_into), reading rows from the tile.
     /// Rows are unmodified copies, so the result is bitwise identical.
     /// Returns `(distinct, total)` row-load counts for the group.
-    fn embed_group_tiled(
+    /// Crate-visible: `engine::dispatch` runs the same kernel per streamed
+    /// group, so static and streaming dispatch share one numeric path.
+    pub(crate) fn embed_group_tiled(
         &self,
         targets: &[VId],
         scratch: &mut TileScratch,

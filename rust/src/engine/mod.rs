@@ -10,10 +10,15 @@
 //! the serial oracle over those pieces; [`FusedEngine`] the parallel
 //! executor; `schedule` bin-packs whole vertex groups onto its workers
 //! (group-affinity execution with group-local neighbor tiles);
-//! `multilayer` runs whole stacks on one plan.
+//! `dispatch` streams groups from the grouper straight onto workers
+//! through a bounded work-stealing queue (grouping pipelined with
+//! aggregation — [`ScheduleMode`] selects static vs streaming);
+//! `multilayer` runs whole stacks on one plan. Every path computes
+//! bitwise-identical embeddings.
 
 pub mod access;
 pub mod batchwise;
+pub mod dispatch;
 pub mod functional;
 pub mod fused;
 pub mod multilayer;
@@ -27,6 +32,9 @@ pub mod trace;
 pub use access::{AccessCounter, AccessReport, TileReuse};
 pub use batchwise::{
     batched_semantic_passes, walk_per_semantic_batched, walk_per_semantic_batched_fused,
+};
+pub use dispatch::{
+    DispatchStats, GroupTask, ScheduleMode, StealQueue, STREAM_QUEUE_CAP_PER_WORKER,
 };
 pub use functional::ReferenceEngine;
 pub use fused::{FusedEngine, TileScratch};

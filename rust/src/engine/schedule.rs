@@ -35,6 +35,14 @@
 //! a row does not change the floats the per-target loop reads. Hence any
 //! (grouping, worker count) produces output bitwise identical to
 //! `ReferenceEngine::embed_semantics_complete` on the same order.
+//!
+//! This module is the **static** dispatch discipline: the grouping is
+//! fully materialized, then bin-packed, then executed — grouping is a
+//! barrier before aggregation. `engine::dispatch` provides the
+//! **streaming** alternative (groups flow from the grouper straight onto
+//! a bounded work-stealing queue), trading the LPT makespan guarantee for
+//! zero barrier; both run the identical per-group tile kernel and are
+//! bitwise interchangeable.
 
 use super::access::TileReuse;
 use crate::grouping::Grouping;

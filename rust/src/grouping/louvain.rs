@@ -6,6 +6,13 @@
 //! `n_max`, then emit the group (it can be dispatched to a channel
 //! immediately — the streaming workflow that pipelines group generation
 //! with processing).
+//!
+//! The streaming core is [`stream_overlap_driven`], which hands each
+//! group to an `emit` callback the moment the greedy finishes it — this
+//! is what `engine::dispatch` runs on its producer thread to overlap
+//! grouping with aggregation. [`group_overlap_driven`] is the collecting
+//! wrapper (identical groups in identical order) used by every
+//! materialize-first path.
 
 use super::hypergraph::OverlapHypergraph;
 use crate::hetgraph::VId;
@@ -43,15 +50,36 @@ impl Grouping {
     }
 }
 
-/// Algorithm 2 with the modularity gain of the weighted overlap graph:
-/// `ΔQ(v, C) = k_in(v,C)/(2m) − Σ_tot(C)·k(v)/(2m)²`.
-pub fn group_overlap_driven(h: &OverlapHypergraph, n_max: usize, channels: usize) -> Grouping {
+/// Summary of one streamed grouping run — the counts
+/// [`group_overlap_driven`] folds into a [`Grouping`].
+#[derive(Debug, Clone, Copy)]
+pub struct GroupStreamSummary {
+    /// Total groups emitted (hub + low-degree remainder).
+    pub groups: usize,
+    /// Leading groups that came from the overlap-driven phase.
+    pub hub_groups: usize,
+    /// Achieved modularity-ish score: Σ intra-group weight / total weight.
+    pub intra_weight_fraction: f64,
+}
+
+/// Algorithm 2 with the modularity gain of the weighted overlap graph,
+/// `ΔQ(v, C) = k_in(v,C)/(2m) − Σ_tot(C)·k(v)/(2m)²`, **streamed**: every
+/// finished group is handed to `emit` immediately (hub groups first, then
+/// the sequential low-degree remainder), so a consumer can start
+/// processing a group while the next one is still being grown — the
+/// §IV-C2 pipeline. The concatenation of emitted groups is the flat
+/// target order.
+pub fn stream_overlap_driven<F: FnMut(Vec<VId>)>(
+    h: &OverlapHypergraph,
+    n_max: usize,
+    mut emit: F,
+) -> GroupStreamSummary {
     let n = h.num_supers();
     let m2 = (h.total_weight * 2.0).max(1e-12); // 2m
     let k: Vec<f64> = (0..n).map(|i| h.weighted_degree(i)).collect();
 
     let mut assigned = vec![false; n];
-    let mut groups: Vec<Vec<VId>> = Vec::new();
+    let mut groups_emitted = 0usize;
     let mut intra_w = 0.0f64;
 
     // Seed selection order: descending degree (supers are already sorted by
@@ -101,21 +129,37 @@ pub fn group_overlap_driven(h: &OverlapHypergraph, n_max: usize, channels: usize
                 _ => break, // line 17: no positive gain
             }
         }
-        groups.push(group_idx.iter().map(|&i| h.supers[i as usize]).collect());
+        emit(group_idx.iter().map(|&i| h.supers[i as usize]).collect());
+        groups_emitted += 1;
     }
 
-    let hub_groups = groups.len();
+    let hub_groups = groups_emitted;
 
     // Low-degree remainder: simple sequential strategy (paper §IV-C1).
     for chunk in h.rest.chunks(n_max.max(1)) {
-        groups.push(chunk.to_vec());
+        emit(chunk.to_vec());
+        groups_emitted += 1;
     }
 
+    GroupStreamSummary {
+        groups: groups_emitted,
+        hub_groups,
+        intra_weight_fraction: if h.total_weight > 0.0 { intra_w / h.total_weight } else { 0.0 },
+    }
+}
+
+/// Materialized Algorithm 2: collects the stream of
+/// [`stream_overlap_driven`] into a [`Grouping`] (identical groups in
+/// identical order — the streaming and static execution paths therefore
+/// share one flat target order by construction).
+pub fn group_overlap_driven(h: &OverlapHypergraph, n_max: usize, channels: usize) -> Grouping {
+    let mut groups: Vec<Vec<VId>> = Vec::new();
+    let summary = stream_overlap_driven(h, n_max, |group| groups.push(group));
     let _ = channels;
     Grouping {
         groups,
-        hub_groups,
-        intra_weight_fraction: if h.total_weight > 0.0 { intra_w / h.total_weight } else { 0.0 },
+        hub_groups: summary.hub_groups,
+        intra_weight_fraction: summary.intra_weight_fraction,
     }
 }
 
@@ -180,5 +224,19 @@ mod tests {
         let (a, _, _) = grouping_for(Dataset::Acm);
         let (b, _, _) = grouping_for(Dataset::Acm);
         assert_eq!(a.groups, b.groups);
+    }
+
+    #[test]
+    fn stream_emits_exactly_the_collected_grouping() {
+        let (collected, h, n_targets) = grouping_for(Dataset::Acm);
+        let n_max = default_n_max(n_targets, 4);
+        let mut streamed: Vec<Vec<VId>> = Vec::new();
+        let summary = stream_overlap_driven(&h, n_max, |g| streamed.push(g));
+        assert_eq!(streamed, collected.groups, "stream order/content must match collect");
+        assert_eq!(summary.groups, collected.groups.len());
+        assert_eq!(summary.hub_groups, collected.hub_groups);
+        assert!(
+            (summary.intra_weight_fraction - collected.intra_weight_fraction).abs() < 1e-12
+        );
     }
 }

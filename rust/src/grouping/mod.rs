@@ -10,5 +10,7 @@ pub mod sequential;
 
 pub use grouper_sim::{simulate_grouper, GrouperConfig, GrouperStats};
 pub use hypergraph::{OverlapHypergraph, HUB_FRACTION};
-pub use louvain::{default_n_max, group_overlap_driven, Grouping};
+pub use louvain::{
+    default_n_max, group_overlap_driven, stream_overlap_driven, GroupStreamSummary, Grouping,
+};
 pub use sequential::{group_random, group_sequential};

@@ -8,8 +8,10 @@
 //! sim     <dataset> [--model M] [--mode X] cycle simulation, one config
 //! ablate  <dataset> [--model M]            all four -B/-S/-P/-O configs
 //! group   <dataset> [--scale S]            grouping quality report
-//! engine  <dataset> [--model M] [--threads N]  host engine: group-affinity
-//!                                          tiles vs contiguous stripes
+//! engine  <dataset> [--model M] [--threads N] [--dispatch static|streaming|both]
+//!                                          host engine: striped vs static
+//!                                          LPT schedule vs streaming
+//!                                          work-stealing dispatch
 //! compare <dataset> [--model M]            TLV vs A100 vs HiHGNN
 //! bench-table <fig2|fig7|fig8|fig9|table3|table4|reuse>  paper table
 //! serve   [--model M] [--scale S] [--cpu]  demo serving loop (PJRT needs
@@ -21,7 +23,7 @@ use std::time::Instant;
 use tlv_hgnn::baselines::{run_a100, run_hihgnn, GpuConfig, HiHgnnConfig};
 use tlv_hgnn::datasets::Dataset;
 use tlv_hgnn::energy::{tlv_energy, EnergyTable};
-use tlv_hgnn::engine::{FeatureState, FusedEngine, InferencePlan};
+use tlv_hgnn::engine::{FeatureState, FusedEngine, GroupSchedule, InferencePlan, ScheduleMode};
 use tlv_hgnn::grouping::{default_n_max, group_overlap_driven, OverlapHypergraph};
 use tlv_hgnn::hetgraph::stats;
 use tlv_hgnn::model::{ModelConfig, ModelKind};
@@ -33,7 +35,8 @@ fn usage() -> ! {
     eprintln!(
         "usage: tlv-hgnn <stats|sim|ablate|group|engine|compare|bench-table|serve> [args]\n\
          datasets: acm imdb dblp am fb | models: rgcn rgat nars\n\
-         modes: -B -S -P -O | flags: --scale S --model M --mode X --threads N --cpu"
+         modes: -B -S -P -O | flags: --scale S --model M --mode X --threads N --cpu\n\
+         \x20       --dispatch static|streaming|both (engine subcommand)"
     );
     exit(2)
 }
@@ -176,7 +179,10 @@ fn main() {
         }
         "engine" => {
             // Host-engine comparison: contiguous stripes vs group-affinity
-            // scheduling with group-local tiles, same bits required.
+            // execution under either dispatch discipline — static LPT
+            // scheduling (grouping is a barrier before execution) vs
+            // streaming work-stealing dispatch (grouping pipelined with
+            // aggregation). Same bits required everywhere.
             let d = rest.first().map(|s| parse_dataset(s)).unwrap_or(Dataset::Acm);
             let kind = flag(rest, "--model").map(|s| parse_model(&s)).unwrap_or(ModelKind::Rgcn);
             let scale =
@@ -184,39 +190,100 @@ fn main() {
             let threads = flag(rest, "--threads")
                 .and_then(|s| s.parse().ok())
                 .unwrap_or_else(FusedEngine::default_threads);
+            // None = run both disciplines and compare.
+            let dispatch = match flag(rest, "--dispatch").as_deref() {
+                None | Some("both") => None,
+                Some(s) => match ScheduleMode::parse(s) {
+                    Some(m) => Some(m),
+                    None => {
+                        eprintln!("unknown dispatch {s}");
+                        usage()
+                    }
+                },
+            };
             let g = d.load(scale);
             let plan = InferencePlan::build(&g, ModelConfig::new(kind), 64);
             let state = FeatureState::project_all(&plan, threads);
             let engine = FusedEngine::over(&plan, &state);
             let h = OverlapHypergraph::build(&g, 0.01);
-            let grouping =
-                group_overlap_driven(&h, default_n_max(g.target_vertices().len(), threads), threads);
+            let n_max = default_n_max(g.target_vertices().len(), threads);
+
+            // Materialized grouping: the striped baseline's order and the
+            // static path's input (its build time is the barrier streaming
+            // dispatch hides).
+            let tg = Instant::now();
+            let grouping = group_overlap_driven(&h, n_max, threads);
+            let group_t = tg.elapsed();
             let order = grouping.flat_order();
 
             let t0 = Instant::now();
             let striped = engine.embed_semantics_complete(&order, threads);
             let striped_t = t0.elapsed();
-            let t1 = Instant::now();
-            let (_, grouped, reuse) = engine.embed_grouped_with_reuse(&grouping, threads);
-            let grouped_t = t1.elapsed();
 
             println!("{} {} @ scale {scale}, {threads} thread(s)", d.name(), kind.name());
-            println!("  targets            {}", order.len());
-            println!("  striped embed      {striped_t:.2?}");
-            println!("  group-tile embed   {grouped_t:.2?}");
-            println!(
-                "  speedup            {:.2}x",
-                striped_t.as_secs_f64() / grouped_t.as_secs_f64()
-            );
-            println!(
-                "  tile reuse         {:.2}x over {} groups ({} of loads absorbed)",
-                reuse.reuse_factor(),
-                reuse.groups,
-                pct(reuse.saved_fraction()),
-            );
-            let diff = striped.max_abs_diff(&grouped);
-            println!("  max |diff|         {diff:e} {}", if diff == 0.0 { "(bitwise)" } else { "(FAIL)" });
-            if diff != 0.0 {
+            println!("  targets              {}", order.len());
+            println!("  grouping (alg. 2)    {group_t:.2?} ({} groups)", grouping.groups.len());
+            println!("  striped embed        {striped_t:.2?}");
+
+            let mut failed = false;
+            let mut static_total = None;
+            if dispatch != Some(ScheduleMode::Streaming) {
+                let t1 = Instant::now();
+                let schedule = GroupSchedule::build(&grouping, plan.adjacency(), threads);
+                let (grouped, reuse) = engine.embed_scheduled(&schedule);
+                let static_t = t1.elapsed();
+                static_total = Some(group_t + static_t);
+                println!(
+                    "  static LPT embed     {static_t:.2?} (group+schedule+embed {:.2?})",
+                    group_t + static_t
+                );
+                println!(
+                    "  tile reuse           {:.2}x over {} groups ({} of loads absorbed)",
+                    reuse.reuse_factor(),
+                    reuse.groups,
+                    pct(reuse.saved_fraction()),
+                );
+                let diff = striped.max_abs_diff(&grouped);
+                println!(
+                    "  static max |diff|    {diff:e} {}",
+                    if diff == 0.0 { "(bitwise)" } else { "(FAIL)" }
+                );
+                failed |= diff != 0.0;
+            }
+            if dispatch != Some(ScheduleMode::Static) {
+                let t2 = Instant::now();
+                let (s_order, s_grouped, _, stats) =
+                    engine.embed_grouped_streaming(&h, n_max, threads);
+                let stream_t = t2.elapsed();
+                println!(
+                    "  streaming total      {stream_t:.2?} (grouping overlapped with embed)"
+                );
+                println!(
+                    "  dispatch             {} groups, {} steals ({} rebalanced), \
+                     queue high-water {}",
+                    stats.groups,
+                    stats.steals,
+                    pct(stats.stolen_fraction()),
+                    stats.high_water,
+                );
+                if let Some(st) = static_total {
+                    println!(
+                        "  streaming speedup    {:.2}x vs static total",
+                        st.as_secs_f64() / stream_t.as_secs_f64()
+                    );
+                }
+                if s_order != order {
+                    println!("  streaming order      FAIL (diverges from materialized grouping)");
+                    failed = true;
+                }
+                let diff = striped.max_abs_diff(&s_grouped);
+                println!(
+                    "  streaming max |diff| {diff:e} {}",
+                    if diff == 0.0 { "(bitwise)" } else { "(FAIL)" }
+                );
+                failed |= diff != 0.0;
+            }
+            if failed {
                 exit(1);
             }
         }

@@ -12,7 +12,7 @@
 //! * **-O** — four channels, overlap-driven vertex grouping (full
 //!   TLV-HGNN; groups stream out of the grouper pipelined with execution).
 
-use crate::engine::{InferencePlan, TileReuse};
+use crate::engine::{InferencePlan, ScheduleMode, TileReuse};
 use crate::grouping::{
     default_n_max, group_overlap_driven, group_random, group_sequential, simulate_grouper,
     GrouperConfig, GrouperStats, Grouping, OverlapHypergraph,
@@ -141,6 +141,12 @@ pub struct SimResult {
     /// no groups). Mirrors the counters the software engine reports, so
     /// simulated and host-side locality are directly comparable.
     pub tile_reuse: TileReuse,
+    /// Cycle at which the first NA work could be dispatched to a channel.
+    /// Under [`ScheduleMode::Streaming`] this is bounded by the earliest
+    /// grouper emit; under [`ScheduleMode::Static`] every group waits for
+    /// the grouper to finish materializing the whole schedule, so it is
+    /// never earlier than the streaming value for the same run.
+    pub first_dispatch_cycle: u64,
 }
 
 impl SimResult {
@@ -208,8 +214,20 @@ impl<'g> Simulator<'g> {
         Simulator { cfg, g, m: plan.params.m.clone(), fused: plan.share_adjacency() }
     }
 
-    /// Run one full inference pass in `mode`.
+    /// Run one full inference pass in `mode` with the streaming group
+    /// dispatch the hardware implements (§IV-C2).
     pub fn run(&self, mode: ExecMode) -> SimResult {
+        self.run_with_dispatch(mode, ScheduleMode::Streaming)
+    }
+
+    /// Run one full inference pass in `mode` under an explicit dispatch
+    /// discipline. [`ScheduleMode::Streaming`] lets each hub group start
+    /// the moment the Vertex Grouper emits it (the hardware pipeline);
+    /// [`ScheduleMode::Static`] inserts the materialization barrier the
+    /// software static path has — no group dispatches before the grouper
+    /// finishes — which is what the CPU engine's `GroupSchedule` path
+    /// costs, and what `FusedEngine::embed_streaming` removes.
+    pub fn run_with_dispatch(&self, mode: ExecMode, dispatch: ScheduleMode) -> SimResult {
         let channels = mode.channels(&self.cfg);
         let w = Workload::of(self.g, &self.m);
         let mut hbm = Hbm::new(self.cfg.hbm.clone());
@@ -252,16 +270,18 @@ impl<'g> Simulator<'g> {
         }
         let mode_switch_stall = self.cfg.rpe.reconfig_cycles as u64;
 
-        let (na_cycles, grouper_stats, peak_partial_bytes, tile_reuse) = match mode {
+        let (na_cycles, grouper_stats, peak_partial_bytes, tile_reuse, first_dispatch) = match mode {
             ExecMode::PerSemanticBaseline => {
-                let c = self.run_per_semantic(&mut hbm, &mut caches, &mut events, &addr, fp_cycles + mode_switch_stall);
-                (c.0, None, c.1, TileReuse::default())
+                let start = fp_cycles + mode_switch_stall;
+                let c = self.run_per_semantic(&mut hbm, &mut caches, &mut events, &addr, start);
+                (c.0, None, c.1, TileReuse::default(), start)
             }
             ExecMode::SemanticsComplete => {
                 let grouping = group_sequential(self.g, usize::MAX);
                 let c = self.run_grouped(
                     &grouping,
                     None,
+                    dispatch,
                     1,
                     &mut hbm,
                     &mut caches,
@@ -269,7 +289,7 @@ impl<'g> Simulator<'g> {
                     &addr,
                     fp_cycles + mode_switch_stall,
                 );
-                (c.0, None, c.1, c.2)
+                (c.0, None, c.1, c.2, c.3)
             }
             ExecMode::RandomGrouped => {
                 let n_max = default_n_max(self.g.target_vertices().len(), channels);
@@ -277,6 +297,7 @@ impl<'g> Simulator<'g> {
                 let c = self.run_grouped(
                     &grouping,
                     None,
+                    dispatch,
                     channels,
                     &mut hbm,
                     &mut caches,
@@ -284,7 +305,7 @@ impl<'g> Simulator<'g> {
                     &addr,
                     fp_cycles + mode_switch_stall,
                 );
-                (c.0, None, c.1, c.2)
+                (c.0, None, c.1, c.2, c.3)
             }
             ExecMode::OverlapGrouped => {
                 let h = OverlapHypergraph::build(self.g, 0.01);
@@ -296,6 +317,7 @@ impl<'g> Simulator<'g> {
                 let c = self.run_grouped(
                     &grouping,
                     Some(&gs),
+                    dispatch,
                     channels,
                     &mut hbm,
                     &mut caches,
@@ -303,7 +325,7 @@ impl<'g> Simulator<'g> {
                     &addr,
                     fp_cycles + mode_switch_stall,
                 );
-                (c.0, Some(gs), c.1, c.2)
+                (c.0, Some(gs), c.1, c.2, c.3)
             }
         };
 
@@ -328,6 +350,7 @@ impl<'g> Simulator<'g> {
             peak_partial_bytes,
             flops: w.total_flops(),
             tile_reuse,
+            first_dispatch_cycle: first_dispatch,
         }
     }
 
@@ -438,22 +461,26 @@ impl<'g> Simulator<'g> {
     }
 
     /// Grouped semantics-complete execution (-S / -P / -O).
-    /// Groups are assigned round-robin to channels; with a grouper stats
-    /// record, group g cannot start before its emit cycle (streaming
-    /// pipeline, §IV-C2). Returns (finish_cycle, peak_partial_bytes,
-    /// group-local tile reuse counters).
+    /// With a grouper stats record, a group's *ready* cycle depends on the
+    /// dispatch discipline: under [`ScheduleMode::Streaming`] group g is
+    /// dispatchable at its emit cycle (pipeline, §IV-C2); under
+    /// [`ScheduleMode::Static`] every group waits for the full grouper run
+    /// (the software `GroupSchedule` materialization barrier). Returns
+    /// (finish_cycle, peak_partial_bytes, group-local tile reuse counters,
+    /// first dispatch cycle).
     #[allow(clippy::too_many_arguments)]
     fn run_grouped(
         &self,
         grouping: &Grouping,
         grouper: Option<&GrouperStats>,
+        dispatch: ScheduleMode,
         channels: usize,
         hbm: &mut Hbm,
         caches: &mut CacheHierarchy,
         events: &mut SimEvents,
         addr: &AddrMap,
         start: u64,
-    ) -> (u64, u64, TileReuse) {
+    ) -> (u64, u64, TileReuse, u64) {
         let arr = RpeArray::new(self.cfg.rpe.clone(), self.cfg.rpes_per_channel);
         let rpes = arr.count as u64;
         let mut ch_time = vec![start; channels];
@@ -463,19 +490,23 @@ impl<'g> Simulator<'g> {
 
         // Dispatch order: every group becomes *ready* either immediately
         // (low-degree sequential groups, which do not pass through the
-        // grouper) or at its grouper emit cycle (hub groups — the
-        // streaming pipeline of §IV-C2). The dispatcher hands each ready
-        // group to the least-loaded channel.
+        // grouper; no grouper record at all for -S/-P), at its grouper
+        // emit cycle (hub groups under streaming dispatch — the pipeline
+        // of §IV-C2), or only once the grouper has materialized the whole
+        // schedule (static dispatch — the software `GroupSchedule`
+        // barrier). The dispatcher hands each ready group to the
+        // least-loaded channel.
         let mut order: Vec<(u64, usize)> = grouping
             .groups
             .iter()
             .enumerate()
             .map(|(gi, _)| {
-                let ready = match grouper {
-                    // The grouper depends only on graph structure, so it
-                    // runs concurrently with the FP stage from cycle 0;
-                    // hub group g is dispatchable at max(FP done, emit_g).
-                    Some(gs) if gi < grouping.hub_groups => {
+                // The grouper depends only on graph structure, so it runs
+                // concurrently with the FP stage from cycle 0; readiness
+                // is clamped below by the FP/mode-switch `start`.
+                let ready = match (grouper, dispatch) {
+                    (Some(gs), ScheduleMode::Static) => start.max(gs.cycles),
+                    (Some(gs), ScheduleMode::Streaming) if gi < grouping.hub_groups => {
                         start.max(gs.emit_cycle.get(gi).copied().unwrap_or(0))
                     }
                     _ => start,
@@ -484,6 +515,7 @@ impl<'g> Simulator<'g> {
             })
             .collect();
         order.sort();
+        let first_dispatch = order.first().map_or(start, |&(ready, _)| ready);
 
         // Group-local tile accounting (distinct vs total row loads) —
         // dispatch-independent, so it shares the engine's one counter
@@ -538,7 +570,7 @@ impl<'g> Simulator<'g> {
             let compute_cycles = compute / rpes.max(1) + self.cfg.rpe.pipeline_depth as u64;
             ch_time[ch] = t + fetch_cycles.max(compute_cycles);
         }
-        (*ch_time.iter().max().unwrap_or(&start), peak_partials, reuse)
+        (*ch_time.iter().max().unwrap_or(&start), peak_partials, reuse, first_dispatch)
     }
 }
 
@@ -619,6 +651,33 @@ mod tests {
         let b = s.run(ExecMode::PerSemanticBaseline);
         let o = s.run(ExecMode::OverlapGrouped);
         assert!(b.peak_partial_bytes > o.peak_partial_bytes * 4);
+    }
+
+    #[test]
+    fn static_dispatch_never_starts_before_streaming() {
+        // Same workload, same groups, same per-group costs — the only
+        // difference is the readiness model: static waits for the whole
+        // grouper run, streaming starts at each group's emit cycle. The
+        // first dispatch therefore can never be earlier under static, and
+        // the default `run` is the streaming discipline.
+        let (g, m) = sim(Dataset::Acm, ModelKind::Rgcn);
+        let s = Simulator::new(AccelConfig::tlv_default(), &g, m);
+        let streaming = s.run_with_dispatch(ExecMode::OverlapGrouped, ScheduleMode::Streaming);
+        let static_ = s.run_with_dispatch(ExecMode::OverlapGrouped, ScheduleMode::Static);
+        assert!(
+            streaming.first_dispatch_cycle <= static_.first_dispatch_cycle,
+            "streaming dispatched at {} after static's {}",
+            streaming.first_dispatch_cycle,
+            static_.first_dispatch_cycle
+        );
+        // Dispatch discipline is a scheduling concern only: identical
+        // aggregation work and identical structural tile reuse.
+        assert_eq!(streaming.events.mac_ops, static_.events.mac_ops);
+        assert_eq!(streaming.tile_reuse, static_.tile_reuse);
+        assert!(static_.cycles > 0 && streaming.cycles > 0);
+        let default_run = s.run(ExecMode::OverlapGrouped);
+        assert_eq!(default_run.cycles, streaming.cycles);
+        assert_eq!(default_run.first_dispatch_cycle, streaming.first_dispatch_cycle);
     }
 
     #[test]

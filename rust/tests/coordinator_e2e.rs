@@ -136,6 +136,44 @@ fn cpu_servers_share_plans_through_one_cache() {
 }
 
 #[test]
+fn cpu_steal_queue_serves_bitwise_under_concurrent_load() {
+    // CPU channel workers drain one shared work-stealing queue: routed
+    // parts are placed by group affinity but an idle channel steals from
+    // a loaded one. Whatever the interleaving, results must stay
+    // bitwise-exact, and the steal counter must be exposed (the PJRT
+    // config reports None — private per-channel queues cannot trade).
+    let g = Arc::new(graph(19));
+    let server =
+        Arc::new(Server::start(Arc::clone(&g), ServerConfig::cpu(ModelKind::Rgat)).unwrap());
+    assert_eq!(server.steal_count(), Some(0), "no work submitted yet");
+    let reference = ReferenceEngine::new(&g, ModelConfig::new(ModelKind::Rgat), 64);
+    let targets: Vec<VId> = (0..100).map(VId).collect();
+    let want = reference.embed_semantics_complete(&targets);
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            let server = Arc::clone(&server);
+            let targets = targets.clone();
+            let want = &want;
+            s.spawn(move || {
+                for _ in 0..3 {
+                    let resp = server.submit(targets.clone()).unwrap();
+                    assert_eq!(resp.embeddings.len(), targets.len());
+                    for (i, &t) in targets.iter().enumerate() {
+                        let got = resp.embedding_of(t).expect("missing row");
+                        assert_eq!(got, want.row(i), "target {t} not bitwise under contention");
+                    }
+                }
+            });
+        }
+    });
+    assert!(server.steal_count().is_some());
+    match Arc::try_unwrap(server) {
+        Ok(s) => s.shutdown(),
+        Err(_) => panic!("server still shared"),
+    }
+}
+
+#[test]
 fn cpu_executor_concurrent_requests_complete() {
     let g = Arc::new(graph(17));
     let server = Arc::new(Server::start(Arc::clone(&g), ServerConfig::cpu(ModelKind::Rgcn)).unwrap());

@@ -1,0 +1,226 @@
+//! Integration: streaming work-stealing dispatch is a pure scheduling
+//! transform. `FusedEngine::embed_streaming` must be **bitwise identical**
+//! to the static LPT-scheduled path (and hence to `ReferenceEngine`) for
+//! every model × dataset × thread count and under every steal
+//! interleaving, and every emitted group must be executed exactly once.
+
+use std::sync::{Arc, Mutex};
+use tlv_hgnn::datasets::Dataset;
+use tlv_hgnn::engine::{measure_reuse, FusedEngine, GroupSchedule, ReferenceEngine, StealQueue};
+use tlv_hgnn::grouping::{
+    default_n_max, group_overlap_driven, group_random, stream_overlap_driven, Grouping,
+    OverlapHypergraph,
+};
+use tlv_hgnn::hetgraph::VId;
+use tlv_hgnn::model::{ModelConfig, ModelKind};
+use tlv_hgnn::util::prop::check;
+use tlv_hgnn::util::SmallRng;
+
+#[test]
+fn streaming_bitwise_matches_static_and_reference_everywhere() {
+    // 3 models × 3 datasets × threads {1, 2, 8} — the satellite matrix.
+    for d in Dataset::SMALL {
+        let g = d.load(0.03);
+        let h = OverlapHypergraph::build(&g, 0.0);
+        let n_max = default_n_max(g.target_vertices().len(), 4);
+        let grouping = group_overlap_driven(&h, n_max, 4);
+        let order = grouping.flat_order();
+        for kind in ModelKind::ALL {
+            let e = ReferenceEngine::new(&g, ModelConfig::new(kind), 24);
+            let f = FusedEngine::new(&e);
+            let want = e.embed_semantics_complete(&order);
+            for threads in [1usize, 2, 8] {
+                let (s_order, got, reuse, stats) = f.embed_grouped_streaming(&h, n_max, threads);
+                assert_eq!(
+                    s_order,
+                    order,
+                    "{} {kind:?} t={threads}: stream order != materialized flat order",
+                    d.name()
+                );
+                assert_eq!(
+                    want.max_abs_diff(&got),
+                    0.0,
+                    "{} {kind:?} t={threads}: streaming != reference",
+                    d.name()
+                );
+                // Static LPT schedule over the same grouping: same bits.
+                let schedule = GroupSchedule::build(&grouping, f.adjacency(), threads);
+                let (static_m, _) = f.embed_scheduled(&schedule);
+                assert_eq!(
+                    static_m.max_abs_diff(&got),
+                    0.0,
+                    "{} {kind:?} t={threads}: streaming != static",
+                    d.name()
+                );
+                // Tiles are per group, not per dispatch: counters equal
+                // the structural measure, and accounting covers every
+                // group exactly once.
+                assert_eq!(reuse, measure_reuse(&grouping, f.adjacency()), "{}", d.name());
+                assert_eq!(stats.groups as usize, grouping.groups.len());
+                assert_eq!(
+                    stats.executed_per_worker.iter().sum::<u64>(),
+                    stats.groups,
+                    "{} {kind:?} t={threads}: per-worker counts don't cover all groups",
+                    d.name()
+                );
+                assert_eq!(stats.executed_per_worker.len(), threads.max(1));
+            }
+        }
+    }
+}
+
+#[test]
+fn streaming_deterministic_across_runs_and_thread_counts() {
+    let g = Dataset::Imdb.load(0.04);
+    let h = OverlapHypergraph::build(&g, 0.0);
+    let n_max = default_n_max(g.target_vertices().len(), 4);
+    let e = ReferenceEngine::new(&g, ModelConfig::new(ModelKind::Rgat), 24);
+    let f = FusedEngine::new(&e);
+    let (order1, one, r1, _) = f.embed_grouped_streaming(&h, n_max, 1);
+    for threads in [2usize, 3, 5, 16] {
+        let (order, many, r, _) = f.embed_grouped_streaming(&h, n_max, threads);
+        assert_eq!(order, order1, "threads={threads}");
+        assert_eq!(one.max_abs_diff(&many), 0.0, "threads={threads}");
+        assert_eq!(r1, r, "threads={threads}");
+    }
+    // Repeat at the same thread count: steal interleavings may differ,
+    // bits may not.
+    let (_, again, _, _) = f.embed_grouped_streaming(&h, n_max, 5);
+    assert_eq!(one.max_abs_diff(&again), 0.0);
+}
+
+#[test]
+fn generic_producer_streams_arbitrary_groupings() {
+    // The driver is grouping-agnostic: stream a random grouping's groups
+    // through the generic producer hook and match the scheduled path.
+    let g = Dataset::Dblp.load(0.04);
+    let e = ReferenceEngine::new(&g, ModelConfig::new(ModelKind::Rgcn), 24);
+    let f = FusedEngine::new(&e);
+    let one_group =
+        Grouping { groups: vec![g.target_vertices()], hub_groups: 0, intra_weight_fraction: 0.0 };
+    for (name, grouping) in [
+        ("sequential-ish random", group_random(&g, 37, 0xFACE)),
+        ("one-group", one_group),
+    ] {
+        let order = grouping.flat_order();
+        let want = e.embed_semantics_complete(&order);
+        let (s_order, got, reuse, stats) = f.embed_streaming(
+            order.len(),
+            3,
+            4,
+            |emit: &mut dyn FnMut(Vec<VId>)| {
+                for group in &grouping.groups {
+                    emit(group.clone());
+                }
+            },
+        );
+        assert_eq!(s_order, order, "{name}");
+        assert_eq!(want.max_abs_diff(&got), 0.0, "{name}");
+        assert_eq!(reuse, measure_reuse(&grouping, f.adjacency()), "{name}");
+        assert_eq!(stats.groups as usize, grouping.groups.len(), "{name}");
+    }
+}
+
+#[test]
+fn streaming_handles_empty_stream() {
+    let g = Dataset::Acm.load(0.03);
+    let e = ReferenceEngine::new(&g, ModelConfig::new(ModelKind::Nars), 24);
+    let f = FusedEngine::new(&e);
+    let (order, m, reuse, stats) =
+        f.embed_streaming(0, 4, 8, |_emit: &mut dyn FnMut(Vec<VId>)| {});
+    assert!(order.is_empty());
+    assert_eq!(m.rows, 0);
+    assert_eq!(reuse.groups, 0);
+    assert_eq!(stats.groups, 0);
+}
+
+#[test]
+fn prop_every_group_executed_exactly_once_under_random_interleavings() {
+    // The dispatcher property: regardless of worker count, queue
+    // capacity, producer pacing and steal interleavings (randomly
+    // jittered via yields), each emitted task is popped by exactly one
+    // worker, and bounded capacity is respected.
+    check("dispatch-exactly-once", 12, |rng| {
+        let workers = 1 + rng.gen_index(6);
+        let n_tasks = 1 + rng.gen_index(150) as u32;
+        let cap = 1 + rng.gen_index(8);
+        // Pre-draw jitter decisions (the rng cannot cross threads).
+        let producer_yields: Vec<bool> =
+            (0..n_tasks).map(|_| rng.gen_index(3) == 0).collect();
+        let worker_seeds: Vec<u64> = (0..workers).map(|_| rng.next_u64()).collect();
+
+        let queue: StealQueue<u32> = StealQueue::new(workers, cap);
+        let executed: Mutex<Vec<u32>> = Mutex::new(Vec::new());
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                for seq in 0..n_tasks {
+                    if producer_yields[seq as usize] {
+                        std::thread::yield_now();
+                    }
+                    assert!(queue.push_to(seq as usize % workers, seq));
+                }
+                queue.close();
+            });
+            for w in 0..workers {
+                let queue = &queue;
+                let executed = &executed;
+                let seed = worker_seeds[w];
+                s.spawn(move || {
+                    let mut wrng = SmallRng::seed_from_u64(seed);
+                    while let Some((task, _stolen)) = queue.pop(w) {
+                        if wrng.gen_index(2) == 0 {
+                            std::thread::yield_now();
+                        }
+                        executed.lock().unwrap().push(task);
+                    }
+                });
+            }
+        });
+        let mut got = executed.into_inner().unwrap();
+        got.sort_unstable();
+        assert_eq!(got, (0..n_tasks).collect::<Vec<_>>(), "exactly-once violated");
+        assert!(queue.high_water() <= cap, "capacity bound violated");
+    });
+}
+
+#[test]
+fn streaming_under_contention_from_many_engines() {
+    // Two concurrent streaming runs over one shared plan (the serving
+    // pattern): both bitwise-correct, fully independent queues.
+    let g = Arc::new(Dataset::Acm.load(0.03));
+    let h = OverlapHypergraph::build(&g, 0.0);
+    let n_max = default_n_max(g.target_vertices().len(), 4);
+    let e = ReferenceEngine::new(&g, ModelConfig::new(ModelKind::Rgcn), 24);
+    let f = FusedEngine::new(&e);
+    let grouping = group_overlap_driven(&h, n_max, 4);
+    let want = e.embed_semantics_complete(&grouping.flat_order());
+    std::thread::scope(|s| {
+        for _ in 0..2 {
+            let f = &f;
+            let h = &h;
+            let want = &want;
+            s.spawn(move || {
+                let (_, got, _, _) = f.embed_grouped_streaming(h, n_max, 3);
+                assert_eq!(want.max_abs_diff(&got), 0.0);
+            });
+        }
+    });
+}
+
+#[test]
+fn stream_summary_agrees_with_materialized_grouping() {
+    let g = Dataset::Imdb.load(0.05);
+    let h = OverlapHypergraph::build(&g, 0.0);
+    let n_max = default_n_max(g.target_vertices().len(), 4);
+    let grouping = group_overlap_driven(&h, n_max, 4);
+    let mut emitted = 0usize;
+    let mut total = 0usize;
+    let summary = stream_overlap_driven(&h, n_max, |group| {
+        emitted += 1;
+        total += group.len();
+    });
+    assert_eq!(emitted, grouping.groups.len());
+    assert_eq!(summary.groups, grouping.groups.len());
+    assert_eq!(summary.hub_groups, grouping.hub_groups);
+    assert_eq!(total, g.target_vertices().len());
+}
