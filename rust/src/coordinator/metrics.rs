@@ -1,8 +1,68 @@
-//! Serving metrics: counters and latency percentiles.
+//! Serving metrics: counters, bounded latency percentiles, and hot-tile
+//! cache accounting.
+//!
+//! Latencies are kept in a fixed-size **reservoir** (Algorithm R) rather
+//! than an unbounded `Vec`: a million-request load run records exactly
+//! [`RESERVOIR_CAP`] samples, each new sample replacing a uniformly random
+//! held one once the reservoir is full. Below the cap the sample is exact
+//! (every latency retained), so small-run percentile tests see precise
+//! values; above it the percentiles are unbiased estimates over a uniform
+//! sample of the whole stream.
 
+use crate::engine::TileCacheOutcome;
+use crate::util::rng::SmallRng;
+use crate::util::table::human_bytes;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
+
+/// Reservoir size: 8192 u64s (64 KiB) bounds the server's latency memory
+/// regardless of how many requests it has served.
+pub const RESERVOIR_CAP: usize = 8192;
+
+/// Bounded uniform sample of a latency stream (Algorithm R).
+#[derive(Debug)]
+struct Reservoir {
+    sample: Vec<u64>,
+    /// Total latencies ever offered (≥ `sample.len()`).
+    seen: u64,
+    rng: SmallRng,
+}
+
+impl Default for Reservoir {
+    fn default() -> Reservoir {
+        Reservoir {
+            sample: Vec::new(),
+            seen: 0,
+            rng: SmallRng::seed_from_u64(0x1A7E_2C1E5),
+        }
+    }
+}
+
+impl Reservoir {
+    fn record(&mut self, us: u64) {
+        self.seen += 1;
+        if self.sample.len() < RESERVOIR_CAP {
+            self.sample.push(us);
+        } else {
+            let slot = self.rng.gen_range(self.seen) as usize;
+            if slot < RESERVOIR_CAP {
+                self.sample[slot] = us;
+            }
+        }
+    }
+}
+
+/// Latency percentile snapshot in microseconds.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct LatencyStats {
+    /// Latencies observed (the full stream, not the sample size).
+    pub count: u64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    pub p999_us: u64,
+}
 
 /// Shared metrics registry (cheaply cloneable behind an Arc by the server).
 #[derive(Debug, Default)]
@@ -11,7 +71,17 @@ pub struct Metrics {
     pub targets: AtomicU64,
     pub blocks_executed: AtomicU64,
     pub padded_slots: AtomicU64,
-    latencies_us: Mutex<Vec<u64>>,
+    // Hot-tile cache accounting (CPU executor; all zero when disabled).
+    pub tile_hits: AtomicU64,
+    pub tile_misses: AtomicU64,
+    /// Stolen work items that skipped the thief's cache (slow path).
+    pub tile_bypass: AtomicU64,
+    pub tile_evictions: AtomicU64,
+    /// Feature-table gather bytes skipped by cache hits.
+    pub tile_gather_bytes_saved: AtomicU64,
+    /// Bytes currently resident across all workers' tile caches.
+    pub tile_cached_bytes: AtomicU64,
+    latencies_us: Mutex<Reservoir>,
 }
 
 impl Metrics {
@@ -26,18 +96,62 @@ impl Metrics {
     }
 
     pub fn record_latency(&self, d: Duration) {
-        self.latencies_us.lock().unwrap().push(d.as_micros() as u64);
+        self.latencies_us.lock().unwrap().record(d.as_micros() as u64);
+    }
+
+    /// Fold one cache-aware embed outcome into the registry.
+    pub fn record_tile_outcome(&self, o: &TileCacheOutcome) {
+        if o.hit {
+            self.tile_hits.fetch_add(1, Ordering::Relaxed);
+            self.tile_gather_bytes_saved.fetch_add(o.gather_bytes_saved, Ordering::Relaxed);
+        } else {
+            self.tile_misses.fetch_add(1, Ordering::Relaxed);
+            self.tile_evictions.fetch_add(o.evicted, Ordering::Relaxed);
+            self.tile_cached_bytes.fetch_add(o.inserted_bytes, Ordering::Relaxed);
+            self.tile_cached_bytes.fetch_sub(o.evicted_bytes, Ordering::Relaxed);
+        }
+    }
+
+    /// A stolen work item took the cache-less slow path.
+    pub fn record_tile_bypass(&self) {
+        self.tile_bypass.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Hits over cache-eligible executions (bypasses excluded); 0 when the
+    /// cache never ran.
+    pub fn tile_hit_rate(&self) -> f64 {
+        let hits = self.tile_hits.load(Ordering::Relaxed);
+        let lookups = hits + self.tile_misses.load(Ordering::Relaxed);
+        if lookups == 0 {
+            return 0.0;
+        }
+        hits as f64 / lookups as f64
+    }
+
+    /// Percentiles over the (bounded) latency sample.
+    pub fn latency_summary(&self) -> LatencyStats {
+        let (mut v, seen) = {
+            let r = self.latencies_us.lock().unwrap();
+            (r.sample.clone(), r.seen)
+        };
+        if v.is_empty() {
+            return LatencyStats::default();
+        }
+        v.sort_unstable();
+        let q = |p: f64| v[((v.len() as f64 - 1.0) * p).ceil() as usize];
+        LatencyStats {
+            count: seen,
+            p50_us: q(0.50),
+            p95_us: q(0.95),
+            p99_us: q(0.99),
+            p999_us: q(0.999),
+        }
     }
 
     /// (p50, p95, p99) latencies in microseconds.
     pub fn latency_percentiles(&self) -> (u64, u64, u64) {
-        let mut v = self.latencies_us.lock().unwrap().clone();
-        if v.is_empty() {
-            return (0, 0, 0);
-        }
-        v.sort_unstable();
-        let q = |p: f64| v[((v.len() as f64 - 1.0) * p).ceil() as usize];
-        (q(0.50), q(0.95), q(0.99))
+        let s = self.latency_summary();
+        (s.p50_us, s.p95_us, s.p99_us)
     }
 
     /// Fraction of block slots wasted on padding (batcher efficiency).
@@ -50,16 +164,33 @@ impl Metrics {
     }
 
     pub fn summary(&self) -> String {
-        let (p50, p95, p99) = self.latency_percentiles();
-        format!(
-            "requests={} targets={} blocks={} p50={}us p95={}us p99={}us",
+        let l = self.latency_summary();
+        let mut s = format!(
+            "requests={} targets={} blocks={} p50={}us p95={}us p99={}us p999={}us",
             self.requests.load(Ordering::Relaxed),
             self.targets.load(Ordering::Relaxed),
             self.blocks_executed.load(Ordering::Relaxed),
-            p50,
-            p95,
-            p99
-        )
+            l.p50_us,
+            l.p95_us,
+            l.p99_us,
+            l.p999_us,
+        );
+        let hits = self.tile_hits.load(Ordering::Relaxed);
+        let misses = self.tile_misses.load(Ordering::Relaxed);
+        if hits + misses > 0 {
+            s.push_str(&format!(
+                " tile_cache: hit_rate={:.1}% hits={} misses={} bypass={} evictions={} \
+                 cached={} gather_saved={}",
+                self.tile_hit_rate() * 100.0,
+                hits,
+                misses,
+                self.tile_bypass.load(Ordering::Relaxed),
+                self.tile_evictions.load(Ordering::Relaxed),
+                human_bytes(self.tile_cached_bytes.load(Ordering::Relaxed)),
+                human_bytes(self.tile_gather_bytes_saved.load(Ordering::Relaxed)),
+            ));
+        }
+        s
     }
 }
 
@@ -90,5 +221,75 @@ mod tests {
     fn empty_percentiles_zero() {
         let m = Metrics::default();
         assert_eq!(m.latency_percentiles(), (0, 0, 0));
+    }
+
+    #[test]
+    fn latency_memory_is_bounded_and_count_exact() {
+        let m = Metrics::default();
+        let n = (RESERVOIR_CAP * 3) as u64;
+        for i in 0..n {
+            m.record_latency(Duration::from_micros(i));
+        }
+        {
+            let r = m.latencies_us.lock().unwrap();
+            assert_eq!(r.sample.len(), RESERVOIR_CAP, "reservoir must not grow past the cap");
+            assert_eq!(r.seen, n);
+        }
+        let s = m.latency_summary();
+        assert_eq!(s.count, n, "count reports the full stream, not the sample");
+        // A uniform sample of 0..n keeps the quantiles roughly in place.
+        assert!(s.p50_us > n / 4 && s.p50_us < 3 * n / 4, "p50={} of n={n}", s.p50_us);
+        assert!(s.p50_us <= s.p95_us && s.p95_us <= s.p99_us && s.p99_us <= s.p999_us);
+    }
+
+    #[test]
+    fn p999_tracks_the_tail_exactly_below_cap() {
+        let m = Metrics::default();
+        for us in 0..1000u64 {
+            m.record_latency(Duration::from_micros(us));
+        }
+        let s = m.latency_summary();
+        assert_eq!(s.p999_us, 999);
+        assert_eq!(s.p99_us, 990);
+        assert_eq!(s.count, 1000);
+    }
+
+    #[test]
+    fn tile_counters_fold_outcomes() {
+        let m = Metrics::default();
+        m.record_tile_outcome(&TileCacheOutcome {
+            hit: false,
+            inserted_bytes: 4096,
+            ..Default::default()
+        });
+        m.record_tile_outcome(&TileCacheOutcome {
+            hit: true,
+            gather_bytes_saved: 2048,
+            ..Default::default()
+        });
+        m.record_tile_outcome(&TileCacheOutcome {
+            hit: false,
+            inserted_bytes: 1024,
+            evicted: 1,
+            evicted_bytes: 4096,
+            ..Default::default()
+        });
+        m.record_tile_bypass();
+        assert_eq!(m.tile_hits.load(Ordering::Relaxed), 1);
+        assert_eq!(m.tile_misses.load(Ordering::Relaxed), 2);
+        assert_eq!(m.tile_bypass.load(Ordering::Relaxed), 1);
+        assert_eq!(m.tile_evictions.load(Ordering::Relaxed), 1);
+        assert_eq!(m.tile_cached_bytes.load(Ordering::Relaxed), 1024);
+        assert_eq!(m.tile_gather_bytes_saved.load(Ordering::Relaxed), 2048);
+        assert!((m.tile_hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+        assert!(m.summary().contains("tile_cache: hit_rate=33.3%"), "{}", m.summary());
+    }
+
+    #[test]
+    fn summary_omits_cache_line_when_cache_never_ran() {
+        let m = Metrics::default();
+        m.record_request(4);
+        assert!(!m.summary().contains("tile_cache"));
+        assert!(m.summary().contains("p999=0us"));
     }
 }

@@ -1,6 +1,7 @@
 //! L3 serving coordinator: request router (group affinity), dynamic block
-//! batcher, keyed inference-plan cache, multi-channel worker pool over
-//! PJRT or the in-process CPU fused engine, and serving metrics.
+//! batcher, keyed inference-plan cache (epoch-tagged for downstream
+//! hot-tile caches), multi-channel worker pool over PJRT or the
+//! in-process CPU fused engine, and serving metrics.
 
 pub mod batcher;
 pub mod metrics;
@@ -10,8 +11,8 @@ pub mod router;
 pub mod server;
 
 pub use batcher::{BlockBatcher, Tagged};
-pub use metrics::Metrics;
+pub use metrics::{LatencyStats, Metrics, RESERVOIR_CAP};
 pub use plans::PlanCache;
 pub use request::{InferenceRequest, InferenceResponse};
 pub use router::Router;
-pub use server::{ExecutorKind, Server, ServerConfig};
+pub use server::{ExecutorKind, Server, ServerConfig, CPU_MAX_IN_DIM, TILE_CACHE_DEFAULT_BYTES};

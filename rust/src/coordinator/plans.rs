@@ -14,6 +14,16 @@
 //! [`Weak`] handle: if the graph behind a cached entry has been dropped
 //! (or the address was reused by a different allocation), the entry is
 //! rebuilt and replaced instead of being served stale.
+//!
+//! Every published plan additionally carries an **epoch**: a cache-wide
+//! monotonically increasing counter stamped at publish time and returned
+//! by [`PlanCache::get_or_build_epoch`]. Downstream caches keyed off a
+//! plan's data (the per-worker hot-tile caches in
+//! `engine::tile_cache`) tag themselves with this epoch; any plan
+//! rebuild — a graph swap, [`PlanCache::invalidate`] after a live-graph
+//! delta, or an entry replaced because its graph died — publishes under
+//! a strictly larger epoch, so stale derived state is dropped
+//! deterministically with no per-entry bookkeeping.
 
 use crate::engine::InferencePlan;
 use crate::hetgraph::{FusedAdjacency, HetGraph};
@@ -30,10 +40,20 @@ struct PlanKey {
     max_in_dim: usize,
 }
 
+#[derive(Debug)]
+struct PlanEntry {
+    graph: Weak<HetGraph>,
+    plan: Arc<InferencePlan>,
+    epoch: u64,
+}
+
 #[derive(Debug, Default)]
 struct CacheInner {
     adjacencies: FxHashMap<usize, (Weak<HetGraph>, Arc<FusedAdjacency>)>,
-    plans: FxHashMap<PlanKey, (Weak<HetGraph>, Arc<InferencePlan>)>,
+    plans: FxHashMap<PlanKey, PlanEntry>,
+    /// Epoch of the most recently published plan; epoch 0 is never issued,
+    /// so derived caches can use it as "no plan yet".
+    last_epoch: u64,
 }
 
 /// Thread-safe keyed plan cache (see module docs).
@@ -61,6 +81,18 @@ impl PlanCache {
         m: ModelConfig,
         max_in_dim: usize,
     ) -> Arc<InferencePlan> {
+        self.get_or_build_epoch(g, m, max_in_dim).0
+    }
+
+    /// Like [`PlanCache::get_or_build`], also returning the epoch the plan
+    /// was published under (module docs). A cached plan keeps its original
+    /// epoch; any (re)build gets a strictly larger one.
+    pub fn get_or_build_epoch(
+        &self,
+        g: &Arc<HetGraph>,
+        m: ModelConfig,
+        max_in_dim: usize,
+    ) -> (Arc<InferencePlan>, u64) {
         let gid = Arc::as_ptr(g) as usize;
         let key = PlanKey { graph: gid, m, max_in_dim };
         let live = |weak: &Weak<HetGraph>| weak.upgrade().is_some_and(|l| Arc::ptr_eq(&l, g));
@@ -68,9 +100,9 @@ impl PlanCache {
         // Fast path + adjacency lookup under a short lock.
         let cached_adj = {
             let inner = self.inner.lock().expect("plan cache poisoned");
-            if let Some((weak, plan)) = inner.plans.get(&key) {
-                if live(weak) {
-                    return Arc::clone(plan);
+            if let Some(e) = inner.plans.get(&key) {
+                if live(&e.graph) {
+                    return (Arc::clone(&e.plan), e.epoch);
                 }
             }
             match inner.adjacencies.get(&gid) {
@@ -86,9 +118,9 @@ impl PlanCache {
 
         // Publish under the lock, re-checking for a racing builder.
         let mut inner = self.inner.lock().expect("plan cache poisoned");
-        if let Some((weak, existing)) = inner.plans.get(&key) {
-            if live(weak) {
-                return Arc::clone(existing);
+        if let Some(e) = inner.plans.get(&key) {
+            if live(&e.graph) {
+                return (Arc::clone(&e.plan), e.epoch);
             }
         }
         // Two steps so the map borrow ends before the miss-path insert.
@@ -108,8 +140,22 @@ impl PlanCache {
         } else {
             Arc::new(InferencePlan::with_adjacency(g, key.m.clone(), max_in_dim, canonical))
         };
-        inner.plans.insert(key, (Arc::downgrade(g), Arc::clone(&plan)));
-        plan
+        inner.last_epoch += 1;
+        let epoch = inner.last_epoch;
+        inner.plans.insert(key, PlanEntry { graph: Arc::downgrade(g), plan: Arc::clone(&plan), epoch });
+        (plan, epoch)
+    }
+
+    /// Forget every plan (and the shared adjacency) of `g`: the next
+    /// `get_or_build*` for `g` rebuilds under a strictly larger epoch.
+    /// This is the hook for live-graph deltas — mutate the graph, call
+    /// `invalidate`, and every epoch-tagged derived cache (hot tiles)
+    /// self-clears on its next request.
+    pub fn invalidate(&self, g: &Arc<HetGraph>) {
+        let gid = Arc::as_ptr(g) as usize;
+        let mut inner = self.inner.lock().expect("plan cache poisoned");
+        inner.plans.retain(|k, _| k.graph != gid);
+        inner.adjacencies.remove(&gid);
     }
 
     /// Number of cached plans (diagnostics/tests).
@@ -125,7 +171,7 @@ impl PlanCache {
     /// servers call this between graph swaps).
     pub fn evict_dead(&self) {
         let mut inner = self.inner.lock().expect("plan cache poisoned");
-        inner.plans.retain(|_, (w, _)| w.upgrade().is_some());
+        inner.plans.retain(|_, e| e.graph.upgrade().is_some());
         inner.adjacencies.retain(|_, (w, _)| w.upgrade().is_some());
     }
 }
@@ -195,6 +241,31 @@ mod tests {
         }
         cache.evict_dead();
         assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn cached_plan_keeps_its_epoch_and_builds_monotonically_increase() {
+        let g = Arc::new(Dataset::Acm.load(0.03));
+        let cache = PlanCache::new();
+        let (a, ea) = cache.get_or_build_epoch(&g, ModelConfig::new(ModelKind::Rgcn), 24);
+        let (b, eb) = cache.get_or_build_epoch(&g, ModelConfig::new(ModelKind::Rgcn), 24);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(ea, eb, "a cache hit keeps the publish epoch");
+        assert!(ea >= 1, "epoch 0 is reserved for 'no plan yet'");
+        let (_, ec) = cache.get_or_build_epoch(&g, ModelConfig::new(ModelKind::Rgat), 24);
+        assert!(ec > ea, "each new publish gets a strictly larger epoch");
+    }
+
+    #[test]
+    fn invalidate_forces_rebuild_under_larger_epoch() {
+        let g = Arc::new(Dataset::Imdb.load(0.03));
+        let cache = PlanCache::new();
+        let (a, ea) = cache.get_or_build_epoch(&g, ModelConfig::new(ModelKind::Rgcn), 24);
+        cache.invalidate(&g);
+        assert!(cache.is_empty());
+        let (b, eb) = cache.get_or_build_epoch(&g, ModelConfig::new(ModelKind::Rgcn), 24);
+        assert!(!Arc::ptr_eq(&a, &b), "invalidate must drop the cached plan");
+        assert!(eb > ea, "rebuild after invalidate must advance the epoch");
     }
 
     #[test]

@@ -23,6 +23,15 @@
 //!   chose (preserving group affinity), but an idle channel steals from a
 //!   loaded one instead of sitting out a skewed request — the same
 //!   dispatcher the engine's streaming path uses.
+//! * Each CPU worker additionally owns a hot-tile cache
+//!   ([`TileCache`], byte budget [`ServerConfig::tile_cache_bytes`],
+//!   0 = off): repeated traffic on a hot routed slice skips the gather
+//!   pass and aggregates straight from the cached tile. Affinity routing
+//!   makes this effective (the same slice lands on the same worker);
+//!   **stolen** items bypass the thief's cache — a different worker's
+//!   traffic would only pollute it — and take the ordinary slow path, so
+//!   stealing remains a pure perf decision. Caches are tagged with the
+//!   plan's [`PlanCache`] epoch; a plan rebuild invalidates every tile.
 //! * `submit` splits a request by channel affinity, enqueues the parts,
 //!   and assembles the response; rows come back tagged by vertex.
 
@@ -31,7 +40,7 @@ use super::metrics::Metrics;
 use super::plans::PlanCache;
 use super::request::{InferenceRequest, InferenceResponse};
 use super::router::Router;
-use crate::engine::{FeatureState, FusedEngine, InferencePlan, StealQueue, TileScratch};
+use crate::engine::{FeatureState, FusedEngine, InferencePlan, StealQueue, TileCache, TileScratch};
 use crate::grouping::{default_n_max, group_overlap_driven, OverlapHypergraph};
 use crate::hetgraph::{HetGraph, VId};
 use crate::model::{ModelConfig, ModelKind};
@@ -57,6 +66,9 @@ struct WorkItem {
 struct PlanState {
     plan: Arc<InferencePlan>,
     state: FeatureState,
+    /// [`PlanCache`] epoch the plan was resolved under — tags every
+    /// worker's hot-tile cache so a plan rebuild drops stale tiles.
+    epoch: u64,
 }
 
 /// Which execution backend the channel workers run.
@@ -70,13 +82,19 @@ pub enum ExecutorKind {
 }
 
 /// Raw-input cap for CPU-executor plans (matches the engine defaults used
-/// across tests and examples).
-const CPU_MAX_IN_DIM: usize = 64;
+/// across tests and examples). Public so bitwise verifiers (loadgen,
+/// tests) can build a `ReferenceEngine` against the exact same plan.
+pub const CPU_MAX_IN_DIM: usize = 64;
 
 /// Capacity of the shared CPU work-stealing queue. Generous — serving
 /// should block a submitter only under severe overload (backpressure),
 /// not in steady state.
 const CPU_QUEUE_CAP: usize = 4096;
+
+/// Default per-worker hot-tile cache budget (32 MiB). Small on purpose:
+/// the cache pays off on the hot head of a skewed workload; the long tail
+/// should be evicted, not hoarded.
+pub const TILE_CACHE_DEFAULT_BYTES: usize = 32 << 20;
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -91,6 +109,9 @@ pub struct ServerConfig {
     /// Keyed plan cache; pass a shared handle to let several servers over
     /// the same graph (or several models) share adjacency transposes.
     pub plans: Arc<PlanCache>,
+    /// Per-worker hot-tile cache budget in bytes (CPU executor only;
+    /// 0 disables the cache, PJRT workers ignore it).
+    pub tile_cache_bytes: usize,
 }
 
 impl ServerConfig {
@@ -102,6 +123,7 @@ impl ServerConfig {
             overlap_routing: true,
             executor: ExecutorKind::Pjrt,
             plans: Arc::new(PlanCache::new()),
+            tile_cache_bytes: TILE_CACHE_DEFAULT_BYTES,
         }
     }
 
@@ -156,17 +178,18 @@ impl Server {
                 let mut model = ModelConfig::new(cfg.kind);
                 model.hidden_dim = hidden as u32;
                 model.fusion_dim = hidden as u32;
-                let plan = cfg.plans.get_or_build(&g, model, max_in_dim);
+                let (plan, epoch) = cfg.plans.get_or_build_epoch(&g, model, max_in_dim);
                 debug_assert_eq!(plan.hidden(), state.projected.cols);
-                Arc::new(PlanState { plan, state })
+                Arc::new(PlanState { plan, state, epoch })
             }
             ExecutorKind::Cpu => {
                 // FP pass through the parallel in-process projector — the
                 // plan and its bitwise-reference parameters come straight
                 // from the cache.
-                let plan = cfg.plans.get_or_build(&g, ModelConfig::new(cfg.kind), CPU_MAX_IN_DIM);
+                let (plan, epoch) =
+                    cfg.plans.get_or_build_epoch(&g, ModelConfig::new(cfg.kind), CPU_MAX_IN_DIM);
                 let state = FeatureState::project_all(&plan, cfg.channels.max(1));
-                Arc::new(PlanState { plan, state })
+                Arc::new(PlanState { plan, state, epoch })
             }
         };
 
@@ -212,6 +235,7 @@ impl Server {
                 // One shared work-stealing queue: routed parts are placed
                 // on their affine channel's deque, idle channels steal.
                 let queue = Arc::new(StealQueue::new(cfg.channels, CPU_QUEUE_CAP));
+                let cache_bytes = cfg.tile_cache_bytes;
                 for ch in 0..cfg.channels {
                     let queue = Arc::clone(&queue);
                     let shared = Arc::clone(&shared);
@@ -220,7 +244,9 @@ impl Server {
                     workers.push(
                         std::thread::Builder::new()
                             .name(format!("tlv-worker-{ch}"))
-                            .spawn(move || worker_loop_cpu(ch, queue, shared, metrics, ready))
+                            .spawn(move || {
+                                worker_loop_cpu(ch, queue, shared, cache_bytes, metrics, ready)
+                            })
                             .context("spawn worker")?,
                     );
                 }
@@ -325,18 +351,41 @@ impl Drop for Server {
 /// No artifacts, no compilation — ready immediately. All CPU workers pop
 /// the one shared [`StealQueue`]: their own deque first (affinity-placed
 /// work), then whatever a loaded sibling channel has queued up.
+///
+/// Affinity-placed items run through this worker's hot-tile cache (when
+/// `cache_bytes > 0`): an identical slice seen again skips the gather pass
+/// entirely, bitwise-identically (`engine::tile_cache` module docs).
+/// Stolen items belong to another channel's traffic and would only evict
+/// this worker's hot tiles, so they bypass the cache and take the
+/// ordinary tile path — slower, never wrong.
 fn worker_loop_cpu(
     ch: usize,
     queue: Arc<StealQueue<WorkItem>>,
     shared: Arc<PlanState>,
+    cache_bytes: usize,
     metrics: Arc<Metrics>,
     ready: Sender<Result<(), String>>,
 ) {
     let _ = ready.send(Ok(()));
     let engine = FusedEngine::over(&shared.plan, &shared.state);
     let mut scratch = TileScratch::default();
-    while let Some((w, _stolen)) = queue.pop(ch) {
-        let (m, _reuse) = engine.embed_group_tile_reusing(&w.targets, &mut scratch);
+    let mut cache = (cache_bytes > 0).then(|| TileCache::new(cache_bytes, shared.epoch));
+    while let Some((w, stolen)) = queue.pop(ch) {
+        let m = match &mut cache {
+            Some(cache) if !stolen => {
+                let (m, _reuse, outcome) =
+                    engine.embed_group_tile_cached(&w.targets, cache, &mut scratch);
+                metrics.record_tile_outcome(&outcome);
+                m
+            }
+            other => {
+                if other.is_some() {
+                    metrics.record_tile_bypass();
+                }
+                let (m, _reuse) = engine.embed_group_tile_reusing(&w.targets, &mut scratch);
+                m
+            }
+        };
         metrics.record_block(w.targets.len(), w.targets.len().max(1));
         let rows: Vec<(VId, Vec<f32>)> =
             w.targets.iter().enumerate().map(|(i, &t)| (t, m.row(i).to_vec())).collect();

@@ -67,19 +67,19 @@ pub struct FusedEngine<'a> {
 #[derive(Debug, Default)]
 pub struct TileScratch {
     /// VId → tile slot of the current group.
-    slot_of: FxHashMap<VId, u32>,
+    pub(super) slot_of: FxHashMap<VId, u32>,
     /// Slot → VId, insertion-ordered (the gather list).
-    tile_ids: Vec<VId>,
+    pub(super) tile_ids: Vec<VId>,
     /// Tile slot of every edge source, in aggregation order — the inner
     /// numeric loop walks this sequentially, so the one hash lookup per
     /// edge happens in the indexing pass, never in the float loop.
-    edge_slots: Vec<u32>,
+    pub(super) edge_slots: Vec<u32>,
     /// Tile slot of every target of the group, in group order.
-    target_slots: Vec<u32>,
+    pub(super) target_slots: Vec<u32>,
     /// The tile: one gathered row per distinct VId the group touches.
-    tile: Vec<f32>,
+    pub(super) tile: Vec<f32>,
     /// The per-target partial (Algorithm 1's register).
-    partial: Vec<f32>,
+    pub(super) partial: Vec<f32>,
 }
 
 impl<'a> FusedEngine<'a> {
@@ -293,7 +293,6 @@ impl<'a> FusedEngine<'a> {
         out: &mut [f32],
     ) -> (u64, u64) {
         let h = self.plan.params.hidden;
-        let params = &self.plan.params;
         let projected = &self.state.projected;
         let fused = self.plan.adjacency();
         debug_assert_eq!(out.len(), targets.len() * h);
@@ -303,7 +302,6 @@ impl<'a> FusedEngine<'a> {
         tile_ids.clear();
         edge_slots.clear();
         target_slots.clear();
-        partial.resize(h, 0.0);
 
         // Pass 1: index.
         {
@@ -330,6 +328,33 @@ impl<'a> FusedEngine<'a> {
         }
 
         // Pass 3: aggregate from the tile, same op order as embed_into.
+        self.aggregate_from_tile(targets, tile, edge_slots, target_slots, partial, out);
+        (tile_ids.len() as u64, (targets.len() + edge_slots.len()) as u64)
+    }
+
+    /// Pass 3 of the tile kernel, factored out so the cross-request
+    /// hot-tile cache (`engine::tile_cache`) can aggregate straight out of
+    /// a *previously materialized* tile without re-running the index or
+    /// gather passes. Exact per-target op order of
+    /// [`embed_into`](Self::embed_into); rows are read from `tile` via the
+    /// precomputed per-edge / per-target slots. Because a cached tile holds
+    /// unmodified copies of projected rows and this is the one aggregation
+    /// implementation both the fresh and the cached path funnel through,
+    /// serving from the cache is bitwise identical by construction.
+    pub(crate) fn aggregate_from_tile(
+        &self,
+        targets: &[VId],
+        tile: &[f32],
+        edge_slots: &[u32],
+        target_slots: &[u32],
+        partial: &mut Vec<f32>,
+        out: &mut [f32],
+    ) {
+        let h = self.plan.params.hidden;
+        let params = &self.plan.params;
+        let fused = self.plan.adjacency();
+        debug_assert_eq!(out.len(), targets.len() * h);
+        partial.resize(h, 0.0);
         let mut cursor = 0usize;
         for (i, &t) in targets.iter().enumerate() {
             let ts = target_slots[i] as usize * h;
@@ -359,7 +384,6 @@ impl<'a> FusedEngine<'a> {
             leaky_relu(z, LEAKY_SLOPE);
         }
         debug_assert_eq!(cursor, edge_slots.len());
-        (tile_ids.len() as u64, (targets.len() + edge_slots.len()) as u64)
     }
 }
 

@@ -13,6 +13,8 @@
 //! `dispatch` streams groups from the grouper straight onto workers
 //! through a bounded work-stealing queue (grouping pipelined with
 //! aggregation — [`ScheduleMode`] selects static vs streaming);
+//! `tile_cache` carries materialized group tiles *across* serving
+//! requests (an epoch-tagged, byte-budgeted per-worker LRU);
 //! `multilayer` runs whole stacks on one plan. Every path computes
 //! bitwise-identical embeddings.
 
@@ -27,6 +29,7 @@ pub mod paradigm;
 pub mod plan;
 pub mod schedule;
 pub mod tensor;
+pub mod tile_cache;
 pub mod trace;
 
 pub use access::{AccessCounter, AccessReport, TileReuse};
@@ -51,4 +54,5 @@ pub use paradigm::{
 pub use plan::{FeatureState, InferencePlan, ModelParams};
 pub use schedule::{group_tile_counts, measure_reuse, GroupSchedule, WorkerPlan};
 pub use tensor::Matrix;
+pub use tile_cache::{TileCache, TileCacheOutcome, TileCacheStats};
 pub use trace::{NullSink, StreamSink, TeeSink, TraceSink};

@@ -1,0 +1,518 @@
+//! Cross-request hot-tile cache: an epoch-tagged, byte-budgeted LRU of
+//! materialized group tiles (HiHGNN's data-reusability insight, applied
+//! across serving requests instead of across accelerator stages).
+//!
+//! The paper's vertex grouping removes redundant reads of shared neighbors
+//! *within* one inference pass; in a serving deployment the same
+//! redundancy recurs *across* requests, because real traffic is skewed and
+//! hot subgraphs are re-gathered from scratch on every hit. Each CPU
+//! serving worker therefore owns one [`TileCache`]: a small LRU keyed by
+//! the target sequence of a routed request slice, holding exactly what the
+//! tile kernel's index + gather passes produce — the per-edge and
+//! per-target tile slots and the gathered tile rows. On a hit, both passes
+//! are skipped entirely and aggregation runs straight out of the cached
+//! tile ([`FusedEngine::embed_group_tile_cached`]).
+//!
+//! **Bitwise-preservation argument.** A cached tile stores *unmodified
+//! copies* of projected feature rows — byte-identical to what a fresh
+//! gather would produce from the same [`FeatureState`] — and the cached
+//! slot arrays are exactly the index pass's output for the identical
+//! target sequence (entries are verified by full sequence equality, so a
+//! 64-bit key collision degrades to a miss, never a wrong tile). The hit
+//! path funnels into the *same* pass-3 implementation as the fresh path
+//! (`FusedEngine::aggregate_from_tile`), so per-target op order is
+//! untouched and the embeddings are bit-for-bit identical, cache on or
+//! off, under any steal interleaving.
+//!
+//! **Epoch invalidation.** Tiles are only valid against the plan + feature
+//! state they were gathered from. Every plan resolved through the
+//! coordinator's `PlanCache` carries a monotonically increasing *epoch*;
+//! a worker's cache is tagged with the epoch it serves, and
+//! [`TileCache::set_epoch`] drops every tile the moment the epoch moves —
+//! so any plan rebuild (model swap, live-graph delta, graph reload)
+//! invalidates stale tiles for free, with no per-entry bookkeeping.
+//!
+//! **Budget.** The cache is byte-budgeted, not entry-budgeted: one hub
+//! group's tile can dwarf a hundred leaf tiles. Admission copies the
+//! worker's [`TileScratch`] (the tile was just materialized there anyway);
+//! entries too large for the whole budget are rejected outright; eviction
+//! is strict LRU via an ordered tick index.
+//!
+//! [`FeatureState`]: super::plan::FeatureState
+//! [`FusedEngine::embed_group_tile_cached`]: FusedEngine::embed_group_tile_cached
+
+use super::access::TileReuse;
+use super::fused::{FusedEngine, TileScratch};
+use super::tensor::Matrix;
+use crate::hetgraph::VId;
+use rustc_hash::{FxHashMap, FxHasher};
+use std::collections::BTreeMap;
+use std::hash::{Hash, Hasher};
+
+/// Fixed per-entry overhead charged against the byte budget on top of the
+/// payload vectors (map slot, LRU slot, `CachedTile` header).
+const TILE_ENTRY_OVERHEAD_BYTES: usize = 96;
+
+/// One cached materialized group tile: everything pass 3 of the tile
+/// kernel needs, plus the exact target sequence it was built for.
+#[derive(Debug)]
+pub struct CachedTile {
+    /// The exact ordered target sequence of the entry — compared in full
+    /// on lookup, so hash collisions can only cause misses.
+    targets: Vec<VId>,
+    /// Tile slot of every edge source, in aggregation order.
+    pub(super) edge_slots: Vec<u32>,
+    /// Tile slot of every target, in group order.
+    pub(super) target_slots: Vec<u32>,
+    /// The gathered tile: one unmodified projected row per distinct VId.
+    pub(super) tile: Vec<f32>,
+    /// LRU recency tick (monotonic per cache).
+    tick: u64,
+    /// Budget bytes charged for this entry.
+    bytes: usize,
+}
+
+impl CachedTile {
+    /// Bytes of feature-table gather a hit on this entry skips.
+    pub fn tile_bytes(&self) -> usize {
+        self.tile.len() * 4
+    }
+}
+
+/// Lifetime counters of one [`TileCache`].
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct TileCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+    /// Admissions refused because a single tile exceeded the whole budget
+    /// (or the budget is zero).
+    pub rejected: u64,
+    /// Whole-cache invalidations caused by an epoch move.
+    pub epoch_invalidations: u64,
+    /// Feature-table gather bytes skipped by hits.
+    pub gather_bytes_saved: u64,
+}
+
+/// What one admission did to the cache (for external byte accounting).
+#[derive(Debug, Default, Clone, Copy)]
+pub(crate) struct AdmitOutcome {
+    pub inserted_bytes: u64,
+    pub evicted: u64,
+    pub evicted_bytes: u64,
+}
+
+/// Per-worker epoch-tagged byte-budgeted LRU of group tiles (module docs).
+/// Not internally synchronized: each serving worker owns its own cache, so
+/// the hot path takes no lock at all.
+#[derive(Debug)]
+pub struct TileCache {
+    epoch: u64,
+    budget: usize,
+    bytes: usize,
+    tick: u64,
+    entries: FxHashMap<u64, CachedTile>,
+    /// Recency index: tick → entry key. First entry is the LRU victim.
+    lru: BTreeMap<u64, u64>,
+    pub stats: TileCacheStats,
+}
+
+impl TileCache {
+    /// A cache holding at most `byte_budget` bytes of tiles, serving plan
+    /// epoch `epoch`. A zero budget disables admission (every lookup
+    /// misses, nothing is stored).
+    pub fn new(byte_budget: usize, epoch: u64) -> TileCache {
+        TileCache {
+            epoch,
+            budget: byte_budget,
+            bytes: 0,
+            tick: 0,
+            entries: FxHashMap::default(),
+            lru: BTreeMap::new(),
+            stats: TileCacheStats::default(),
+        }
+    }
+
+    /// Canonical key of a target sequence (FxHash over the VIds + length).
+    /// Collisions are safe: entries verify the full sequence on lookup.
+    pub fn key_of(targets: &[VId]) -> u64 {
+        let mut h = FxHasher::default();
+        targets.len().hash(&mut h);
+        for t in targets {
+            t.0.hash(&mut h);
+        }
+        h.finish()
+    }
+
+    /// The plan epoch this cache currently serves.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Move to a new plan epoch: if it differs from the current one, every
+    /// cached tile is dropped (they were gathered from the old plan's
+    /// feature state and must never be served again). Idempotent.
+    pub fn set_epoch(&mut self, epoch: u64) {
+        if epoch != self.epoch {
+            self.clear();
+            self.epoch = epoch;
+            self.stats.epoch_invalidations += 1;
+        }
+    }
+
+    /// Drop every entry (budget and stats are kept).
+    pub fn clear(&mut self) {
+        self.entries.clear();
+        self.lru.clear();
+        self.bytes = 0;
+    }
+
+    /// Entries currently cached.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Bytes currently charged against the budget.
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// The configured byte budget.
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    fn entry_bytes(targets: usize, edge_slots: usize, target_slots: usize, tile: usize) -> usize {
+        (targets + edge_slots + target_slots + tile) * 4 + TILE_ENTRY_OVERHEAD_BYTES
+    }
+
+    /// Look up the tile for the exact target sequence `targets` under
+    /// `key` (= [`TileCache::key_of`]). A hit refreshes LRU recency and
+    /// accounts the skipped gather; a mismatch under the same key (hash
+    /// collision) is a miss.
+    pub(crate) fn lookup(&mut self, key: u64, targets: &[VId]) -> Option<&CachedTile> {
+        let hit = matches!(self.entries.get(&key), Some(e) if e.targets == targets);
+        if !hit {
+            self.stats.misses += 1;
+            return None;
+        }
+        self.tick += 1;
+        let tick = self.tick;
+        let e = self.entries.get_mut(&key).expect("entry checked present");
+        self.lru.remove(&e.tick);
+        e.tick = tick;
+        self.stats.hits += 1;
+        self.stats.gather_bytes_saved += e.tile_bytes() as u64;
+        self.lru.insert(tick, key);
+        Some(&self.entries[&key])
+    }
+
+    /// Admit the tile the scratch currently holds (just materialized for
+    /// `targets` by `embed_group_tiled`), evicting LRU entries until it
+    /// fits. Oversized tiles (and every tile, at budget zero) are rejected.
+    pub(crate) fn admit(&mut self, key: u64, targets: &[VId], scratch: &TileScratch) -> AdmitOutcome {
+        let bytes = Self::entry_bytes(
+            targets.len(),
+            scratch.edge_slots.len(),
+            scratch.target_slots.len(),
+            scratch.tile.len(),
+        );
+        let mut out = AdmitOutcome::default();
+        if bytes > self.budget {
+            self.stats.rejected += 1;
+            return out;
+        }
+        // Replace any previous entry under this key (hash collision or a
+        // re-admit after an epoch-less clear) before the budget walk.
+        if let Some(old) = self.entries.remove(&key) {
+            self.lru.remove(&old.tick);
+            self.bytes -= old.bytes;
+            self.stats.evictions += 1;
+            out.evicted += 1;
+            out.evicted_bytes += old.bytes as u64;
+        }
+        while self.bytes + bytes > self.budget {
+            let (&victim_tick, &victim_key) =
+                self.lru.iter().next().expect("over budget implies entries");
+            self.lru.remove(&victim_tick);
+            let old = self.entries.remove(&victim_key).expect("lru key present");
+            self.bytes -= old.bytes;
+            self.stats.evictions += 1;
+            out.evicted += 1;
+            out.evicted_bytes += old.bytes as u64;
+        }
+        self.tick += 1;
+        let entry = CachedTile {
+            targets: targets.to_vec(),
+            edge_slots: scratch.edge_slots.clone(),
+            target_slots: scratch.target_slots.clone(),
+            tile: scratch.tile.clone(),
+            tick: self.tick,
+            bytes,
+        };
+        self.bytes += bytes;
+        self.lru.insert(self.tick, key);
+        self.entries.insert(key, entry);
+        self.stats.insertions += 1;
+        out.inserted_bytes = bytes as u64;
+        out
+    }
+}
+
+/// What one cache-aware group embed did, for metrics accounting.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct TileCacheOutcome {
+    /// The gather + index passes were skipped (served from the cache).
+    pub hit: bool,
+    /// On a hit: feature-table gather bytes skipped.
+    pub gather_bytes_saved: u64,
+    /// On a miss: bytes newly admitted (0 if rejected).
+    pub inserted_bytes: u64,
+    /// On a miss: entries evicted to make room.
+    pub evicted: u64,
+    /// On a miss: bytes those evictions released.
+    pub evicted_bytes: u64,
+}
+
+impl<'a> FusedEngine<'a> {
+    /// [`embed_group_tile_reusing`] with a per-worker hot-tile cache in
+    /// front: on a hit the index and gather passes are skipped and
+    /// aggregation reads the cached tile (bitwise identical — module
+    /// docs); on a miss the fresh tile is admitted for the next request.
+    /// Returned [`TileReuse`] counts a hit's gather as fully absorbed
+    /// (`distinct_loads` contribution of 0), so serving-side reuse
+    /// reporting composes with the per-pass counters.
+    ///
+    /// [`embed_group_tile_reusing`]: FusedEngine::embed_group_tile_reusing
+    pub fn embed_group_tile_cached(
+        &self,
+        targets: &[VId],
+        cache: &mut TileCache,
+        scratch: &mut TileScratch,
+    ) -> (Matrix, TileReuse, TileCacheOutcome) {
+        let h = self.plan().params.hidden;
+        let mut out = Matrix::zeros(targets.len(), h);
+        let mut reuse = TileReuse::default();
+        let mut outcome = TileCacheOutcome::default();
+        if targets.is_empty() || h == 0 {
+            return (out, reuse, outcome);
+        }
+        let key = TileCache::key_of(targets);
+        if let Some(entry) = cache.lookup(key, targets) {
+            outcome.hit = true;
+            outcome.gather_bytes_saved = entry.tile_bytes() as u64;
+            self.aggregate_from_tile(
+                targets,
+                &entry.tile,
+                &entry.edge_slots,
+                &entry.target_slots,
+                &mut scratch.partial,
+                &mut out.data,
+            );
+            reuse.record_group(0, (targets.len() + entry.edge_slots.len()) as u64);
+            return (out, reuse, outcome);
+        }
+        let (distinct, total) = self.embed_group_tiled(targets, scratch, &mut out.data);
+        reuse.record_group(distinct, total);
+        let admit = cache.admit(key, targets, scratch);
+        outcome.inserted_bytes = admit.inserted_bytes;
+        outcome.evicted = admit.evicted;
+        outcome.evicted_bytes = admit.evicted_bytes;
+        (out, reuse, outcome)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::Dataset;
+    use crate::engine::{FeatureState, InferencePlan, ReferenceEngine};
+    use crate::model::{ModelConfig, ModelKind};
+
+    /// A scratch pretending to hold a materialized tile of `rows` rows of
+    /// `h` floats for `targets`.
+    fn scratch_for(targets: &[VId], rows: usize, h: usize) -> TileScratch {
+        let mut s = TileScratch::default();
+        s.target_slots = (0..targets.len() as u32).collect();
+        s.edge_slots = vec![0; rows];
+        s.tile = vec![1.0; rows * h];
+        s
+    }
+
+    fn vids(range: std::ops::Range<u32>) -> Vec<VId> {
+        range.map(VId).collect()
+    }
+
+    #[test]
+    fn key_is_order_sensitive_and_deterministic() {
+        let a = vids(0..4);
+        let mut b = a.clone();
+        b.reverse();
+        assert_eq!(TileCache::key_of(&a), TileCache::key_of(&a));
+        assert_ne!(TileCache::key_of(&a), TileCache::key_of(&b));
+        assert_ne!(TileCache::key_of(&a), TileCache::key_of(&a[..3]));
+    }
+
+    #[test]
+    fn lookup_hits_after_admit_and_misses_cold() {
+        let mut c = TileCache::new(1 << 20, 1);
+        let t = vids(0..8);
+        let key = TileCache::key_of(&t);
+        assert!(c.lookup(key, &t).is_none());
+        c.admit(key, &t, &scratch_for(&t, 16, 4));
+        assert!(c.lookup(key, &t).is_some());
+        assert_eq!(c.stats.hits, 1);
+        assert_eq!(c.stats.misses, 1);
+        assert!(c.stats.gather_bytes_saved >= 16 * 4 * 4);
+    }
+
+    #[test]
+    fn collision_with_different_targets_is_a_miss_never_a_wrong_tile() {
+        let mut c = TileCache::new(1 << 20, 1);
+        let a = vids(0..4);
+        let b = vids(10..14);
+        let key = TileCache::key_of(&a);
+        c.admit(key, &a, &scratch_for(&a, 8, 4));
+        // Deliberately reuse a's key for b's sequence: must miss.
+        assert!(c.lookup(key, &b).is_none());
+        assert_eq!(c.stats.hits, 0);
+        // And admitting b under the same key replaces a, never coexists.
+        c.admit(key, &b, &scratch_for(&b, 8, 4));
+        assert_eq!(c.len(), 1);
+        assert!(c.lookup(key, &a).is_none());
+        assert!(c.lookup(key, &b).is_some());
+    }
+
+    #[test]
+    fn byte_budget_evicts_lru_first() {
+        // Each entry: 8 targets+slots*3... compute real size via admit.
+        let h = 4;
+        let mk = |base: u32| vids(base..base + 4);
+        let one = TileCache::entry_bytes(4, 8, 4, 8 * h);
+        // Budget fits exactly two entries.
+        let mut c = TileCache::new(2 * one, 1);
+        let (a, b, d) = (mk(0), mk(100), mk(200));
+        let (ka, kb, kd) = (TileCache::key_of(&a), TileCache::key_of(&b), TileCache::key_of(&d));
+        c.admit(ka, &a, &scratch_for(&a, 8, h));
+        c.admit(kb, &b, &scratch_for(&b, 8, h));
+        assert_eq!(c.len(), 2);
+        assert!(c.bytes() <= c.budget());
+        // Touch `a` so `b` becomes the LRU victim.
+        assert!(c.lookup(ka, &a).is_some());
+        let out = c.admit(kd, &d, &scratch_for(&d, 8, h));
+        assert_eq!(out.evicted, 1);
+        assert_eq!(c.len(), 2);
+        assert!(c.lookup(ka, &a).is_some(), "recently-touched entry survived");
+        assert!(c.lookup(kb, &b).is_none(), "LRU entry evicted");
+        assert!(c.lookup(kd, &d).is_some());
+        assert!(c.bytes() <= c.budget());
+        assert_eq!(c.stats.evictions, 1);
+    }
+
+    #[test]
+    fn oversized_tiles_are_rejected_and_zero_budget_disables() {
+        let t = vids(0..4);
+        let key = TileCache::key_of(&t);
+        let mut small = TileCache::new(64, 1);
+        let out = small.admit(key, &t, &scratch_for(&t, 1024, 16));
+        assert_eq!(out.inserted_bytes, 0);
+        assert_eq!(small.len(), 0);
+        assert_eq!(small.stats.rejected, 1);
+        let mut off = TileCache::new(0, 1);
+        off.admit(key, &t, &scratch_for(&t, 2, 2));
+        assert_eq!(off.len(), 0);
+        assert_eq!(off.stats.rejected, 1);
+    }
+
+    #[test]
+    fn epoch_move_drops_everything_and_is_idempotent() {
+        let mut c = TileCache::new(1 << 20, 7);
+        let t = vids(0..8);
+        let key = TileCache::key_of(&t);
+        c.admit(key, &t, &scratch_for(&t, 8, 4));
+        assert_eq!(c.len(), 1);
+        c.set_epoch(7); // same epoch: no-op
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.stats.epoch_invalidations, 0);
+        c.set_epoch(8);
+        assert_eq!(c.len(), 0);
+        assert_eq!(c.bytes(), 0);
+        assert_eq!(c.epoch(), 8);
+        assert_eq!(c.stats.epoch_invalidations, 1);
+        assert!(c.lookup(key, &t).is_none(), "stale tile must not survive an epoch move");
+    }
+
+    #[test]
+    fn cached_embed_is_bitwise_and_counts_hits() {
+        let g = Dataset::Acm.load(0.03);
+        for kind in ModelKind::ALL {
+            let plan = InferencePlan::build(&g, ModelConfig::new(kind), 24);
+            let state = FeatureState::project_all(&plan, 2);
+            let f = FusedEngine::over(&plan, &state);
+            let e = ReferenceEngine::new(&g, ModelConfig::new(kind), 24);
+            let order = g.target_vertices();
+            let want = e.embed_semantics_complete(&order);
+            let mut cache = TileCache::new(64 << 20, 1);
+            let mut scratch = TileScratch::default();
+            // Cold: miss + admit. Warm: hit off the cached tile. Both
+            // bitwise equal to the reference.
+            let (cold, cold_reuse, o1) = f.embed_group_tile_cached(&order, &mut cache, &mut scratch);
+            assert!(!o1.hit);
+            assert!(o1.inserted_bytes > 0);
+            assert_eq!(want.max_abs_diff(&cold), 0.0, "{kind:?} cold");
+            let (warm, warm_reuse, o2) = f.embed_group_tile_cached(&order, &mut cache, &mut scratch);
+            assert!(o2.hit, "{kind:?} second identical request must hit");
+            assert!(o2.gather_bytes_saved > 0);
+            assert_eq!(want.max_abs_diff(&warm), 0.0, "{kind:?} warm");
+            // A hit absorbs the whole gather.
+            assert_eq!(warm_reuse.distinct_loads, 0);
+            assert_eq!(warm_reuse.total_loads, cold_reuse.total_loads);
+            assert_eq!(cache.stats.hits, 1);
+            assert_eq!(cache.stats.misses, 1);
+        }
+    }
+
+    #[test]
+    fn cached_embed_under_interleaved_requests_stays_bitwise() {
+        // Interleave two different slices so hits and misses alternate and
+        // the scratch is dirtied between them.
+        let g = Dataset::Dblp.load(0.03);
+        let plan = InferencePlan::build(&g, ModelConfig::new(ModelKind::Rgat), 24);
+        let state = FeatureState::project_all(&plan, 2);
+        let f = FusedEngine::over(&plan, &state);
+        let order = g.target_vertices();
+        let (a, b) = order.split_at(order.len() / 2);
+        let mut cache = TileCache::new(64 << 20, 1);
+        let mut scratch = TileScratch::default();
+        let (want_a, _) = f.embed_group_tile(a);
+        let (want_b, _) = f.embed_group_tile(b);
+        for round in 0..3 {
+            let (got_a, _, _) = f.embed_group_tile_cached(a, &mut cache, &mut scratch);
+            let (got_b, _, _) = f.embed_group_tile_cached(b, &mut cache, &mut scratch);
+            assert_eq!(want_a.max_abs_diff(&got_a), 0.0, "round {round} slice a");
+            assert_eq!(want_b.max_abs_diff(&got_b), 0.0, "round {round} slice b");
+        }
+        assert_eq!(cache.stats.misses, 2);
+        assert_eq!(cache.stats.hits, 4);
+    }
+
+    #[test]
+    fn empty_and_degenerate_groups_bypass_the_cache() {
+        let g = Dataset::Acm.load(0.03);
+        let plan = InferencePlan::build(&g, ModelConfig::new(ModelKind::Rgcn), 24);
+        let state = FeatureState::project_all(&plan, 1);
+        let f = FusedEngine::over(&plan, &state);
+        let mut cache = TileCache::new(1 << 20, 1);
+        let mut scratch = TileScratch::default();
+        let (m, reuse, o) = f.embed_group_tile_cached(&[], &mut cache, &mut scratch);
+        assert_eq!(m.rows, 0);
+        assert_eq!(reuse.groups, 0);
+        assert!(!o.hit);
+        assert_eq!(cache.stats.hits + cache.stats.misses, 0);
+    }
+}

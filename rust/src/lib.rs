@@ -19,6 +19,7 @@ pub mod energy;
 pub mod engine;
 pub mod hetgraph;
 pub mod grouping;
+pub mod loadgen;
 pub mod model;
 pub mod report;
 pub mod runtime;

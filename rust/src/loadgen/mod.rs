@@ -1,0 +1,385 @@
+//! Closed-loop Zipfian load generator for the serving coordinator.
+//!
+//! Serving caches live or die by traffic skew, so the harness models the
+//! one property real request streams reliably have: popularity follows a
+//! power law. A [`Zipf`] sampler with configurable exponent drives two
+//! levels of skew — *which vertices* appear in a request template, and
+//! *which template* each request replays — so hot subgraphs recur exactly
+//! the way the hot-tile cache needs them to (and a cache-off run faces the
+//! identical stream: traces are built once from a seed and shared).
+//!
+//! The load loop is **closed**: `concurrency` client threads each keep
+//! exactly one request in flight, submitting the next only when the
+//! previous response lands. Closed loops measure the server honestly under
+//! backpressure (an open loop against a saturated server just measures
+//! the queue). Each client can verify every response row bitwise against
+//! a [`ReferenceEngine`] oracle, making the harness a correctness check
+//! and a benchmark in one pass.
+//!
+//! [`run_cache_comparison`] is the headline experiment: the same trace
+//! against two servers that differ only in `tile_cache_bytes` (budget vs
+//! 0), reporting hit rate, gather bytes saved, steals, and p50/p95/p99/
+//! p999 latency side by side — see `cargo bench --bench serving` /
+//! `BENCH_serving.json`.
+
+use crate::coordinator::{
+    LatencyStats, PlanCache, Server, ServerConfig, CPU_MAX_IN_DIM,
+};
+use crate::engine::ReferenceEngine;
+use crate::hetgraph::{HetGraph, VId};
+use crate::model::{ModelConfig, ModelKind};
+use crate::util::json::Json;
+use crate::util::rng::SmallRng;
+use anyhow::Result;
+use rustc_hash::FxHashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Zipfian sampler over ranks `0..n` (rank 0 hottest): P(i) ∝ (i+1)^-s.
+/// Precomputes the CDF once; sampling is a binary search per draw.
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    /// `s = 0` is uniform; `s ≈ 1` is classic web-trace skew; larger `s`
+    /// concentrates harder on the head.
+    pub fn new(n: usize, s: f64) -> Zipf {
+        assert!(n > 0, "Zipf over an empty domain");
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0f64;
+        for i in 0..n {
+            acc += 1.0 / ((i + 1) as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in &mut cdf {
+            *c /= total;
+        }
+        // Guard float round-off so a u ~ 0.9999999 draw can't fall off the end.
+        *cdf.last_mut().expect("n > 0") = 1.0;
+        Zipf { cdf }
+    }
+
+    pub fn sample(&self, rng: &mut SmallRng) -> usize {
+        let u = rng.gen_f64();
+        self.cdf.partition_point(|&c| c <= u).min(self.cdf.len() - 1)
+    }
+}
+
+/// Load-run shape. `Default` is a small smoke-scale run; benches and the
+/// CLI scale it up.
+#[derive(Debug, Clone)]
+pub struct LoadConfig {
+    /// Total requests across all clients.
+    pub requests: u64,
+    /// Closed-loop client threads (each keeps one request in flight).
+    pub concurrency: usize,
+    /// Zipf exponent for both vertex popularity and template replay.
+    pub skew: f64,
+    /// Target vertices per request.
+    pub batch: usize,
+    /// Distinct request templates in the pool; traffic replays templates
+    /// Zipfian, so smaller pools / higher skew mean hotter repeats.
+    pub unique: usize,
+    /// Trace seed: same seed → byte-identical trace, so cache-on and
+    /// cache-off runs face exactly the same traffic.
+    pub seed: u64,
+}
+
+impl Default for LoadConfig {
+    fn default() -> LoadConfig {
+        LoadConfig { requests: 10_000, concurrency: 4, skew: 1.1, batch: 16, unique: 512, seed: 42 }
+    }
+}
+
+/// Build the full request trace up front: a pool of `unique` templates of
+/// `batch` Zipfian-popular vertices each, replayed `requests` times with
+/// Zipfian template choice. Deterministic in `cfg.seed`.
+pub fn build_trace(targets: &[VId], cfg: &LoadConfig) -> Vec<Vec<VId>> {
+    assert!(!targets.is_empty(), "trace over an empty target set");
+    let mut rng = SmallRng::seed_from_u64(cfg.seed);
+    let vertex_zipf = Zipf::new(targets.len(), cfg.skew);
+    let unique = cfg.unique.max(1);
+    let batch = cfg.batch.max(1).min(targets.len());
+    let mut pool: Vec<Vec<VId>> = Vec::with_capacity(unique);
+    for _ in 0..unique {
+        // Dedup within a template (a request never names a vertex twice);
+        // bounded attempts so extreme skew can't loop forever.
+        let mut t: Vec<VId> = Vec::with_capacity(batch);
+        let mut attempts = 0;
+        while t.len() < batch && attempts < batch * 64 {
+            attempts += 1;
+            let v = targets[vertex_zipf.sample(&mut rng)];
+            if !t.contains(&v) {
+                t.push(v);
+            }
+        }
+        pool.push(t);
+    }
+    let template_zipf = Zipf::new(pool.len(), cfg.skew);
+    (0..cfg.requests).map(|_| pool[template_zipf.sample(&mut rng)].clone()).collect()
+}
+
+/// What one load run measured. Latencies come from the server's bounded
+/// reservoir (`coordinator::metrics`); cache counters are zero for a
+/// cache-off (or PJRT) server.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub label: String,
+    pub requests: u64,
+    pub targets: u64,
+    pub wall: Duration,
+    pub throughput_rps: f64,
+    pub latency: LatencyStats,
+    pub tile_hits: u64,
+    pub tile_misses: u64,
+    pub tile_bypass: u64,
+    pub tile_evictions: u64,
+    pub tile_cached_bytes: u64,
+    pub gather_bytes_saved: u64,
+    pub steals: u64,
+    /// Response rows that failed bitwise verification (0 when verification
+    /// was off — see [`run_load`]'s `expected`).
+    pub mismatches: u64,
+    /// Whether responses were checked against the reference oracle.
+    pub verified: bool,
+}
+
+impl LoadReport {
+    /// Hits over cache-eligible executions (bypasses excluded).
+    pub fn hit_rate(&self) -> f64 {
+        let lookups = self.tile_hits + self.tile_misses;
+        if lookups == 0 {
+            return 0.0;
+        }
+        self.tile_hits as f64 / lookups as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("label", self.label.as_str().into());
+        j.set("requests", self.requests.into());
+        j.set("targets", self.targets.into());
+        j.set("wall_ms", (self.wall.as_secs_f64() * 1e3).into());
+        j.set("throughput_rps", self.throughput_rps.into());
+        j.set("p50_us", self.latency.p50_us.into());
+        j.set("p95_us", self.latency.p95_us.into());
+        j.set("p99_us", self.latency.p99_us.into());
+        j.set("p999_us", self.latency.p999_us.into());
+        j.set("tile_hit_rate", self.hit_rate().into());
+        j.set("tile_hits", self.tile_hits.into());
+        j.set("tile_misses", self.tile_misses.into());
+        j.set("tile_bypass", self.tile_bypass.into());
+        j.set("tile_evictions", self.tile_evictions.into());
+        j.set("tile_cached_bytes", self.tile_cached_bytes.into());
+        j.set("gather_bytes_saved", self.gather_bytes_saved.into());
+        j.set("steals", self.steals.into());
+        j.set("verified", self.verified.into());
+        j.set("mismatches", self.mismatches.into());
+        j
+    }
+}
+
+/// Drive `trace` through `server` with `cfg.concurrency` closed-loop
+/// clients (request `i` belongs to client `i % concurrency`, so the
+/// partition is deterministic). When `expected` is given, every response
+/// row is compared bitwise against it and mismatches are counted — the
+/// harness then doubles as an end-to-end correctness check.
+pub fn run_load(
+    server: &Server,
+    trace: &[Vec<VId>],
+    cfg: &LoadConfig,
+    expected: Option<&FxHashMap<VId, Vec<f32>>>,
+    label: &str,
+) -> LoadReport {
+    let conc = cfg.concurrency.max(1);
+    let mismatches = AtomicU64::new(0);
+    let wall0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..conc {
+            let mismatches = &mismatches;
+            s.spawn(move || {
+                for req in trace.iter().skip(c).step_by(conc) {
+                    match server.submit(req.clone()) {
+                        Ok(resp) => {
+                            let Some(exp) = expected else { continue };
+                            for (v, row) in &resp.embeddings {
+                                let ok = exp.get(v).is_some_and(|want| want == row);
+                                if !ok {
+                                    mismatches.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                        }
+                        // A submit error (server shut down mid-run) counts
+                        // as a whole-request mismatch: the harness must
+                        // never report a clean run it didn't complete.
+                        Err(_) => {
+                            mismatches.fetch_add(req.len() as u64, Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let wall = wall0.elapsed();
+    let m = &server.metrics;
+    LoadReport {
+        label: label.to_string(),
+        requests: m.requests.load(Ordering::Relaxed),
+        targets: m.targets.load(Ordering::Relaxed),
+        wall,
+        throughput_rps: trace.len() as f64 / wall.as_secs_f64().max(1e-9),
+        latency: m.latency_summary(),
+        tile_hits: m.tile_hits.load(Ordering::Relaxed),
+        tile_misses: m.tile_misses.load(Ordering::Relaxed),
+        tile_bypass: m.tile_bypass.load(Ordering::Relaxed),
+        tile_evictions: m.tile_evictions.load(Ordering::Relaxed),
+        tile_cached_bytes: m.tile_cached_bytes.load(Ordering::Relaxed),
+        gather_bytes_saved: m.tile_gather_bytes_saved.load(Ordering::Relaxed),
+        steals: server.steal_count().unwrap_or(0),
+        mismatches: mismatches.load(Ordering::Relaxed),
+        verified: expected.is_some(),
+    }
+}
+
+/// The headline experiment: identical Zipfian traffic against a cache-on
+/// and a cache-off CPU server.
+#[derive(Debug, Clone)]
+pub struct CacheComparison {
+    pub on: LoadReport,
+    pub off: LoadReport,
+}
+
+impl CacheComparison {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("cache_on", self.on.to_json());
+        j.set("cache_off", self.off.to_json());
+        j
+    }
+}
+
+/// Run the cache-on / cache-off comparison on `g` with the CPU executor:
+/// one shared trace (same seed), one `PlanCache` (so both servers reuse
+/// one adjacency transpose and plan), optional bitwise verification of
+/// every response row against a serial [`ReferenceEngine`].
+pub fn run_cache_comparison(
+    g: &Arc<HetGraph>,
+    kind: ModelKind,
+    channels: usize,
+    cache_bytes: usize,
+    cfg: &LoadConfig,
+    verify: bool,
+) -> Result<CacheComparison> {
+    let order = g.target_vertices();
+    let trace = build_trace(&order, cfg);
+    let expected: Option<FxHashMap<VId, Vec<f32>>> = verify.then(|| {
+        let oracle = ReferenceEngine::new(g, ModelConfig::new(kind), CPU_MAX_IN_DIM);
+        let m = oracle.embed_semantics_complete(&order);
+        order.iter().enumerate().map(|(i, &v)| (v, m.row(i).to_vec())).collect()
+    });
+    let plans = Arc::new(PlanCache::new());
+    let mut run = |label: &str, bytes: usize| -> Result<LoadReport> {
+        let server = Server::start(
+            Arc::clone(g),
+            ServerConfig {
+                channels,
+                tile_cache_bytes: bytes,
+                plans: Arc::clone(&plans),
+                ..ServerConfig::cpu(kind)
+            },
+        )?;
+        let report = run_load(&server, &trace, cfg, expected.as_ref(), label);
+        server.shutdown();
+        Ok(report)
+    };
+    let on = run("cache-on", cache_bytes)?;
+    let off = run("cache-off", 0)?;
+    Ok(CacheComparison { on, off })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::Dataset;
+
+    #[test]
+    fn zipf_is_skewed_and_in_range() {
+        let z = Zipf::new(100, 1.2);
+        let mut rng = SmallRng::seed_from_u64(7);
+        let mut counts = vec![0u64; 100];
+        for _ in 0..20_000 {
+            let i = z.sample(&mut rng);
+            assert!(i < 100);
+            counts[i] += 1;
+        }
+        assert!(counts[0] > counts[50] * 5, "rank 0 must dominate rank 50");
+        assert!(counts[0] > counts[10], "head heavier than rank 10");
+    }
+
+    #[test]
+    fn zipf_zero_exponent_is_roughly_uniform() {
+        let z = Zipf::new(10, 0.0);
+        let mut rng = SmallRng::seed_from_u64(3);
+        let mut counts = vec![0u64; 10];
+        for _ in 0..50_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        for &c in &counts {
+            assert!(c > 3_000 && c < 7_000, "uniform draw out of band: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn trace_is_deterministic_in_the_seed_and_repeats_templates() {
+        let targets: Vec<VId> = (0..200).map(VId).collect();
+        let cfg = LoadConfig { requests: 300, unique: 16, batch: 8, ..LoadConfig::default() };
+        let a = build_trace(&targets, &cfg);
+        let b = build_trace(&targets, &cfg);
+        assert_eq!(a, b, "same seed must give an identical trace");
+        let c = build_trace(&targets, &LoadConfig { seed: 43, ..cfg.clone() });
+        assert_ne!(a, c, "different seed must give different traffic");
+        assert_eq!(a.len(), 300);
+        // With 16 templates over 300 requests, repeats are guaranteed —
+        // that recurrence is what the tile cache feeds on.
+        let distinct: std::collections::BTreeSet<&Vec<VId>> = a.iter().collect();
+        assert!(distinct.len() <= 16);
+        for req in &a {
+            assert!(!req.is_empty() && req.len() <= 8);
+            let dedup: std::collections::BTreeSet<&VId> = req.iter().collect();
+            assert_eq!(dedup.len(), req.len(), "no vertex twice in one request");
+        }
+    }
+
+    #[test]
+    fn comparison_is_bitwise_clean_and_the_cache_hits() {
+        let g = Arc::new(Dataset::Acm.load(0.03));
+        let cfg = LoadConfig {
+            requests: 120,
+            concurrency: 2,
+            skew: 1.2,
+            batch: 8,
+            unique: 12,
+            ..LoadConfig::default()
+        };
+        let cmp =
+            run_cache_comparison(&g, ModelKind::Rgcn, 2, 32 << 20, &cfg, true).expect("comparison");
+        assert_eq!(cmp.on.mismatches, 0, "cache-on must be bitwise clean");
+        assert_eq!(cmp.off.mismatches, 0, "cache-off must be bitwise clean");
+        assert!(cmp.on.verified && cmp.off.verified);
+        assert_eq!(cmp.on.requests, 120);
+        assert_eq!(cmp.off.requests, 120);
+        assert!(
+            cmp.on.tile_hits > 0,
+            "12 hot templates over 120 requests must produce hits (misses={})",
+            cmp.on.tile_misses
+        );
+        assert!(cmp.on.gather_bytes_saved > 0);
+        assert_eq!(cmp.off.tile_hits + cmp.off.tile_misses, 0, "cache-off must not touch a cache");
+        let j = cmp.to_json();
+        assert!(j.get("cache_on").is_some() && j.get("cache_off").is_some());
+    }
+}

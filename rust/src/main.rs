@@ -13,9 +13,16 @@
 //!                                          LPT schedule vs streaming
 //!                                          work-stealing dispatch
 //! compare <dataset> [--model M]            TLV vs A100 vs HiHGNN
-//! bench-table <fig2|fig7|fig8|fig9|table3|table4|reuse>  paper table
+//! bench-table <fig2|fig7|fig8|fig9|table3|table4|reuse|serving>  paper table
 //! serve   [--model M] [--scale S] [--cpu]  demo serving loop (PJRT needs
-//!                                          artifacts; --cpu needs none)
+//!         [--cache-mb N] [--no-cache]      artifacts; --cpu needs none)
+//! loadgen <dataset> [--model M] [--scale S] closed-loop Zipfian load vs
+//!         [--requests N] [--concurrency C]  `serve --cpu`, cache-on vs
+//!         [--skew S] [--batch B]            cache-off on the identical
+//!         [--unique U] [--seed X]           trace; prints the serving
+//!         [--channels N] [--cache-mb N]     table, optional --json OUT,
+//!         [--verify] [--min-hit-rate F]     exits 1 on any bitwise
+//!         [--json PATH]                     mismatch or hit-rate miss
 //! ```
 
 use std::process::exit;
@@ -33,10 +40,13 @@ use tlv_hgnn::util::table::{f2, human_bytes, human_count, pct};
 
 fn usage() -> ! {
     eprintln!(
-        "usage: tlv-hgnn <stats|sim|ablate|group|engine|compare|bench-table|serve> [args]\n\
+        "usage: tlv-hgnn <stats|sim|ablate|group|engine|compare|bench-table|serve|loadgen> [args]\n\
          datasets: acm imdb dblp am fb | models: rgcn rgat nars\n\
          modes: -B -S -P -O | flags: --scale S --model M --mode X --threads N --cpu\n\
-         \x20       --dispatch static|streaming|both (engine subcommand)"
+         \x20       --dispatch static|streaming|both (engine subcommand)\n\
+         \x20       --cache-mb N --no-cache (serve), loadgen: --requests N --concurrency C\n\
+         \x20       --skew S --batch B --unique U --seed X --channels N --verify\n\
+         \x20       --min-hit-rate F --json PATH"
     );
     exit(2)
 }
@@ -337,6 +347,31 @@ fn main() {
                 Some("table3") => println!("{}", report::table3_expansion().render()),
                 Some("table4") => println!("{}", report::table4_area_power().render()),
                 Some("reuse") => println!("{}", report::reuse_table().render()),
+                Some("serving") => {
+                    // Small verified demo of the hot-tile cache comparison;
+                    // the `loadgen` subcommand exposes the full knob set.
+                    let g = std::sync::Arc::new(Dataset::Acm.load(0.05));
+                    let cfg = tlv_hgnn::loadgen::LoadConfig {
+                        requests: 500,
+                        unique: 32,
+                        skew: 1.2,
+                        ..Default::default()
+                    };
+                    match tlv_hgnn::loadgen::run_cache_comparison(
+                        &g,
+                        ModelKind::Rgcn,
+                        4,
+                        32 << 20,
+                        &cfg,
+                        true,
+                    ) {
+                        Ok(cmp) => println!("{}", report::serving_table(&cmp).render()),
+                        Err(e) => {
+                            eprintln!("serving comparison failed: {e:#}");
+                            exit(1);
+                        }
+                    }
+                }
                 _ => usage(),
             };
         }
@@ -348,11 +383,19 @@ fn main() {
             let scale = flag(rest, "--scale").and_then(|s| s.parse().ok()).unwrap_or(0.1);
             let cpu = rest.iter().any(|a| a == "--cpu");
             let g = std::sync::Arc::new(Dataset::Acm.load(scale));
-            let cfg = if cpu {
+            let mut cfg = if cpu {
                 tlv_hgnn::coordinator::ServerConfig::cpu(kind)
             } else {
                 tlv_hgnn::coordinator::ServerConfig::new(kind)
             };
+            // Hot-tile cache budget (CPU executor): --cache-mb N sizes the
+            // per-worker LRU, --no-cache disables it.
+            if let Some(mb) = flag(rest, "--cache-mb").and_then(|s| s.parse::<usize>().ok()) {
+                cfg.tile_cache_bytes = mb << 20;
+            }
+            if rest.iter().any(|a| a == "--no-cache") {
+                cfg.tile_cache_bytes = 0;
+            }
             let server = match tlv_hgnn::coordinator::Server::start(
                 std::sync::Arc::clone(&g),
                 cfg,
@@ -370,6 +413,93 @@ fn main() {
             }
             println!("{}", server.metrics.summary());
             server.shutdown();
+        }
+        "loadgen" => {
+            // Closed-loop Zipfian load against `serve --cpu`, cache-on vs
+            // cache-off on the identical trace (loadgen module docs).
+            let d = rest
+                .first()
+                .filter(|s| !s.starts_with("--"))
+                .map(|s| parse_dataset(s))
+                .unwrap_or(Dataset::Acm);
+            let kind = flag(rest, "--model").map(|s| parse_model(&s)).unwrap_or(ModelKind::Rgcn);
+            let scale = flag(rest, "--scale").and_then(|s| s.parse().ok()).unwrap_or(0.05);
+            let channels = flag(rest, "--channels").and_then(|s| s.parse().ok()).unwrap_or(4);
+            let cache_mb: usize =
+                flag(rest, "--cache-mb").and_then(|s| s.parse().ok()).unwrap_or(32);
+            let verify = rest.iter().any(|a| a == "--verify");
+            let min_hit_rate: Option<f64> =
+                flag(rest, "--min-hit-rate").and_then(|s| s.parse().ok());
+            let defaults = tlv_hgnn::loadgen::LoadConfig::default();
+            let cfg = tlv_hgnn::loadgen::LoadConfig {
+                requests: flag(rest, "--requests")
+                    .and_then(|s| s.parse().ok())
+                    .unwrap_or(defaults.requests),
+                concurrency: flag(rest, "--concurrency")
+                    .and_then(|s| s.parse().ok())
+                    .unwrap_or(defaults.concurrency),
+                skew: flag(rest, "--skew").and_then(|s| s.parse().ok()).unwrap_or(defaults.skew),
+                batch: flag(rest, "--batch").and_then(|s| s.parse().ok()).unwrap_or(defaults.batch),
+                unique: flag(rest, "--unique")
+                    .and_then(|s| s.parse().ok())
+                    .unwrap_or(defaults.unique),
+                seed: flag(rest, "--seed").and_then(|s| s.parse().ok()).unwrap_or(defaults.seed),
+            };
+            let g = std::sync::Arc::new(d.load(scale));
+            println!(
+                "{} {} @ scale {scale}: {} reqs x {} targets, skew {}, {} templates, \
+                 {} clients, {channels} channels, cache {cache_mb} MiB{}",
+                d.name(),
+                kind.name(),
+                cfg.requests,
+                cfg.batch,
+                cfg.skew,
+                cfg.unique,
+                cfg.concurrency,
+                if verify { ", verified" } else { "" },
+            );
+            let cmp = match tlv_hgnn::loadgen::run_cache_comparison(
+                &g,
+                kind,
+                channels,
+                cache_mb << 20,
+                &cfg,
+                verify,
+            ) {
+                Ok(cmp) => cmp,
+                Err(e) => {
+                    eprintln!("load run failed: {e:#}");
+                    exit(1);
+                }
+            };
+            println!("{}", report::serving_table(&cmp).render());
+            if let Some(path) = flag(rest, "--json") {
+                if let Err(e) = std::fs::write(&path, cmp.to_json().render() + "\n") {
+                    eprintln!("write {path}: {e}");
+                    exit(1);
+                }
+                println!("wrote {path}");
+            }
+            let mut failed = false;
+            if cmp.on.mismatches + cmp.off.mismatches > 0 {
+                eprintln!(
+                    "BITWISE FAIL: {} mismatched rows (on) / {} (off)",
+                    cmp.on.mismatches, cmp.off.mismatches
+                );
+                failed = true;
+            }
+            if let Some(min) = min_hit_rate {
+                if cmp.on.hit_rate() < min {
+                    eprintln!(
+                        "HIT-RATE FAIL: {:.3} below required {min:.3} on a skewed trace",
+                        cmp.on.hit_rate()
+                    );
+                    failed = true;
+                }
+            }
+            if failed {
+                exit(1);
+            }
         }
         _ => usage(),
     }

@@ -297,6 +297,39 @@ pub fn reuse_table() -> Table {
     t
 }
 
+/// Serving-side reuse: the hot-tile cache comparison (`loadgen`) as a
+/// two-row table — cache-on vs cache-off under the identical Zipfian
+/// trace. The interesting columns are hit %, gather bytes saved, and the
+/// latency tail.
+pub fn serving_table(cmp: &crate::loadgen::CacheComparison) -> Table {
+    let mut t = Table::new(&[
+        "config", "reqs", "rps", "hit%", "saved", "steals", "p50us", "p95us", "p99us", "p999us",
+        "ok",
+    ]);
+    for r in [&cmp.on, &cmp.off] {
+        t.row(&[
+            r.label.clone(),
+            human_count(r.requests),
+            f2(r.throughput_rps),
+            pct(r.hit_rate()),
+            crate::util::table::human_bytes(r.gather_bytes_saved),
+            r.steals.to_string(),
+            r.latency.p50_us.to_string(),
+            r.latency.p95_us.to_string(),
+            r.latency.p99_us.to_string(),
+            r.latency.p999_us.to_string(),
+            if !r.verified {
+                "unchecked".into()
+            } else if r.mismatches == 0 {
+                "bitwise".into()
+            } else {
+                format!("{} MISMATCHES", r.mismatches)
+            },
+        ]);
+    }
+    t
+}
+
 /// §III-B companion: expansion measured from the trace walker itself
 /// (framework-independent lower bound).
 pub fn paradigm_expansion(d: Dataset, kind: ModelKind) -> (f64, f64) {

@@ -1,0 +1,204 @@
+//! Integration: the cross-request hot-tile cache — CPU serving with the
+//! cache on vs off vs the serial reference must be bitwise-identical
+//! across channel counts and steal interleavings; an epoch bump (plan
+//! rebuild) must never serve a stale tile; and the per-worker LRU must be
+//! observable through the server's metrics.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use tlv_hgnn::coordinator::{PlanCache, Server, ServerConfig};
+use tlv_hgnn::engine::{
+    FeatureState, FusedEngine, ReferenceEngine, TileCache, TileScratch,
+};
+use tlv_hgnn::hetgraph::{HetGraph, HetGraphBuilder, VId};
+use tlv_hgnn::model::{ModelConfig, ModelKind};
+use tlv_hgnn::util::prop::{check, gen};
+use tlv_hgnn::util::SmallRng;
+
+fn graph(seed: u64) -> HetGraph {
+    let mut b = HetGraphBuilder::new("tile-cache-e2e");
+    let p = b.add_vertex_type("P", 100, 64);
+    let a = b.add_vertex_type("A", 150, 64);
+    let s0 = b.add_semantic("AP", a, p);
+    let s1 = b.add_semantic("PP", p, p);
+    b.set_target_type(p);
+    let mut rng = SmallRng::seed_from_u64(seed);
+    for t in 0..100u32 {
+        for _ in 0..rng.gen_range(10) {
+            b.add_edge(VId(100 + rng.gen_range(150) as u32), VId(t), s0);
+        }
+        for _ in 0..rng.gen_range(4) {
+            let s = rng.gen_range(100) as u32;
+            if s != t {
+                b.add_edge(VId(s), VId(t), s1);
+            }
+        }
+    }
+    b.build().unwrap()
+}
+
+fn cpu_config(kind: ModelKind, channels: usize, cache_bytes: usize) -> ServerConfig {
+    ServerConfig { channels, tile_cache_bytes: cache_bytes, ..ServerConfig::cpu(kind) }
+}
+
+#[test]
+fn cache_on_off_reference_bitwise_across_channels() {
+    // The tentpole invariant: for every model and channel count, serving
+    // with the cache enabled is bitwise-identical to serving with it
+    // disabled AND to the serial reference oracle — on cold misses and on
+    // warm hits alike (requests repeat so the warm path actually runs).
+    let g = Arc::new(graph(11));
+    let targets: Vec<VId> = (0..100).map(VId).collect();
+    for kind in ModelKind::ALL {
+        let reference = ReferenceEngine::new(&g, ModelConfig::new(kind), 64);
+        let want = reference.embed_semantics_complete(&targets);
+        for channels in [1usize, 2, 8] {
+            let on = Server::start(Arc::clone(&g), cpu_config(kind, channels, 32 << 20)).unwrap();
+            let off = Server::start(Arc::clone(&g), cpu_config(kind, channels, 0)).unwrap();
+            for round in 0..3 {
+                for server in [&on, &off] {
+                    let resp = server.submit(targets.clone()).unwrap();
+                    assert_eq!(resp.embeddings.len(), targets.len());
+                    for (i, &t) in targets.iter().enumerate() {
+                        let got = resp.embedding_of(t).expect("missing row");
+                        assert_eq!(
+                            got,
+                            want.row(i),
+                            "{kind:?} ch={channels} round={round} target {t} not bitwise"
+                        );
+                    }
+                }
+            }
+            assert_eq!(
+                off.metrics.tile_hits.load(Ordering::Relaxed)
+                    + off.metrics.tile_misses.load(Ordering::Relaxed),
+                0,
+                "cache-off server must never touch a tile cache"
+            );
+            if channels == 1 {
+                // One channel → no stealing → every repeat after the cold
+                // round must hit (deterministically).
+                assert!(
+                    on.metrics.tile_hits.load(Ordering::Relaxed) >= 2,
+                    "single-channel repeats must hit the tile cache"
+                );
+                assert!(on.metrics.tile_gather_bytes_saved.load(Ordering::Relaxed) > 0);
+            }
+            on.shutdown();
+            off.shutdown();
+        }
+    }
+}
+
+#[test]
+fn steal_interleavings_stay_bitwise_with_cache_on() {
+    // Concurrent submitters force work stealing; stolen items bypass the
+    // thief's cache (slow path) while affinity-placed repeats hit. Any
+    // interleaving must produce reference bits.
+    let g = Arc::new(graph(19));
+    let server =
+        Arc::new(Server::start(Arc::clone(&g), cpu_config(ModelKind::Rgat, 4, 32 << 20)).unwrap());
+    let reference = ReferenceEngine::new(&g, ModelConfig::new(ModelKind::Rgat), 64);
+    let targets: Vec<VId> = (0..100).map(VId).collect();
+    let want = reference.embed_semantics_complete(&targets);
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            let server = Arc::clone(&server);
+            let targets = targets.clone();
+            let want = &want;
+            s.spawn(move || {
+                for _ in 0..3 {
+                    let resp = server.submit(targets.clone()).unwrap();
+                    for (i, &t) in targets.iter().enumerate() {
+                        let got = resp.embedding_of(t).expect("missing row");
+                        assert_eq!(got, want.row(i), "target {t} not bitwise under contention");
+                    }
+                }
+            });
+        }
+    });
+    let m = &server.metrics;
+    let executions = m.tile_hits.load(Ordering::Relaxed)
+        + m.tile_misses.load(Ordering::Relaxed)
+        + m.tile_bypass.load(Ordering::Relaxed);
+    // Every routed part of every request went through exactly one of the
+    // three paths (hit / miss / steal-bypass).
+    assert_eq!(executions, m.blocks_executed.load(Ordering::Relaxed));
+    match Arc::try_unwrap(server) {
+        Ok(s) => s.shutdown(),
+        Err(_) => panic!("server still shared"),
+    }
+}
+
+#[test]
+fn epoch_bump_never_serves_a_stale_tile() {
+    // Property, over random graphs: fill a cache under (plan, state) A;
+    // rebuild the plan (PlanCache::invalidate → strictly larger epoch) and
+    // move to a different feature state B; after TileCache::set_epoch the
+    // same request must MISS and recompute B's bits exactly. The same
+    // request without the bump hits, so the test is non-vacuous.
+    check("epoch-bump-never-stale", 8, |rng| {
+        let g = Arc::new(gen::hetgraph(rng));
+        let order = g.target_vertices();
+        let targets: Vec<VId> = order.iter().copied().take(12).collect();
+        assert!(!targets.is_empty());
+        let plans = PlanCache::new();
+        let m = ModelConfig::new(ModelKind::Rgcn);
+        let (plan, epoch) = plans.get_or_build_epoch(&g, m.clone(), 24);
+        let state = FeatureState::project_all(&plan, 1);
+        let engine = FusedEngine::over(&plan, &state);
+        let mut cache = TileCache::new(16 << 20, epoch);
+        let mut scratch = TileScratch::default();
+
+        let (cold, _, o_cold) = engine.embed_group_tile_cached(&targets, &mut cache, &mut scratch);
+        assert!(!o_cold.hit);
+        let (warm, _, o_warm) = engine.embed_group_tile_cached(&targets, &mut cache, &mut scratch);
+        assert!(o_warm.hit, "same epoch, same request: must hit");
+        assert_eq!(cold.max_abs_diff(&warm), 0.0);
+
+        // Layer-2 feature state: same plan shape, different projected rows
+        // — exactly what a stale tile would silently corrupt.
+        let full = engine.embed_semantics_complete(&order, 1);
+        let mut state2 = state.clone();
+        state2.reseed(&order, &full);
+
+        plans.invalidate(&g);
+        let (plan2, epoch2) = plans.get_or_build_epoch(&g, m.clone(), 24);
+        assert!(epoch2 > epoch, "rebuild must advance the epoch");
+        cache.set_epoch(epoch2);
+
+        let engine2 = FusedEngine::over(&plan2, &state2);
+        let hits_before = cache.stats.hits;
+        let (got, _, o2) = engine2.embed_group_tile_cached(&targets, &mut cache, &mut scratch);
+        assert!(!o2.hit, "post-bump request must miss");
+        assert_eq!(cache.stats.hits, hits_before, "no stale tile may be served");
+        let (want, _) = engine2.embed_group_tile(&targets);
+        assert_eq!(want.max_abs_diff(&got), 0.0, "post-bump bits must be fresh");
+    });
+}
+
+#[test]
+fn shared_plan_cache_tags_every_server_with_its_epoch() {
+    // Two servers resolving the same (graph, model, dims) through one
+    // PlanCache share one plan and one epoch; their repeated traffic hits
+    // independently (per-worker caches are private).
+    let g = Arc::new(graph(23));
+    let plans = Arc::new(PlanCache::new());
+    let mk = || ServerConfig {
+        channels: 1,
+        plans: Arc::clone(&plans),
+        ..ServerConfig::cpu(ModelKind::Rgcn)
+    };
+    let a = Server::start(Arc::clone(&g), mk()).unwrap();
+    let b = Server::start(Arc::clone(&g), mk()).unwrap();
+    assert_eq!(plans.len(), 1, "both servers share one cached plan");
+    let targets: Vec<VId> = (0..50).map(VId).collect();
+    for server in [&a, &b] {
+        for _ in 0..2 {
+            server.submit(targets.clone()).unwrap();
+        }
+        assert!(server.metrics.tile_hits.load(Ordering::Relaxed) >= 1);
+    }
+    a.shutdown();
+    b.shutdown();
+}
