@@ -1,16 +1,21 @@
 //! Serving-path benchmark: the hot-tile cache under closed-loop Zipfian
 //! load — cache-on vs cache-off CPU servers facing the identical trace,
-//! with every response row verified bitwise against the serial reference.
+//! with every response row verified bitwise against the serial reference —
+//! plus a chaos section: the same workload shape under seeded fault
+//! injection (worker panics, delays, executor errors), reporting
+//! availability and error-class counts.
 //!
 //! Writes `BENCH_serving.json` at the repository root so successive PRs
-//! have a serving-latency trajectory to compare against:
+//! have a serving-latency (and availability) trajectory to compare
+//! against:
 //!
 //!     cargo bench --bench serving
 
 use std::path::Path;
 use std::sync::Arc;
+use tlv_hgnn::coordinator::FaultPlan;
 use tlv_hgnn::datasets::Dataset;
-use tlv_hgnn::loadgen::{run_cache_comparison, LoadConfig};
+use tlv_hgnn::loadgen::{run_cache_comparison, run_fault_injection, LoadConfig};
 use tlv_hgnn::model::ModelKind;
 use tlv_hgnn::report::serving_table;
 use tlv_hgnn::util::json::Json;
@@ -28,6 +33,7 @@ fn main() {
         batch: 16,
         unique: 512,
         seed: 42,
+        deadline_ms: None,
     };
     let g = Arc::new(dataset.load(scale));
     println!(
@@ -48,9 +54,32 @@ fn main() {
     println!("{}", serving_table(&cmp).render());
     let speedup = cmp.off.latency.p50_us as f64 / cmp.on.latency.p50_us.max(1) as f64;
     println!(
-        "acceptance: bitwise {} | hit rate {:.1}% | p50 cache-on speedup {speedup:.2}x",
+        "acceptance: bitwise {} | hit rate {:.1}% | p50 cache-on speedup {speedup:.2}x | \
+         errors {}",
         if cmp.on.mismatches + cmp.off.mismatches == 0 { "PASS" } else { "FAIL" },
         cmp.on.hit_rate() * 100.0,
+        cmp.on.errors() + cmp.off.errors(),
+    );
+
+    // Chaos section: same trace shape, smaller run, seeded injection. The
+    // interesting numbers are availability and that surviving rows stay
+    // bitwise-clean while workers crash and respawn underneath.
+    let chaos_cfg = LoadConfig { requests: 5_000, ..cfg.clone() };
+    let faults =
+        FaultPlan::parse("panic:0.01,delay:0.05,error:0.01,delay_ms:1").expect("fault spec");
+    let chaos =
+        run_fault_injection(&g, kind, channels, cache_mb << 20, &chaos_cfg, faults, 1024, true)
+            .expect("chaos run");
+    println!(
+        "chaos: {} reqs, availability {:.2}% ({} ok / {} errors), {} panics, {} restarts, \
+         bitwise {}",
+        chaos.requests,
+        chaos.availability() * 100.0,
+        chaos.ok,
+        chaos.errors(),
+        chaos.worker_panics,
+        chaos.worker_restarts,
+        if chaos.mismatches == 0 { "PASS" } else { "FAIL" },
     );
 
     let mut workload = Json::obj();
@@ -79,6 +108,17 @@ fn main() {
         "latency",
         "cache-on p50/p95 must not lose to cache-off at equal traffic; wins grow with skew".into(),
     );
+    targets.set(
+        "chaos",
+        "under seeded panic/delay/error injection every submit resolves by deadline, \
+         surviving rows stay bitwise, availability stays high"
+            .into(),
+    );
+
+    let mut chaos_workload = Json::obj();
+    chaos_workload.set("requests", chaos_cfg.requests.into());
+    chaos_workload.set("faults", "panic:0.01,delay:0.05,error:0.01,delay_ms:1".into());
+    chaos_workload.set("restart_budget", 1024u64.into());
 
     let mut out = Json::obj();
     out.set("generated_by", "cargo bench --bench serving".into());
@@ -86,6 +126,8 @@ fn main() {
     out.set("targets", targets);
     out.set("cache_on_p50_speedup", speedup.into());
     out.set("comparison", cmp.to_json());
+    out.set("chaos_workload", chaos_workload);
+    out.set("chaos", chaos.to_json());
 
     let path = Path::new(env!("CARGO_MANIFEST_DIR"))
         .parent()

@@ -1,0 +1,212 @@
+//! Deterministic fault injection for the serving layer.
+//!
+//! A [`FaultPlan`] is a seeded recipe for chaos: each (request, routed
+//! part) pair is hashed to a uniform draw, and the draw's position inside
+//! the configured rate bands decides the injected failure — a worker
+//! panic, an artificial execution delay, or a forced block-executor
+//! error. The decision is a pure function of `(seed, request id, part)`,
+//! **not** of which worker executes the item or when, so the *set* of
+//! faulted requests is identical across runs, thread counts, and steal
+//! interleavings — which is what lets the chaos harness
+//! (`loadgen::run_fault_injection`, `rust/tests/chaos.rs`) assert exact
+//! invariants (every submit resolves; surviving rows bitwise-equal to the
+//! oracle) instead of flaky statistical ones.
+//!
+//! The plan is threaded through [`ServerConfig::faults`] and consulted by
+//! the CPU channel workers only — it is a test/CLI hook (`loadgen
+//! --faults`, see README), never on by default. The PJRT path needs no
+//! injector for its error class: a real `embed_all` failure already
+//! exercises the same error-reply machinery.
+//!
+//! [`ServerConfig::faults`]: super::server::ServerConfig
+
+use crate::util::rng::SmallRng;
+use std::time::Duration;
+
+/// Panic payload used by injected worker panics, so panic hooks (and the
+/// chaos harness's log silencer) can tell an injected crash from a real
+/// bug.
+pub const INJECTED_PANIC_MSG: &str = "injected worker panic";
+
+/// What to inject for one work item.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Execute normally.
+    None,
+    /// Panic inside the worker's execution region (the supervisor then
+    /// respawns the worker; the request gets a `WorkerLost` reply).
+    Panic,
+    /// Sleep before executing — drives deadline/timeout paths and forces
+    /// steal-queue pressure.
+    Delay(Duration),
+    /// Fail the item as a block-executor error (error reply, worker
+    /// survives).
+    ExecError,
+}
+
+/// Seeded fault-injection recipe. Rates are per routed work item and
+/// mutually exclusive bands of one uniform draw: `panic_rate` first, then
+/// `delay_rate`, then `error_rate`; their sum must stay ≤ 1.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub panic_rate: f64,
+    pub delay_rate: f64,
+    pub error_rate: f64,
+    /// Sleep applied by [`FaultAction::Delay`].
+    pub delay: Duration,
+}
+
+impl Default for FaultPlan {
+    /// Inactive plan (all rates zero) with a 2 ms delay unit — a server
+    /// configured with it behaves identically to one with no plan at all.
+    fn default() -> FaultPlan {
+        FaultPlan {
+            seed: 0xFA17,
+            panic_rate: 0.0,
+            delay_rate: 0.0,
+            error_rate: 0.0,
+            delay: Duration::from_millis(2),
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Parse a CLI spec: comma-separated `kind:value` pairs, e.g.
+    /// `panic:0.01,delay:0.05,error:0.02,delay_ms:2,seed:7`. Unknown
+    /// kinds, out-of-range rates, and band sums past 1.0 are rejected.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (key, val) = part
+                .split_once(':')
+                .ok_or_else(|| format!("fault spec `{part}` is not `kind:value`"))?;
+            let num: f64 = val
+                .trim()
+                .parse()
+                .map_err(|_| format!("fault value `{}` is not a number", val.trim()))?;
+            match key.trim() {
+                "panic" => plan.panic_rate = num,
+                "delay" => plan.delay_rate = num,
+                "error" => plan.error_rate = num,
+                "delay_ms" => plan.delay = Duration::from_micros((num * 1000.0) as u64),
+                "seed" => plan.seed = num as u64,
+                other => {
+                    return Err(format!(
+                        "unknown fault kind `{other}` (expected panic|delay|error|delay_ms|seed)"
+                    ))
+                }
+            }
+        }
+        for r in [plan.panic_rate, plan.delay_rate, plan.error_rate] {
+            if !(0.0..=1.0).contains(&r) {
+                return Err(format!("fault rate {r} outside [0, 1]"));
+            }
+        }
+        if plan.panic_rate + plan.delay_rate + plan.error_rate > 1.0 {
+            return Err("fault rates sum past 1.0".to_string());
+        }
+        Ok(plan)
+    }
+
+    /// Whether any injection can ever fire.
+    pub fn is_active(&self) -> bool {
+        self.panic_rate > 0.0 || self.delay_rate > 0.0 || self.error_rate > 0.0
+    }
+
+    /// The deterministic per-item decision. `part` is the routed part's
+    /// channel index, fixed by the router — so the answer does not depend
+    /// on which worker ends up executing the item (stealing included).
+    pub fn decide(&self, req: u64, part: u32) -> FaultAction {
+        if !self.is_active() {
+            return FaultAction::None;
+        }
+        let key = self
+            .seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(req.wrapping_mul(0xD134_2543_DE82_EF95))
+            .wrapping_add(u64::from(part).wrapping_mul(0xFF51_AFD7_ED55_8CCD));
+        let mut rng = SmallRng::seed_from_u64(key);
+        let u = rng.gen_f64();
+        if u < self.panic_rate {
+            FaultAction::Panic
+        } else if u < self.panic_rate + self.delay_rate {
+            FaultAction::Delay(self.delay)
+        } else if u < self.panic_rate + self.delay_rate + self.error_rate {
+            FaultAction::ExecError
+        } else {
+            FaultAction::None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_spec() {
+        let p = FaultPlan::parse("panic:0.01, delay:0.05,error:0.02,delay_ms:3,seed:7").unwrap();
+        assert_eq!(p.panic_rate, 0.01);
+        assert_eq!(p.delay_rate, 0.05);
+        assert_eq!(p.error_rate, 0.02);
+        assert_eq!(p.delay, Duration::from_millis(3));
+        assert_eq!(p.seed, 7);
+        assert!(p.is_active());
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        assert!(FaultPlan::parse("panic").is_err());
+        assert!(FaultPlan::parse("panic:x").is_err());
+        assert!(FaultPlan::parse("explode:0.5").is_err());
+        assert!(FaultPlan::parse("panic:1.5").is_err());
+        assert!(FaultPlan::parse("panic:0.6,delay:0.6").is_err());
+        assert!(!FaultPlan::parse("").unwrap().is_active());
+    }
+
+    #[test]
+    fn decisions_are_deterministic_and_ignore_the_executor() {
+        let p = FaultPlan { panic_rate: 0.2, delay_rate: 0.3, ..FaultPlan::default() };
+        for req in 0..200u64 {
+            for part in 0..4u32 {
+                assert_eq!(p.decide(req, part), p.decide(req, part));
+            }
+        }
+        let q = FaultPlan { seed: 99, ..p };
+        let differs = (0..200u64).any(|r| p.decide(r, 0) != q.decide(r, 0));
+        assert!(differs, "different seeds must reshuffle the faulted set");
+    }
+
+    #[test]
+    fn empirical_rates_match_the_bands() {
+        let p = FaultPlan {
+            panic_rate: 0.1,
+            delay_rate: 0.2,
+            error_rate: 0.1,
+            ..FaultPlan::default()
+        };
+        let n = 20_000u64;
+        let mut counts = [0u64; 4];
+        for req in 0..n {
+            let i = match p.decide(req, 0) {
+                FaultAction::Panic => 0,
+                FaultAction::Delay(_) => 1,
+                FaultAction::ExecError => 2,
+                FaultAction::None => 3,
+            };
+            counts[i] += 1;
+        }
+        let frac = |c: u64| c as f64 / n as f64;
+        assert!((frac(counts[0]) - 0.1).abs() < 0.02, "panic {:?}", counts);
+        assert!((frac(counts[1]) - 0.2).abs() < 0.02, "delay {:?}", counts);
+        assert!((frac(counts[2]) - 0.1).abs() < 0.02, "error {:?}", counts);
+        assert!((frac(counts[3]) - 0.6).abs() < 0.02, "none {:?}", counts);
+    }
+
+    #[test]
+    fn inactive_plan_never_fires() {
+        let p = FaultPlan::default();
+        assert!((0..1000u64).all(|r| p.decide(r, 0) == FaultAction::None));
+    }
+}

@@ -9,6 +9,7 @@
 //! values; above it the percentiles are unbiased estimates over a uniform
 //! sample of the whole stream.
 
+use super::request::ServeError;
 use crate::engine::TileCacheOutcome;
 use crate::util::rng::SmallRng;
 use crate::util::table::human_bytes;
@@ -81,6 +82,25 @@ pub struct Metrics {
     pub tile_gather_bytes_saved: AtomicU64,
     /// Bytes currently resident across all workers' tile caches.
     pub tile_cached_bytes: AtomicU64,
+    // Failure-model accounting: one counter per `ServeError` class plus
+    // supervision events. `ok_responses + errors_total() == requests` holds
+    // once every submission has resolved.
+    pub ok_responses: AtomicU64,
+    pub timeouts: AtomicU64,
+    /// Requests shed by admission control (`Overloaded`).
+    pub shed: AtomicU64,
+    pub invalid_targets: AtomicU64,
+    pub worker_lost: AtomicU64,
+    pub shutdown_rejects: AtomicU64,
+    /// Worker panics caught (injected or real) — one per crash, counted
+    /// worker-side.
+    pub worker_panics: AtomicU64,
+    /// Workers respawned by the supervisor.
+    pub worker_restarts: AtomicU64,
+    /// Crashes left unrepaired because the restart budget ran out.
+    pub workers_abandoned: AtomicU64,
+    /// Faults the injection plan actually fired (0 without `--faults`).
+    pub injected_faults: AtomicU64,
     latencies_us: Mutex<Reservoir>,
 }
 
@@ -97,6 +117,44 @@ impl Metrics {
 
     pub fn record_latency(&self, d: Duration) {
         self.latencies_us.lock().unwrap().record(d.as_micros() as u64);
+    }
+
+    /// A submission resolved with rows.
+    pub fn record_ok(&self) {
+        self.ok_responses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A submission resolved with a typed error; bumps that class's
+    /// counter.
+    pub fn record_error(&self, e: &ServeError) {
+        let counter = match e {
+            ServeError::Timeout { .. } => &self.timeouts,
+            ServeError::Overloaded { .. } => &self.shed,
+            ServeError::InvalidTarget { .. } => &self.invalid_targets,
+            ServeError::WorkerLost { .. } => &self.worker_lost,
+            ServeError::ShuttingDown => &self.shutdown_rejects,
+        };
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Submissions resolved with a typed error, across all classes.
+    pub fn errors_total(&self) -> u64 {
+        self.timeouts.load(Ordering::Relaxed)
+            + self.shed.load(Ordering::Relaxed)
+            + self.invalid_targets.load(Ordering::Relaxed)
+            + self.worker_lost.load(Ordering::Relaxed)
+            + self.shutdown_rejects.load(Ordering::Relaxed)
+    }
+
+    /// Fraction of resolved submissions that returned rows; 1.0 before any
+    /// traffic.
+    pub fn availability(&self) -> f64 {
+        let ok = self.ok_responses.load(Ordering::Relaxed);
+        let total = ok + self.errors_total();
+        if total == 0 {
+            return 1.0;
+        }
+        ok as f64 / total as f64
     }
 
     /// Fold one cache-aware embed outcome into the registry.
@@ -188,6 +246,23 @@ impl Metrics {
                 self.tile_evictions.load(Ordering::Relaxed),
                 human_bytes(self.tile_cached_bytes.load(Ordering::Relaxed)),
                 human_bytes(self.tile_gather_bytes_saved.load(Ordering::Relaxed)),
+            ));
+        }
+        if self.errors_total() > 0 || self.worker_panics.load(Ordering::Relaxed) > 0 {
+            s.push_str(&format!(
+                " faults: avail={:.2}% ok={} timeout={} shed={} invalid={} lost={} \
+                 shutdown={} panics={} restarts={} abandoned={} injected={}",
+                self.availability() * 100.0,
+                self.ok_responses.load(Ordering::Relaxed),
+                self.timeouts.load(Ordering::Relaxed),
+                self.shed.load(Ordering::Relaxed),
+                self.invalid_targets.load(Ordering::Relaxed),
+                self.worker_lost.load(Ordering::Relaxed),
+                self.shutdown_rejects.load(Ordering::Relaxed),
+                self.worker_panics.load(Ordering::Relaxed),
+                self.worker_restarts.load(Ordering::Relaxed),
+                self.workers_abandoned.load(Ordering::Relaxed),
+                self.injected_faults.load(Ordering::Relaxed),
             ));
         }
         s
@@ -291,5 +366,38 @@ mod tests {
         m.record_request(4);
         assert!(!m.summary().contains("tile_cache"));
         assert!(m.summary().contains("p999=0us"));
+    }
+
+    #[test]
+    fn error_classes_count_separately_and_availability_tracks() {
+        use crate::hetgraph::VId;
+        let m = Metrics::default();
+        assert_eq!(m.availability(), 1.0, "no traffic means full availability");
+        for _ in 0..3 {
+            m.record_ok();
+        }
+        m.record_error(&ServeError::Timeout { deadline: Duration::from_millis(5) });
+        m.record_error(&ServeError::Overloaded { depth: 9 });
+        m.record_error(&ServeError::InvalidTarget { vid: VId(1) });
+        m.record_error(&ServeError::WorkerLost { detail: "x".into() });
+        m.record_error(&ServeError::ShuttingDown);
+        assert_eq!(m.timeouts.load(Ordering::Relaxed), 1);
+        assert_eq!(m.shed.load(Ordering::Relaxed), 1);
+        assert_eq!(m.invalid_targets.load(Ordering::Relaxed), 1);
+        assert_eq!(m.worker_lost.load(Ordering::Relaxed), 1);
+        assert_eq!(m.shutdown_rejects.load(Ordering::Relaxed), 1);
+        assert_eq!(m.errors_total(), 5);
+        assert!((m.availability() - 3.0 / 8.0).abs() < 1e-12);
+        let s = m.summary();
+        assert!(s.contains("faults: avail=37.50%"), "{s}");
+        assert!(s.contains("timeout=1") && s.contains("lost=1"), "{s}");
+    }
+
+    #[test]
+    fn summary_omits_fault_line_on_a_clean_run() {
+        let m = Metrics::default();
+        m.record_request(2);
+        m.record_ok();
+        assert!(!m.summary().contains("faults:"), "{}", m.summary());
     }
 }

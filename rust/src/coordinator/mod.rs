@@ -1,9 +1,12 @@
 //! L3 serving coordinator: request router (group affinity), dynamic block
 //! batcher, keyed inference-plan cache (epoch-tagged for downstream
 //! hot-tile caches), multi-channel worker pool over PJRT or the
-//! in-process CPU fused engine, and serving metrics.
+//! in-process CPU fused engine, serving metrics, and the failure model
+//! (typed errors, deadlines, worker supervision, deterministic fault
+//! injection).
 
 pub mod batcher;
+pub mod faults;
 pub mod metrics;
 pub mod plans;
 pub mod request;
@@ -11,8 +14,12 @@ pub mod router;
 pub mod server;
 
 pub use batcher::{BlockBatcher, Tagged};
+pub use faults::{FaultAction, FaultPlan, INJECTED_PANIC_MSG};
 pub use metrics::{LatencyStats, Metrics, RESERVOIR_CAP};
 pub use plans::PlanCache;
-pub use request::{InferenceRequest, InferenceResponse};
+pub use request::{InferenceRequest, InferenceResponse, ServeError};
 pub use router::Router;
-pub use server::{ExecutorKind, Server, ServerConfig, CPU_MAX_IN_DIM, TILE_CACHE_DEFAULT_BYTES};
+pub use server::{
+    ExecutorKind, Server, ServerConfig, CPU_MAX_IN_DIM, DEFAULT_DEADLINE, DEFAULT_RESTART_BUDGET,
+    TILE_CACHE_DEFAULT_BYTES,
+};

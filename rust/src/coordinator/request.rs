@@ -1,4 +1,11 @@
-//! Inference request/response types for the serving coordinator.
+//! Inference request/response types and the typed serving error taxonomy.
+//!
+//! Every failure a request can experience maps to exactly one
+//! [`ServeError`] variant, so callers can tell *shed* load from *timed
+//! out* load from *lost* work — and the metrics registry can count each
+//! class separately (`coordinator::metrics`). The taxonomy is closed on
+//! purpose: a serving layer with open-ended errors cannot make
+//! availability promises.
 
 use crate::hetgraph::VId;
 use std::time::Duration;
@@ -8,7 +15,76 @@ use std::time::Duration;
 pub struct InferenceRequest {
     pub id: u64,
     pub targets: Vec<VId>,
+    /// Per-request deadline override; `None` inherits
+    /// `ServerConfig::default_deadline`.
+    pub deadline: Option<Duration>,
 }
+
+impl InferenceRequest {
+    pub fn new(id: u64, targets: Vec<VId>) -> InferenceRequest {
+        InferenceRequest { id, targets, deadline: None }
+    }
+
+    /// Attach a per-request deadline (overrides the server default).
+    pub fn with_deadline(mut self, deadline: Duration) -> InferenceRequest {
+        self.deadline = Some(deadline);
+        self
+    }
+}
+
+/// Why a request did not produce embeddings. One variant per failure
+/// class; `Server::submit_as` guarantees every submission resolves to
+/// rows or to exactly one of these before its deadline elapses.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The deadline elapsed before every routed part replied. The request
+    /// may still be executing; its late replies are discarded.
+    Timeout { deadline: Duration },
+    /// Admission control shed the request: the work queue was at `depth`,
+    /// past the configured admission threshold. Retry with backoff.
+    Overloaded { depth: usize },
+    /// A target vertex id lies outside the plan's vertex space; rejected
+    /// up front, before any work is enqueued.
+    InvalidTarget { vid: VId },
+    /// A worker panicked, a block executor failed, or a reply channel was
+    /// lost while the request was in flight.
+    WorkerLost { detail: String },
+    /// The server is shutting down and no longer admits requests.
+    ShuttingDown,
+}
+
+impl ServeError {
+    /// Stable lowercase class name, used as the metrics/report key.
+    pub fn class(&self) -> &'static str {
+        match self {
+            ServeError::Timeout { .. } => "timeout",
+            ServeError::Overloaded { .. } => "overloaded",
+            ServeError::InvalidTarget { .. } => "invalid_target",
+            ServeError::WorkerLost { .. } => "worker_lost",
+            ServeError::ShuttingDown => "shutting_down",
+        }
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Timeout { deadline } => {
+                write!(f, "request deadline ({deadline:?}) elapsed")
+            }
+            ServeError::Overloaded { depth } => {
+                write!(f, "request shed: queue depth {depth} at admission threshold")
+            }
+            ServeError::InvalidTarget { vid } => {
+                write!(f, "target {vid} outside the plan's vertex space")
+            }
+            ServeError::WorkerLost { detail } => write!(f, "worker lost: {detail}"),
+            ServeError::ShuttingDown => write!(f, "server is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
 
 /// Embedding rows come back tagged with their vertex, because the router
 /// may split one request across channels and the batcher may interleave
@@ -40,5 +116,35 @@ mod tests {
         };
         assert_eq!(r.embedding_of(VId(5)), Some(&[2.0][..]));
         assert_eq!(r.embedding_of(VId(4)), None);
+    }
+
+    #[test]
+    fn error_classes_are_stable_and_displayable() {
+        let all = [
+            ServeError::Timeout { deadline: Duration::from_millis(5) },
+            ServeError::Overloaded { depth: 7 },
+            ServeError::InvalidTarget { vid: VId(9) },
+            ServeError::WorkerLost { detail: "x".into() },
+            ServeError::ShuttingDown,
+        ];
+        let classes: Vec<&str> = all.iter().map(|e| e.class()).collect();
+        assert_eq!(
+            classes,
+            ["timeout", "overloaded", "invalid_target", "worker_lost", "shutting_down"]
+        );
+        for e in &all {
+            assert!(!e.to_string().is_empty());
+        }
+        // anyhow interop (examples use `?` against anyhow::Result).
+        let any: anyhow::Error = ServeError::ShuttingDown.into();
+        assert!(any.to_string().contains("shutting down"));
+    }
+
+    #[test]
+    fn deadline_override_rides_the_request() {
+        let r = InferenceRequest::new(4, vec![VId(0)]);
+        assert_eq!(r.deadline, None);
+        let r = r.with_deadline(Duration::from_millis(250));
+        assert_eq!(r.deadline, Some(Duration::from_millis(250)));
     }
 }

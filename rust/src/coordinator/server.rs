@@ -34,30 +34,77 @@
 //!   plan's [`PlanCache`] epoch; a plan rebuild invalidates every tile.
 //! * `submit` splits a request by channel affinity, enqueues the parts,
 //!   and assembles the response; rows come back tagged by vertex.
+//!
+//! # Failure model
+//!
+//! Every submission resolves — with rows or with exactly one typed
+//! [`ServeError`] — within its deadline (`ServerConfig::default_deadline`,
+//! per-request override via [`InferenceRequest::with_deadline`]):
+//!
+//! * Targets are validated against the plan's vertex space up front
+//!   (`InvalidTarget`) before any work is enqueued.
+//! * Admission control sheds (`Overloaded`) instead of blocking once the
+//!   shared CPU queue sits at [`ServerConfig::admission_threshold`]; the
+//!   enqueue itself uses the non-blocking `try_push_to`.
+//! * Worker execution runs under `catch_unwind`: a panicking request gets
+//!   a `WorkerLost` reply (one bad request costs one error, never a
+//!   silent drop), the crash is reported on a health channel, and a
+//!   supervisor thread respawns the CPU worker — up to
+//!   [`ServerConfig::restart_budget`] restarts, after which the channel
+//!   stays down and its queued work is stolen by surviving workers (or
+//!   times out at the submitter when none remain). PJRT workers catch
+//!   panics per block and keep running (their compiled executable cannot
+//!   be respawned cheaply); every request in a failed block receives an
+//!   error reply.
+//! * The reply wait is `recv_timeout` against the deadline (`Timeout`),
+//!   and a reply tagged with the wrong request id is rejected as
+//!   `WorkerLost` rather than silently appending another request's rows.
+//! * [`Server::begin_shutdown`] flips the admission gate (`ShuttingDown`)
+//!   and closes the queue; already-enqueued items drain (the
+//!   [`StealQueue::close`] contract), so in-flight submissions still
+//!   resolve with rows.
+//!
+//! Deterministic fault injection ([`FaultPlan`], `--faults`) drives all of
+//! these paths in tests and the chaos harness without touching production
+//! defaults.
 
 use super::batcher::BlockBatcher;
+use super::faults::{FaultAction, FaultPlan, INJECTED_PANIC_MSG};
 use super::metrics::Metrics;
 use super::plans::PlanCache;
-use super::request::{InferenceRequest, InferenceResponse};
+use super::request::{InferenceRequest, InferenceResponse, ServeError};
 use super::router::Router;
-use crate::engine::{FeatureState, FusedEngine, InferencePlan, StealQueue, TileCache, TileScratch};
+use crate::engine::{
+    FeatureState, FusedEngine, InferencePlan, PushError, StealQueue, TileCache, TileScratch,
+};
 use crate::grouping::{default_n_max, group_overlap_driven, OverlapHypergraph};
 use crate::hetgraph::{HetGraph, VId};
 use crate::model::{ModelConfig, ModelKind};
 use crate::runtime::{BlockExecutor, Manifest};
 use anyhow::{Context, Result};
+use rustc_hash::FxHashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+/// What a worker sends back for one routed part: the request id plus rows
+/// or the typed error that part died with.
+type Reply = (u64, Result<Vec<(VId, Vec<f32>)>, ServeError>);
 
 /// A unit of routed work: targets for one channel, tagged with the request
 /// and a reply path.
 struct WorkItem {
     req: u64,
+    /// Routed part index (the channel the router chose) — a stable salt
+    /// for fault-injection decisions, independent of which worker ends up
+    /// executing the item.
+    part: u32,
     targets: Vec<VId>,
-    reply: Sender<(u64, Vec<(VId, Vec<f32>)>)>,
+    reply: Sender<Reply>,
 }
 
 /// The build-once serving context every channel worker shares read-only:
@@ -86,15 +133,25 @@ pub enum ExecutorKind {
 /// tests) can build a `ReferenceEngine` against the exact same plan.
 pub const CPU_MAX_IN_DIM: usize = 64;
 
-/// Capacity of the shared CPU work-stealing queue. Generous — serving
-/// should block a submitter only under severe overload (backpressure),
-/// not in steady state.
+/// Capacity of the shared CPU work-stealing queue. Generous — the
+/// admission threshold sheds load well before the queue itself fills in
+/// steady state.
 const CPU_QUEUE_CAP: usize = 4096;
 
 /// Default per-worker hot-tile cache budget (32 MiB). Small on purpose:
 /// the cache pays off on the hot head of a skewed workload; the long tail
 /// should be evicted, not hoarded.
 pub const TILE_CACHE_DEFAULT_BYTES: usize = 32 << 20;
+
+/// Default request deadline: far above any sane p999, so it only fires
+/// when something is actually wrong (dead channel, stuck executor) — but
+/// it always fires, which is the availability guarantee.
+pub const DEFAULT_DEADLINE: Duration = Duration::from_secs(5);
+
+/// Default supervisor restart budget: crashes past this leave the channel
+/// down (queued work is stolen by survivors) instead of masking a
+/// crash-loop forever.
+pub const DEFAULT_RESTART_BUDGET: u32 = 8;
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -112,6 +169,19 @@ pub struct ServerConfig {
     /// Per-worker hot-tile cache budget in bytes (CPU executor only;
     /// 0 disables the cache, PJRT workers ignore it).
     pub tile_cache_bytes: usize,
+    /// Deadline for requests that carry none of their own; every
+    /// submission resolves (rows or [`ServeError`]) within it.
+    pub default_deadline: Duration,
+    /// Queue depth at which admission control starts shedding with
+    /// [`ServeError::Overloaded`] (CPU executor; the PJRT mpsc queues are
+    /// unbounded and never shed).
+    pub admission_threshold: usize,
+    /// How many crashed CPU workers the supervisor will respawn before
+    /// leaving a channel down.
+    pub restart_budget: u32,
+    /// Deterministic fault injection (test/CLI hook; `None` in
+    /// production). Consulted per work item by CPU workers.
+    pub faults: Option<FaultPlan>,
 }
 
 impl ServerConfig {
@@ -124,6 +194,10 @@ impl ServerConfig {
             executor: ExecutorKind::Pjrt,
             plans: Arc::new(PlanCache::new()),
             tile_cache_bytes: TILE_CACHE_DEFAULT_BYTES,
+            default_deadline: DEFAULT_DEADLINE,
+            admission_threshold: CPU_QUEUE_CAP,
+            restart_budget: DEFAULT_RESTART_BUDGET,
+            faults: None,
         }
     }
 
@@ -142,13 +216,40 @@ enum WorkQueues {
     Stealing(Arc<StealQueue<WorkItem>>),
 }
 
+/// Worker → supervisor messages.
+enum Health {
+    /// The worker on this channel crashed and its thread exited.
+    Down(usize),
+    /// Shutdown: the supervisor should stop respawning and exit.
+    Quit,
+}
+
+/// Everything a CPU channel worker needs, bundled so the supervisor can
+/// respawn a worker from the same context it was first spawned with.
+struct CpuWorkerCtx {
+    queue: Arc<StealQueue<WorkItem>>,
+    shared: Arc<PlanState>,
+    cache_bytes: usize,
+    metrics: Arc<Metrics>,
+    faults: Option<FaultPlan>,
+}
+
 /// The running coordinator.
 pub struct Server {
     router: Router,
     queues: WorkQueues,
-    workers: Vec<JoinHandle<()>>,
+    /// Worker handles; behind a mutex because the supervisor pushes
+    /// respawned handles concurrently with shutdown's drain.
+    workers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    supervisor: Option<JoinHandle<()>>,
+    health: Option<Sender<Health>>,
     pub metrics: Arc<Metrics>,
-    next_id: std::sync::atomic::AtomicU64,
+    next_id: AtomicU64,
+    /// Vertex-space bound for up-front target validation.
+    num_vertices: usize,
+    default_deadline: Duration,
+    admission_threshold: usize,
+    closing: AtomicBool,
 }
 
 impl Server {
@@ -161,6 +262,7 @@ impl Server {
         // aggregation gather in the request path runs without
         // per-(target, semantic) binary searches and without per-worker
         // rebuilds.
+        let num_vertices = g.num_vertices();
         let shared = match cfg.executor {
             ExecutorKind::Pjrt => {
                 // FP pass once, in the caller's thread, with a throwaway
@@ -205,7 +307,9 @@ impl Server {
         };
 
         let metrics = Arc::new(Metrics::default());
-        let mut workers = Vec::new();
+        let workers: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let mut supervisor = None;
+        let mut health = None;
         // Readiness barrier: each worker compiles its PJRT executable up
         // front and signals before start() returns, so the first request
         // never pays compilation latency (it showed up as a seconds-scale
@@ -222,7 +326,7 @@ impl Server {
                     let dir = cfg.artifacts_dir.clone();
                     let kind = cfg.kind;
                     let ready = ready_tx.clone();
-                    workers.push(
+                    workers.lock().unwrap().push(
                         std::thread::Builder::new()
                             .name(format!("tlv-worker-{ch}"))
                             .spawn(move || worker_loop(rx, shared, dir, kind, metrics, ready))
@@ -235,21 +339,36 @@ impl Server {
                 // One shared work-stealing queue: routed parts are placed
                 // on their affine channel's deque, idle channels steal.
                 let queue = Arc::new(StealQueue::new(cfg.channels, CPU_QUEUE_CAP));
-                let cache_bytes = cfg.tile_cache_bytes;
+                let ctx = Arc::new(CpuWorkerCtx {
+                    queue: Arc::clone(&queue),
+                    shared: Arc::clone(&shared),
+                    cache_bytes: cfg.tile_cache_bytes,
+                    metrics: Arc::clone(&metrics),
+                    faults: cfg.faults,
+                });
+                let (health_tx, health_rx) = channel::<Health>();
                 for ch in 0..cfg.channels {
-                    let queue = Arc::clone(&queue);
-                    let shared = Arc::clone(&shared);
-                    let metrics = Arc::clone(&metrics);
-                    let ready = ready_tx.clone();
-                    workers.push(
-                        std::thread::Builder::new()
-                            .name(format!("tlv-worker-{ch}"))
-                            .spawn(move || {
-                                worker_loop_cpu(ch, queue, shared, cache_bytes, metrics, ready)
-                            })
-                            .context("spawn worker")?,
-                    );
+                    workers.lock().unwrap().push(spawn_cpu_worker(
+                        ch,
+                        Arc::clone(&ctx),
+                        health_tx.clone(),
+                        Some(ready_tx.clone()),
+                    )?);
                 }
+                // Supervisor: respawns crashed workers within the budget.
+                let sup_ctx = Arc::clone(&ctx);
+                let sup_health = health_tx.clone();
+                let sup_workers = Arc::clone(&workers);
+                let budget = cfg.restart_budget;
+                supervisor = Some(
+                    std::thread::Builder::new()
+                        .name("tlv-supervisor".to_string())
+                        .spawn(move || {
+                            supervisor_loop(health_rx, sup_health, sup_ctx, sup_workers, budget)
+                        })
+                        .context("spawn supervisor")?,
+                );
+                health = Some(health_tx);
                 WorkQueues::Stealing(queue)
             }
         };
@@ -264,47 +383,123 @@ impl Server {
             router,
             queues,
             workers,
+            supervisor,
+            health,
             metrics,
-            next_id: std::sync::atomic::AtomicU64::new(1),
+            next_id: AtomicU64::new(1),
+            num_vertices,
+            default_deadline: cfg.default_deadline,
+            admission_threshold: cfg.admission_threshold,
+            closing: AtomicBool::new(false),
         })
     }
 
     /// Synchronously serve one request (parts execute in parallel across
     /// channel workers; this thread assembles the response).
-    pub fn submit(&self, targets: Vec<VId>) -> Result<InferenceResponse> {
-        let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        self.submit_as(InferenceRequest { id, targets })
+    pub fn submit(&self, targets: Vec<VId>) -> Result<InferenceResponse, ServeError> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.submit_as(InferenceRequest::new(id, targets))
     }
 
-    pub fn submit_as(&self, req: InferenceRequest) -> Result<InferenceResponse> {
+    /// [`submit`](Server::submit) with a per-request deadline override.
+    pub fn submit_with_deadline(
+        &self,
+        targets: Vec<VId>,
+        deadline: Duration,
+    ) -> Result<InferenceResponse, ServeError> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.submit_as(InferenceRequest::new(id, targets).with_deadline(deadline))
+    }
+
+    /// Serve one request end to end. Resolves within the deadline, with
+    /// rows or exactly one typed [`ServeError`] — never a hang (see the
+    /// module-level failure model).
+    pub fn submit_as(&self, req: InferenceRequest) -> Result<InferenceResponse, ServeError> {
         let t0 = Instant::now();
         let expected = req.targets.len();
         self.metrics.record_request(expected);
-        let (reply_tx, reply_rx): (Sender<(u64, Vec<(VId, Vec<f32>)>)>, Receiver<_>) = channel();
+        let fail = |e: ServeError| {
+            self.metrics.record_error(&e);
+            Err(e)
+        };
+        if self.closing.load(Ordering::Acquire) {
+            return fail(ServeError::ShuttingDown);
+        }
+        // Validate before any work is enqueued: a bad id must cost a typed
+        // rejection, not an out-of-bounds panic inside the router.
+        if let Some(&bad) = req.targets.iter().find(|t| t.idx() >= self.num_vertices) {
+            return fail(ServeError::InvalidTarget { vid: bad });
+        }
+        // Admission control: shed instead of queueing into a backlog that
+        // would blow the deadline anyway.
+        if let WorkQueues::Stealing(q) = &self.queues {
+            let depth = q.pending();
+            if depth >= self.admission_threshold {
+                return fail(ServeError::Overloaded { depth });
+            }
+        }
+        let deadline = req.deadline.unwrap_or(self.default_deadline);
+        let deadline_at = t0 + deadline;
+        let (reply_tx, reply_rx): (Sender<Reply>, Receiver<Reply>) = channel();
         for (ch, part) in self.router.split(&req.targets).into_iter().enumerate() {
             if part.is_empty() {
                 continue;
             }
-            let item = WorkItem { req: req.id, targets: part, reply: reply_tx.clone() };
+            let item =
+                WorkItem { req: req.id, part: ch as u32, targets: part, reply: reply_tx.clone() };
             match &self.queues {
                 WorkQueues::PerChannel(qs) => {
-                    qs[ch].send(item).map_err(|_| anyhow::anyhow!("worker {ch} gone"))?
-                }
-                WorkQueues::Stealing(q) => {
-                    if !q.push_to(ch, item) {
-                        return Err(anyhow::anyhow!("server shut down"));
+                    if qs[ch].send(item).is_err() {
+                        return fail(ServeError::WorkerLost {
+                            detail: format!("channel {ch} worker gone"),
+                        });
                     }
                 }
+                WorkQueues::Stealing(q) => match q.try_push_to(ch, item) {
+                    Ok(()) => {}
+                    // Parts pushed before this one execute into a dropped
+                    // receiver — harmless.
+                    Err(PushError::Full(_)) => {
+                        return fail(ServeError::Overloaded { depth: q.pending() })
+                    }
+                    Err(PushError::Closed(_)) => return fail(ServeError::ShuttingDown),
+                },
             }
         }
         drop(reply_tx);
         let mut rows = Vec::with_capacity(expected);
         while rows.len() < expected {
-            let (rid, mut part) = reply_rx.recv().context("workers disconnected")?;
-            debug_assert_eq!(rid, req.id);
-            rows.append(&mut part);
+            let Some(remaining) = deadline_at.checked_duration_since(Instant::now()) else {
+                return fail(ServeError::Timeout { deadline });
+            };
+            match reply_rx.recv_timeout(remaining) {
+                Ok((rid, part)) => {
+                    if rid != req.id {
+                        // A cross-wired reply means the reply plumbing is
+                        // broken; appending another request's rows would
+                        // be silent corruption.
+                        return fail(ServeError::WorkerLost {
+                            detail: format!(
+                                "cross-wired reply: got request {rid}, want {}",
+                                req.id
+                            ),
+                        });
+                    }
+                    match part {
+                        Ok(mut part_rows) => rows.append(&mut part_rows),
+                        Err(e) => return fail(e),
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => return fail(ServeError::Timeout { deadline }),
+                Err(RecvTimeoutError::Disconnected) => {
+                    return fail(ServeError::WorkerLost {
+                        detail: "reply channel closed before all rows arrived".to_string(),
+                    })
+                }
+            }
         }
         let latency = t0.elapsed();
+        self.metrics.record_ok();
         self.metrics.record_latency(latency);
         Ok(InferenceResponse { id: req.id, embeddings: rows, latency })
     }
@@ -319,13 +514,44 @@ impl Server {
         }
     }
 
-    /// Stop workers and join them.
-    pub fn shutdown(mut self) {
-        match &mut self.queues {
-            WorkQueues::PerChannel(qs) => qs.clear(), // disconnects
-            WorkQueues::Stealing(q) => q.close(),
+    /// Items currently enqueued on the shared CPU queue (`None` for PJRT).
+    pub fn queue_depth(&self) -> Option<usize> {
+        match &self.queues {
+            WorkQueues::PerChannel(_) => None,
+            WorkQueues::Stealing(q) => Some(q.pending()),
         }
-        for w in self.workers.drain(..) {
+    }
+
+    /// Start shutting down without consuming the server: new submissions
+    /// are rejected with [`ServeError::ShuttingDown`], the CPU queue stops
+    /// admitting work, and the supervisor stops respawning. Items already
+    /// enqueued still drain ([`StealQueue::close`] keeps pending work), so
+    /// in-flight submissions resolve with rows, not errors. Idempotent;
+    /// [`Server::shutdown`] calls it first.
+    pub fn begin_shutdown(&self) {
+        self.closing.store(true, Ordering::Release);
+        if let WorkQueues::Stealing(q) = &self.queues {
+            q.close();
+        }
+        if let Some(h) = &self.health {
+            let _ = h.send(Health::Quit);
+        }
+    }
+
+    /// Stop workers and join them (and the supervisor). Joining is the
+    /// no-thread-leak guarantee the chaos harness asserts.
+    pub fn shutdown(mut self) {
+        self.begin_shutdown();
+        if let WorkQueues::PerChannel(qs) = &mut self.queues {
+            qs.clear(); // disconnects → PJRT workers exit
+        }
+        // Join the supervisor before draining workers so it cannot push a
+        // respawned handle after the drain.
+        if let Some(sup) = self.supervisor.take() {
+            let _ = sup.join();
+        }
+        let handles: Vec<JoinHandle<()>> = std::mem::take(&mut *self.workers.lock().unwrap());
+        for w in handles {
             let _ = w.join();
         }
     }
@@ -336,11 +562,67 @@ impl Drop for Server {
     /// terminate its workers: per-channel mpsc senders disconnect on drop
     /// by themselves, but the shared steal queue holds a clone in every
     /// CPU worker and has to be closed explicitly or the workers would
-    /// block in `pop` forever (leaked threads). Idempotent after
-    /// `shutdown`.
+    /// block in `pop` forever (leaked threads); the supervisor likewise
+    /// needs its `Quit`. Idempotent after `shutdown`.
     fn drop(&mut self) {
-        if let WorkQueues::Stealing(q) = &self.queues {
-            q.close();
+        self.begin_shutdown();
+    }
+}
+
+/// Best-effort panic payload description (panics carry `&str` or `String`
+/// in practice; anything else is opaque).
+fn panic_detail(p: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = p.downcast_ref::<&'static str>() {
+        s
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.as_str()
+    } else {
+        "non-string panic payload"
+    }
+}
+
+fn spawn_cpu_worker(
+    ch: usize,
+    ctx: Arc<CpuWorkerCtx>,
+    health: Sender<Health>,
+    ready: Option<Sender<Result<(), String>>>,
+) -> Result<JoinHandle<()>> {
+    std::thread::Builder::new()
+        .name(format!("tlv-worker-{ch}"))
+        .spawn(move || worker_loop_cpu(ch, ctx, health, ready))
+        .context("spawn worker")
+}
+
+/// Supervisor: owns the health receiver, respawns crashed CPU workers
+/// from the shared [`CpuWorkerCtx`] until the restart budget runs out,
+/// and exits on [`Health::Quit`] (sent by `begin_shutdown`).
+fn supervisor_loop(
+    rx: Receiver<Health>,
+    health: Sender<Health>,
+    ctx: Arc<CpuWorkerCtx>,
+    workers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    budget: u32,
+) {
+    let mut restarts = 0u32;
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Health::Quit => break,
+            Health::Down(ch) => {
+                if restarts >= budget {
+                    ctx.metrics.workers_abandoned.fetch_add(1, Ordering::Relaxed);
+                    eprintln!(
+                        "worker {ch} crashed; restart budget ({budget}) exhausted — \
+                         channel stays down, survivors steal its queue"
+                    );
+                    continue;
+                }
+                restarts += 1;
+                ctx.metrics.worker_restarts.fetch_add(1, Ordering::Relaxed);
+                match spawn_cpu_worker(ch, Arc::clone(&ctx), health.clone(), None) {
+                    Ok(h) => workers.lock().unwrap().push(h),
+                    Err(e) => eprintln!("failed to respawn worker {ch}: {e:#}"),
+                }
+            }
         }
     }
 }
@@ -358,38 +640,112 @@ impl Drop for Server {
 /// Stolen items belong to another channel's traffic and would only evict
 /// this worker's hot tiles, so they bypass the cache and take the
 /// ordinary tile path — slower, never wrong.
+///
+/// Per-item execution runs under `catch_unwind`: a panic (injected or
+/// real) costs that one request a `WorkerLost` reply, then the thread
+/// reports [`Health::Down`] and exits so the supervisor can respawn it
+/// with fresh scratch state.
 fn worker_loop_cpu(
     ch: usize,
-    queue: Arc<StealQueue<WorkItem>>,
-    shared: Arc<PlanState>,
-    cache_bytes: usize,
-    metrics: Arc<Metrics>,
-    ready: Sender<Result<(), String>>,
+    ctx: Arc<CpuWorkerCtx>,
+    health: Sender<Health>,
+    ready: Option<Sender<Result<(), String>>>,
 ) {
-    let _ = ready.send(Ok(()));
-    let engine = FusedEngine::over(&shared.plan, &shared.state);
+    if let Some(ready) = ready {
+        let _ = ready.send(Ok(()));
+    }
+    let engine = FusedEngine::over(&ctx.shared.plan, &ctx.shared.state);
     let mut scratch = TileScratch::default();
-    let mut cache = (cache_bytes > 0).then(|| TileCache::new(cache_bytes, shared.epoch));
-    while let Some((w, stolen)) = queue.pop(ch) {
-        let m = match &mut cache {
-            Some(cache) if !stolen => {
-                let (m, _reuse, outcome) =
-                    engine.embed_group_tile_cached(&w.targets, cache, &mut scratch);
-                metrics.record_tile_outcome(&outcome);
-                m
-            }
-            other => {
-                if other.is_some() {
-                    metrics.record_tile_bypass();
+    let mut cache =
+        (ctx.cache_bytes > 0).then(|| TileCache::new(ctx.cache_bytes, ctx.shared.epoch));
+    while let Some((w, stolen)) = ctx.queue.pop(ch) {
+        let action = ctx.faults.as_ref().map_or(FaultAction::None, |f| f.decide(w.req, w.part));
+        if action != FaultAction::None {
+            ctx.metrics.injected_faults.fetch_add(1, Ordering::Relaxed);
+        }
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            match action {
+                FaultAction::Panic => std::panic::panic_any(INJECTED_PANIC_MSG),
+                FaultAction::Delay(d) => std::thread::sleep(d),
+                FaultAction::ExecError => {
+                    return Err(ServeError::WorkerLost {
+                        detail: format!("injected executor error on channel {ch}"),
+                    });
                 }
-                let (m, _reuse) = engine.embed_group_tile_reusing(&w.targets, &mut scratch);
-                m
+                FaultAction::None => {}
             }
-        };
-        metrics.record_block(w.targets.len(), w.targets.len().max(1));
-        let rows: Vec<(VId, Vec<f32>)> =
-            w.targets.iter().enumerate().map(|(i, &t)| (t, m.row(i).to_vec())).collect();
-        let _ = w.reply.send((w.req, rows));
+            let m = match &mut cache {
+                Some(cache) if !stolen => {
+                    let (m, _reuse, outcome) =
+                        engine.embed_group_tile_cached(&w.targets, cache, &mut scratch);
+                    ctx.metrics.record_tile_outcome(&outcome);
+                    m
+                }
+                other => {
+                    if other.is_some() {
+                        ctx.metrics.record_tile_bypass();
+                    }
+                    let (m, _reuse) = engine.embed_group_tile_reusing(&w.targets, &mut scratch);
+                    m
+                }
+            };
+            ctx.metrics.record_block(w.targets.len(), w.targets.len().max(1));
+            let rows: Vec<(VId, Vec<f32>)> =
+                w.targets.iter().enumerate().map(|(i, &t)| (t, m.row(i).to_vec())).collect();
+            Ok(rows)
+        }));
+        match outcome {
+            Ok(Ok(rows)) => {
+                let _ = w.reply.send((w.req, Ok(rows)));
+            }
+            Ok(Err(e)) => {
+                // Typed executor failure: the request eats one error, the
+                // worker keeps serving.
+                let _ = w.reply.send((w.req, Err(e)));
+            }
+            Err(p) => {
+                // Panic: reply first (never a silent drop), then report
+                // and exit — scratch and cache may be mid-mutation, so a
+                // respawn with fresh state is the only safe continuation.
+                ctx.metrics.worker_panics.fetch_add(1, Ordering::Relaxed);
+                let detail = format!("worker {ch} panicked: {}", panic_detail(p.as_ref()));
+                let _ = w.reply.send((w.req, Err(ServeError::WorkerLost { detail })));
+                let _ = health.send(Health::Down(ch));
+                return;
+            }
+        }
+    }
+}
+
+/// Per-request reply bookkeeping inside a PJRT worker: the sender plus how
+/// many of this worker's rows the request is still owed. Entries are
+/// evicted at zero (and on block failure) so the map stays bounded by the
+/// in-flight set instead of growing per request served.
+struct ReplyEntry {
+    tx: Sender<Reply>,
+    expected: usize,
+}
+
+/// Send a `WorkerLost` reply to every request with targets in a failed
+/// block and evict their entries — a failed block must cost its requests
+/// one typed error each, never a silent drop that hangs the submitter.
+fn fail_block(
+    tags: &[super::batcher::Tagged],
+    replies: &mut FxHashMap<u64, ReplyEntry>,
+    detail: &str,
+) {
+    eprintln!("{detail}");
+    let mut seen: Vec<u64> = Vec::new();
+    for tag in tags {
+        if !seen.contains(&tag.req) {
+            seen.push(tag.req);
+        }
+    }
+    for req in seen {
+        if let Some(entry) = replies.remove(&req) {
+            let _ =
+                entry.tx.send((req, Err(ServeError::WorkerLost { detail: detail.to_string() })));
+        }
     }
 }
 
@@ -413,31 +769,52 @@ fn worker_loop(
     };
     let block_size = exec.manifest.profile.block;
     let mut batcher = BlockBatcher::new(block_size);
-    // (req, target) -> reply sender, keyed by insertion order alongside the
-    // batcher's tags.
-    let mut replies: rustc_hash::FxHashMap<u64, Sender<(u64, Vec<(VId, Vec<f32>)>)>> =
-        rustc_hash::FxHashMap::default();
+    // req -> reply bookkeeping, inserted on arrival, evicted on delivery
+    // or block failure (bounded by the in-flight set).
+    let mut replies: FxHashMap<u64, ReplyEntry> = FxHashMap::default();
 
-    let run_block = |tags: &[super::batcher::Tagged],
-                     replies: &rustc_hash::FxHashMap<u64, Sender<(u64, Vec<(VId, Vec<f32>)>)>>,
-                     batcher_used: usize| {
+    let mut run_block = |tags: &[super::batcher::Tagged],
+                         replies: &mut FxHashMap<u64, ReplyEntry>,
+                         batcher_used: usize| {
         let targets: Vec<VId> = tags.iter().map(|t| t.target).collect();
-        match exec.embed_all(&shared.plan, &shared.state, &targets) {
-            Ok(m) => {
+        // A panicking block executor costs its requests one error each;
+        // the worker (and its compiled executable) keep serving.
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            exec.embed_all(&shared.plan, &shared.state, &targets)
+        }));
+        match outcome {
+            Ok(Ok(m)) => {
                 metrics.record_block(batcher_used, block_size);
                 // Group rows back by request.
-                let mut by_req: rustc_hash::FxHashMap<u64, Vec<(VId, Vec<f32>)>> =
-                    rustc_hash::FxHashMap::default();
+                let mut by_req: FxHashMap<u64, Vec<(VId, Vec<f32>)>> = FxHashMap::default();
                 for (i, tag) in tags.iter().enumerate() {
                     by_req.entry(tag.req).or_default().push((tag.target, m.row(i).to_vec()));
                 }
                 for (req, rows) in by_req {
-                    if let Some(tx) = replies.get(&req) {
-                        let _ = tx.send((req, rows));
+                    if let Some(entry) = replies.get_mut(&req) {
+                        entry.expected = entry.expected.saturating_sub(rows.len());
+                        let done = entry.expected == 0;
+                        let _ = entry.tx.send((req, Ok(rows)));
+                        if done {
+                            replies.remove(&req);
+                        }
                     }
                 }
             }
-            Err(e) => eprintln!("block execution failed: {e:#}"),
+            Ok(Err(e)) => {
+                fail_block(tags, replies, &format!("block execution failed: {e:#}"));
+            }
+            Err(p) => {
+                metrics.worker_panics.fetch_add(1, Ordering::Relaxed);
+                fail_block(
+                    tags,
+                    replies,
+                    &format!(
+                        "worker panicked during block execution: {}",
+                        panic_detail(p.as_ref())
+                    ),
+                );
+            }
         }
     };
 
@@ -447,23 +824,29 @@ fn worker_loop(
             Ok(w) => w,
             Err(_) => break, // all senders dropped → shutdown
         };
-        replies.insert(first.req, first.reply.clone());
+        let entry = replies
+            .entry(first.req)
+            .or_insert_with(|| ReplyEntry { tx: first.reply.clone(), expected: 0 });
+        entry.expected += first.targets.len();
         let mut blocks = batcher.push(first.req, &first.targets);
         while let Ok(w) = rx.try_recv() {
-            replies.insert(w.req, w.reply.clone());
+            let entry = replies
+                .entry(w.req)
+                .or_insert_with(|| ReplyEntry { tx: w.reply.clone(), expected: 0 });
+            entry.expected += w.targets.len();
             blocks.extend(batcher.push(w.req, &w.targets));
         }
         for b in &blocks {
-            run_block(b, &replies, b.len());
+            run_block(b, &mut replies, b.len());
         }
         // Queue empty: flush the partial block rather than waiting (keeps
         // tail latency bounded without a timer thread).
         if let Some(b) = batcher.flush() {
-            run_block(&b, &replies, b.len());
+            run_block(&b, &mut replies, b.len());
         }
     }
     // Drain-on-shutdown: flush anything left.
     if let Some(b) = batcher.flush() {
-        run_block(&b, &replies, b.len());
+        run_block(&b, &mut replies, b.len());
     }
 }

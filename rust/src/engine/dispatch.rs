@@ -254,6 +254,51 @@ impl<T> StealQueue<T> {
     pub fn pending(&self) -> usize {
         self.inner.lock().expect("steal queue poisoned").pending
     }
+
+    /// Items currently sitting in `worker`'s own deque (excludes other
+    /// deques an idle `worker` could steal from).
+    pub fn deque_len(&self, worker: usize) -> usize {
+        let inner = self.inner.lock().expect("steal queue poisoned");
+        inner.deques[worker % inner.deques.len()].len()
+    }
+
+    /// Non-blocking [`push_to`](StealQueue::push_to): never waits for
+    /// capacity. The rejected item rides back in the error so the caller
+    /// can retry, reroute, or shed it with context.
+    pub fn try_push_to(&self, worker: usize, item: T) -> Result<(), PushError<T>> {
+        let mut inner = self.inner.lock().expect("steal queue poisoned");
+        if inner.closed {
+            return Err(PushError::Closed(item));
+        }
+        if inner.pending >= self.capacity {
+            return Err(PushError::Full(item));
+        }
+        let w = worker % inner.deques.len();
+        inner.deques[w].push_back(item);
+        inner.pending += 1;
+        inner.high_water = inner.high_water.max(inner.pending);
+        drop(inner);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+}
+
+/// Why [`StealQueue::try_push_to`] rejected an item; carries the item
+/// back so nothing is silently dropped.
+pub enum PushError<T> {
+    /// The queue is at capacity — admission control should shed.
+    Full(T),
+    /// The queue was closed — the server is shutting down.
+    Closed(T),
+}
+
+impl<T> std::fmt::Debug for PushError<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PushError::Full(_) => write!(f, "PushError::Full(..)"),
+            PushError::Closed(_) => write!(f, "PushError::Closed(..)"),
+        }
+    }
 }
 
 /// Default bounded-queue capacity, per worker: deep enough to keep every
@@ -513,6 +558,55 @@ mod tests {
         assert_eq!(got, (0..40).collect::<Vec<_>>(), "each task exactly once");
         assert!(q.steals() > 0, "no steals despite a slow loaded worker");
         assert!(by_others.load(Ordering::Relaxed) > 0, "idle workers did no work");
+    }
+
+    #[test]
+    fn close_drains_pending_items() {
+        // Pins the drain semantics `Server::shutdown` relies on: close()
+        // stops producers but already-enqueued items still reach workers
+        // (each in-flight request resolves with rows, not a hang).
+        let q: StealQueue<u32> = StealQueue::new(2, 16);
+        for i in 0..5 {
+            assert!(q.push_to(0, i));
+        }
+        q.close();
+        assert_eq!(q.pending(), 5, "close must not drop enqueued items");
+        let mut got = Vec::new();
+        while let Some((v, _)) = q.pop(0) {
+            got.push(v);
+        }
+        assert_eq!(got, vec![0, 1, 2, 3, 4], "all pre-close items drained in order");
+        assert!(q.pop(1).is_none());
+    }
+
+    #[test]
+    fn try_push_rejects_full_and_closed_without_blocking() {
+        let q: StealQueue<u32> = StealQueue::new(1, 2);
+        assert!(q.try_push_to(0, 1).is_ok());
+        assert!(q.try_push_to(0, 2).is_ok());
+        match q.try_push_to(0, 3) {
+            Err(PushError::Full(item)) => assert_eq!(item, 3, "rejected item rides back"),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        assert_eq!(q.pending(), 2);
+        assert_eq!(q.pop(0), Some((1, false)));
+        assert!(q.try_push_to(0, 4).is_ok(), "slot freed by pop admits again");
+        q.close();
+        match q.try_push_to(0, 5) {
+            Err(PushError::Closed(item)) => assert_eq!(item, 5),
+            other => panic!("expected Closed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn deque_len_tracks_the_owner_deque_only() {
+        let q: StealQueue<u32> = StealQueue::new(2, 16);
+        assert!(q.push_to(0, 1));
+        assert!(q.push_to(0, 2));
+        assert!(q.push_to(1, 3));
+        assert_eq!(q.deque_len(0), 2);
+        assert_eq!(q.deque_len(1), 1);
+        assert_eq!(q.pending(), 3);
     }
 
     #[test]

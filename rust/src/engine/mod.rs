@@ -37,7 +37,7 @@ pub use batchwise::{
     batched_semantic_passes, walk_per_semantic_batched, walk_per_semantic_batched_fused,
 };
 pub use dispatch::{
-    DispatchStats, GroupTask, ScheduleMode, StealQueue, STREAM_QUEUE_CAP_PER_WORKER,
+    DispatchStats, GroupTask, PushError, ScheduleMode, StealQueue, STREAM_QUEUE_CAP_PER_WORKER,
 };
 pub use functional::ReferenceEngine;
 pub use fused::{FusedEngine, TileScratch};

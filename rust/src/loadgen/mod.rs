@@ -21,9 +21,18 @@
 //! 0), reporting hit rate, gather bytes saved, steals, and p50/p95/p99/
 //! p999 latency side by side — see `cargo bench --bench serving` /
 //! `BENCH_serving.json`.
+//!
+//! [`run_fault_injection`] is the chaos mode (`loadgen --faults`): the
+//! same closed-loop trace against one CPU server with a seeded
+//! [`FaultPlan`] crashing workers, delaying items, and forcing executor
+//! errors — asserting the failure-model invariants: every submit resolves
+//! by its deadline (rows or typed error, no hang), the shutdown join
+//! proves no thread leak, and every *surviving* response row is still
+//! bitwise-equal to the reference oracle.
 
 use crate::coordinator::{
-    LatencyStats, PlanCache, Server, ServerConfig, CPU_MAX_IN_DIM,
+    FaultPlan, LatencyStats, PlanCache, Server, ServerConfig, CPU_MAX_IN_DIM, DEFAULT_DEADLINE,
+    INJECTED_PANIC_MSG,
 };
 use crate::engine::ReferenceEngine;
 use crate::hetgraph::{HetGraph, VId};
@@ -33,7 +42,7 @@ use crate::util::rng::SmallRng;
 use anyhow::Result;
 use rustc_hash::FxHashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Once};
 use std::time::{Duration, Instant};
 
 /// Zipfian sampler over ranks `0..n` (rank 0 hottest): P(i) ∝ (i+1)^-s.
@@ -87,11 +96,29 @@ pub struct LoadConfig {
     /// Trace seed: same seed → byte-identical trace, so cache-on and
     /// cache-off runs face exactly the same traffic.
     pub seed: u64,
+    /// Request deadline in milliseconds; `None` keeps the server default
+    /// ([`DEFAULT_DEADLINE`]).
+    pub deadline_ms: Option<u64>,
 }
 
 impl Default for LoadConfig {
     fn default() -> LoadConfig {
-        LoadConfig { requests: 10_000, concurrency: 4, skew: 1.1, batch: 16, unique: 512, seed: 42 }
+        LoadConfig {
+            requests: 10_000,
+            concurrency: 4,
+            skew: 1.1,
+            batch: 16,
+            unique: 512,
+            seed: 42,
+            deadline_ms: None,
+        }
+    }
+}
+
+impl LoadConfig {
+    /// The deadline servers in this run should enforce.
+    pub fn deadline(&self) -> Duration {
+        self.deadline_ms.map(Duration::from_millis).unwrap_or(DEFAULT_DEADLINE)
     }
 }
 
@@ -123,9 +150,23 @@ pub fn build_trace(targets: &[VId], cfg: &LoadConfig) -> Vec<Vec<VId>> {
     (0..cfg.requests).map(|_| pool[template_zipf.sample(&mut rng)].clone()).collect()
 }
 
+/// Bitwise reference oracle: every target's embedding row from the serial
+/// [`ReferenceEngine`], keyed by vertex. The standard `expected` input for
+/// [`run_load`].
+pub fn reference_rows(
+    g: &Arc<HetGraph>,
+    kind: ModelKind,
+    order: &[VId],
+) -> FxHashMap<VId, Vec<f32>> {
+    let oracle = ReferenceEngine::new(g, ModelConfig::new(kind), CPU_MAX_IN_DIM);
+    let m = oracle.embed_semantics_complete(order);
+    order.iter().enumerate().map(|(i, &v)| (v, m.row(i).to_vec())).collect()
+}
+
 /// What one load run measured. Latencies come from the server's bounded
 /// reservoir (`coordinator::metrics`); cache counters are zero for a
-/// cache-off (or PJRT) server.
+/// cache-off (or PJRT) server; error-class and supervision counters are
+/// zero on a fault-free run.
 #[derive(Debug, Clone)]
 pub struct LoadReport {
     pub label: String,
@@ -146,6 +187,18 @@ pub struct LoadReport {
     pub mismatches: u64,
     /// Whether responses were checked against the reference oracle.
     pub verified: bool,
+    /// Submissions that resolved with rows.
+    pub ok: u64,
+    // One counter per `ServeError` class (submitter-side).
+    pub timeouts: u64,
+    pub shed: u64,
+    pub invalid_targets: u64,
+    pub worker_lost: u64,
+    pub shutdown_rejects: u64,
+    // Supervision events (worker-side).
+    pub worker_panics: u64,
+    pub worker_restarts: u64,
+    pub injected_faults: u64,
 }
 
 impl LoadReport {
@@ -156,6 +209,20 @@ impl LoadReport {
             return 0.0;
         }
         self.tile_hits as f64 / lookups as f64
+    }
+
+    /// Submissions that resolved with a typed error, across all classes.
+    pub fn errors(&self) -> u64 {
+        self.timeouts + self.shed + self.invalid_targets + self.worker_lost + self.shutdown_rejects
+    }
+
+    /// Fraction of submissions that returned rows; 1.0 with no traffic.
+    pub fn availability(&self) -> f64 {
+        let total = self.ok + self.errors();
+        if total == 0 {
+            return 1.0;
+        }
+        self.ok as f64 / total as f64
     }
 
     pub fn to_json(&self) -> Json {
@@ -179,6 +246,16 @@ impl LoadReport {
         j.set("steals", self.steals.into());
         j.set("verified", self.verified.into());
         j.set("mismatches", self.mismatches.into());
+        j.set("ok", self.ok.into());
+        j.set("availability", self.availability().into());
+        j.set("timeouts", self.timeouts.into());
+        j.set("shed", self.shed.into());
+        j.set("invalid_targets", self.invalid_targets.into());
+        j.set("worker_lost", self.worker_lost.into());
+        j.set("shutdown_rejects", self.shutdown_rejects.into());
+        j.set("worker_panics", self.worker_panics.into());
+        j.set("worker_restarts", self.worker_restarts.into());
+        j.set("injected_faults", self.injected_faults.into());
         j
     }
 }
@@ -187,7 +264,10 @@ impl LoadReport {
 /// clients (request `i` belongs to client `i % concurrency`, so the
 /// partition is deterministic). When `expected` is given, every response
 /// row is compared bitwise against it and mismatches are counted — the
-/// harness then doubles as an end-to-end correctness check.
+/// harness then doubles as an end-to-end correctness check. Submissions
+/// that resolve with a typed `ServeError` are *not* mismatches: they are
+/// tallied per class from the server's metrics (fault-free callers assert
+/// [`LoadReport::errors`] `== 0`).
 pub fn run_load(
     server: &Server,
     trace: &[Vec<VId>],
@@ -213,12 +293,10 @@ pub fn run_load(
                                 }
                             }
                         }
-                        // A submit error (server shut down mid-run) counts
-                        // as a whole-request mismatch: the harness must
-                        // never report a clean run it didn't complete.
-                        Err(_) => {
-                            mismatches.fetch_add(req.len() as u64, Ordering::Relaxed);
-                        }
+                        // Typed error: already counted by class in the
+                        // server metrics; the closed loop moves on to its
+                        // next request.
+                        Err(_) => {}
                     }
                 }
             });
@@ -242,6 +320,15 @@ pub fn run_load(
         steals: server.steal_count().unwrap_or(0),
         mismatches: mismatches.load(Ordering::Relaxed),
         verified: expected.is_some(),
+        ok: m.ok_responses.load(Ordering::Relaxed),
+        timeouts: m.timeouts.load(Ordering::Relaxed),
+        shed: m.shed.load(Ordering::Relaxed),
+        invalid_targets: m.invalid_targets.load(Ordering::Relaxed),
+        worker_lost: m.worker_lost.load(Ordering::Relaxed),
+        shutdown_rejects: m.shutdown_rejects.load(Ordering::Relaxed),
+        worker_panics: m.worker_panics.load(Ordering::Relaxed),
+        worker_restarts: m.worker_restarts.load(Ordering::Relaxed),
+        injected_faults: m.injected_faults.load(Ordering::Relaxed),
     }
 }
 
@@ -276,11 +363,8 @@ pub fn run_cache_comparison(
 ) -> Result<CacheComparison> {
     let order = g.target_vertices();
     let trace = build_trace(&order, cfg);
-    let expected: Option<FxHashMap<VId, Vec<f32>>> = verify.then(|| {
-        let oracle = ReferenceEngine::new(g, ModelConfig::new(kind), CPU_MAX_IN_DIM);
-        let m = oracle.embed_semantics_complete(&order);
-        order.iter().enumerate().map(|(i, &v)| (v, m.row(i).to_vec())).collect()
-    });
+    let expected: Option<FxHashMap<VId, Vec<f32>>> =
+        verify.then(|| reference_rows(g, kind, &order));
     let plans = Arc::new(PlanCache::new());
     let mut run = |label: &str, bytes: usize| -> Result<LoadReport> {
         let server = Server::start(
@@ -289,6 +373,7 @@ pub fn run_cache_comparison(
                 channels,
                 tile_cache_bytes: bytes,
                 plans: Arc::clone(&plans),
+                default_deadline: cfg.deadline(),
                 ..ServerConfig::cpu(kind)
             },
         )?;
@@ -299,6 +384,72 @@ pub fn run_cache_comparison(
     let on = run("cache-on", cache_bytes)?;
     let off = run("cache-off", 0)?;
     Ok(CacheComparison { on, off })
+}
+
+static QUIET_PANIC_HOOK: Once = Once::new();
+
+/// Silence the default panic printout for *injected* panics only
+/// (process-wide, installed once): chaos runs crash workers on purpose and
+/// the stock hook would bury real output under expected backtraces. Any
+/// other panic still reaches the previously installed hook.
+pub fn install_quiet_panic_hook() {
+    QUIET_PANIC_HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let injected = info
+                .payload()
+                .downcast_ref::<&'static str>()
+                .is_some_and(|s| *s == INJECTED_PANIC_MSG)
+                || info
+                    .payload()
+                    .downcast_ref::<String>()
+                    .is_some_and(|s| s == INJECTED_PANIC_MSG);
+            if !injected {
+                prev(info);
+            }
+        }));
+    });
+}
+
+/// Chaos mode: one CPU server under a seeded [`FaultPlan`], driven by the
+/// standard closed-loop Zipfian trace. The run itself asserts nothing —
+/// it *measures* — but its structure enforces the two liveness
+/// invariants: the closed loop only terminates if every submit resolves
+/// (no hang), and `server.shutdown()` joins every worker and the
+/// supervisor (no thread leak; a stuck thread hangs the harness here
+/// rather than leaking silently). Callers assert on the returned
+/// [`LoadReport`]: `mismatches == 0` (surviving rows bitwise-equal to the
+/// oracle) and `ok + errors() == requests` (every submission accounted
+/// for).
+pub fn run_fault_injection(
+    g: &Arc<HetGraph>,
+    kind: ModelKind,
+    channels: usize,
+    cache_bytes: usize,
+    cfg: &LoadConfig,
+    faults: FaultPlan,
+    restart_budget: u32,
+    verify: bool,
+) -> Result<LoadReport> {
+    install_quiet_panic_hook();
+    let order = g.target_vertices();
+    let trace = build_trace(&order, cfg);
+    let expected: Option<FxHashMap<VId, Vec<f32>>> =
+        verify.then(|| reference_rows(g, kind, &order));
+    let server = Server::start(
+        Arc::clone(g),
+        ServerConfig {
+            channels,
+            tile_cache_bytes: cache_bytes,
+            default_deadline: cfg.deadline(),
+            restart_budget,
+            faults: faults.is_active().then_some(faults),
+            ..ServerConfig::cpu(kind)
+        },
+    )?;
+    let report = run_load(&server, &trace, cfg, expected.as_ref(), "chaos");
+    server.shutdown();
+    Ok(report)
 }
 
 #[cfg(test)]
@@ -372,6 +523,10 @@ mod tests {
         assert!(cmp.on.verified && cmp.off.verified);
         assert_eq!(cmp.on.requests, 120);
         assert_eq!(cmp.off.requests, 120);
+        assert_eq!(cmp.on.errors(), 0, "fault-free run must not shed or time out");
+        assert_eq!(cmp.off.errors(), 0);
+        assert_eq!(cmp.on.ok, 120, "every submission resolves with rows");
+        assert!((cmp.on.availability() - 1.0).abs() < 1e-12);
         assert!(
             cmp.on.tile_hits > 0,
             "12 hot templates over 120 requests must produce hits (misses={})",
@@ -381,5 +536,6 @@ mod tests {
         assert_eq!(cmp.off.tile_hits + cmp.off.tile_misses, 0, "cache-off must not touch a cache");
         let j = cmp.to_json();
         assert!(j.get("cache_on").is_some() && j.get("cache_off").is_some());
+        assert!(cmp.on.to_json().get("availability").is_some());
     }
 }

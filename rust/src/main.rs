@@ -16,14 +16,22 @@
 //! bench-table <fig2|fig7|fig8|fig9|table3|table4|reuse|serving>  paper table
 //! serve   [--model M] [--scale S] [--cpu]  demo serving loop (PJRT needs
 //!         [--cache-mb N] [--no-cache]      artifacts; --cpu needs none)
+//!         [--deadline-ms N]
 //! loadgen <dataset> [--model M] [--scale S] closed-loop Zipfian load vs
 //!         [--requests N] [--concurrency C]  `serve --cpu`, cache-on vs
 //!         [--skew S] [--batch B]            cache-off on the identical
 //!         [--unique U] [--seed X]           trace; prints the serving
 //!         [--channels N] [--cache-mb N]     table, optional --json OUT,
 //!         [--verify] [--min-hit-rate F]     exits 1 on any bitwise
-//!         [--json PATH]                     mismatch or hit-rate miss
+//!         [--json PATH] [--deadline-ms N]   mismatch, hit-rate miss, or
+//!         [--faults SPEC]                   typed serve error
+//!         [--restart-budget N]
 //! ```
+//!
+//! `loadgen --faults panic:0.01,delay:0.05[,error:R,delay_ms:D,seed:S]`
+//! switches to chaos mode: one CPU server under seeded deterministic fault
+//! injection; exits 1 on any hang, unresolved submission, or bitwise
+//! mismatch among surviving responses (see `loadgen::run_fault_injection`).
 
 use std::process::exit;
 use std::time::Instant;
@@ -44,9 +52,11 @@ fn usage() -> ! {
          datasets: acm imdb dblp am fb | models: rgcn rgat nars\n\
          modes: -B -S -P -O | flags: --scale S --model M --mode X --threads N --cpu\n\
          \x20       --dispatch static|streaming|both (engine subcommand)\n\
-         \x20       --cache-mb N --no-cache (serve), loadgen: --requests N --concurrency C\n\
-         \x20       --skew S --batch B --unique U --seed X --channels N --verify\n\
-         \x20       --min-hit-rate F --json PATH"
+         \x20       --cache-mb N --no-cache --deadline-ms N (serve)\n\
+         \x20       loadgen: --requests N --concurrency C --skew S --batch B --unique U\n\
+         \x20       --seed X --channels N --verify --min-hit-rate F --json PATH\n\
+         \x20       --deadline-ms N --faults panic:R,delay:R,error:R,delay_ms:D,seed:S\n\
+         \x20       --restart-budget N"
     );
     exit(2)
 }
@@ -396,6 +406,11 @@ fn main() {
             if rest.iter().any(|a| a == "--no-cache") {
                 cfg.tile_cache_bytes = 0;
             }
+            // Request deadline: every submit resolves (rows or typed
+            // ServeError) within it.
+            if let Some(ms) = flag(rest, "--deadline-ms").and_then(|s| s.parse::<u64>().ok()) {
+                cfg.default_deadline = std::time::Duration::from_millis(ms);
+            }
             let server = match tlv_hgnn::coordinator::Server::start(
                 std::sync::Arc::clone(&g),
                 cfg,
@@ -430,6 +445,18 @@ fn main() {
             let verify = rest.iter().any(|a| a == "--verify");
             let min_hit_rate: Option<f64> =
                 flag(rest, "--min-hit-rate").and_then(|s| s.parse().ok());
+            let faults = flag(rest, "--faults").map(|spec| {
+                match tlv_hgnn::coordinator::FaultPlan::parse(&spec) {
+                    Ok(p) => p,
+                    Err(e) => {
+                        eprintln!("bad --faults spec: {e}");
+                        usage()
+                    }
+                }
+            });
+            let restart_budget: u32 = flag(rest, "--restart-budget")
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(tlv_hgnn::coordinator::DEFAULT_RESTART_BUDGET);
             let defaults = tlv_hgnn::loadgen::LoadConfig::default();
             let cfg = tlv_hgnn::loadgen::LoadConfig {
                 requests: flag(rest, "--requests")
@@ -444,8 +471,97 @@ fn main() {
                     .and_then(|s| s.parse().ok())
                     .unwrap_or(defaults.unique),
                 seed: flag(rest, "--seed").and_then(|s| s.parse().ok()).unwrap_or(defaults.seed),
+                deadline_ms: flag(rest, "--deadline-ms").and_then(|s| s.parse().ok()),
             };
             let g = std::sync::Arc::new(d.load(scale));
+            if let Some(faults) = faults {
+                // Chaos mode: one CPU server under seeded deterministic
+                // fault injection. Exit 1 on any unresolved submission or
+                // bitwise mismatch; a hang or leaked thread never reaches
+                // the exit at all (the closed loop / shutdown join would
+                // block), which is what makes this a CI-able smoke test.
+                println!(
+                    "{} {} @ scale {scale}: chaos, {} reqs, {} clients, {channels} channels, \
+                     faults panic:{} delay:{} error:{} (seed {}), restart budget \
+                     {restart_budget}{}",
+                    d.name(),
+                    kind.name(),
+                    cfg.requests,
+                    cfg.concurrency,
+                    faults.panic_rate,
+                    faults.delay_rate,
+                    faults.error_rate,
+                    faults.seed,
+                    if verify { ", verified" } else { "" },
+                );
+                let report = match tlv_hgnn::loadgen::run_fault_injection(
+                    &g,
+                    kind,
+                    channels,
+                    cache_mb << 20,
+                    &cfg,
+                    faults,
+                    restart_budget,
+                    verify,
+                ) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        eprintln!("chaos run failed: {e:#}");
+                        exit(1);
+                    }
+                };
+                println!(
+                    "  resolved {}/{} ok ({} availability), p50 {}us p99 {}us",
+                    report.ok,
+                    report.requests,
+                    pct(report.availability()),
+                    report.latency.p50_us,
+                    report.latency.p99_us,
+                );
+                println!(
+                    "  errors: timeout {} shed {} invalid {} lost {} shutdown {}",
+                    report.timeouts,
+                    report.shed,
+                    report.invalid_targets,
+                    report.worker_lost,
+                    report.shutdown_rejects,
+                );
+                println!(
+                    "  injection: {} faults fired, {} worker panics, {} restarts",
+                    report.injected_faults, report.worker_panics, report.worker_restarts,
+                );
+                if verify {
+                    println!(
+                        "  bitwise: {} mismatched rows among surviving responses",
+                        report.mismatches
+                    );
+                }
+                if let Some(path) = flag(rest, "--json") {
+                    if let Err(e) = std::fs::write(&path, report.to_json().render() + "\n") {
+                        eprintln!("write {path}: {e}");
+                        exit(1);
+                    }
+                    println!("wrote {path}");
+                }
+                let mut failed = false;
+                if report.mismatches > 0 {
+                    eprintln!("BITWISE FAIL: {} mismatched surviving rows", report.mismatches);
+                    failed = true;
+                }
+                if report.ok + report.errors() != report.requests {
+                    eprintln!(
+                        "RESOLUTION FAIL: {} ok + {} errors != {} requests",
+                        report.ok,
+                        report.errors(),
+                        report.requests
+                    );
+                    failed = true;
+                }
+                if failed {
+                    exit(1);
+                }
+                return;
+            }
             println!(
                 "{} {} @ scale {scale}: {} reqs x {} targets, skew {}, {} templates, \
                  {} clients, {channels} channels, cache {cache_mb} MiB{}",
@@ -485,6 +601,15 @@ fn main() {
                 eprintln!(
                     "BITWISE FAIL: {} mismatched rows (on) / {} (off)",
                     cmp.on.mismatches, cmp.off.mismatches
+                );
+                failed = true;
+            }
+            // Fault-free runs must resolve every submission with rows.
+            if cmp.on.errors() + cmp.off.errors() > 0 {
+                eprintln!(
+                    "SERVE-ERROR FAIL: {} typed errors (on) / {} (off) on a fault-free run",
+                    cmp.on.errors(),
+                    cmp.off.errors()
                 );
                 failed = true;
             }

@@ -304,7 +304,7 @@ pub fn reuse_table() -> Table {
 pub fn serving_table(cmp: &crate::loadgen::CacheComparison) -> Table {
     let mut t = Table::new(&[
         "config", "reqs", "rps", "hit%", "saved", "steals", "p50us", "p95us", "p99us", "p999us",
-        "ok",
+        "avail", "ok",
     ]);
     for r in [&cmp.on, &cmp.off] {
         t.row(&[
@@ -318,6 +318,7 @@ pub fn serving_table(cmp: &crate::loadgen::CacheComparison) -> Table {
             r.latency.p95_us.to_string(),
             r.latency.p99_us.to_string(),
             r.latency.p999_us.to_string(),
+            pct(r.availability()),
             if !r.verified {
                 "unchecked".into()
             } else if r.mismatches == 0 {

@@ -1,0 +1,179 @@
+//! Chaos property tests: the serving failure model under seeded
+//! deterministic fault injection.
+//!
+//! The invariants (ISSUE 7 acceptance):
+//!
+//! * **No hang** — every `submit` resolves within its deadline, with rows
+//!   or exactly one typed `ServeError`, across models × channel counts
+//!   while workers panic, stall, and fail underneath.
+//! * **No thread leak** — `Server::shutdown()` joins every worker (crashed
+//!   workers' replacements included) and the supervisor; a stuck thread
+//!   hangs the test rather than leaking silently.
+//! * **Surviving rows are bitwise** — a response that does arrive is
+//!   bitwise-equal to the `ReferenceEngine` oracle; chaos may delete
+//!   answers, never corrupt them.
+//! * **Fault-free runs are clean** — the same harness with an inactive
+//!   plan produces zero errors, zero shed, zero timeouts, and bitwise
+//!   rows: the failure machinery costs nothing when nothing fails.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+use tlv_hgnn::coordinator::{FaultPlan, ServeError, Server, ServerConfig};
+use tlv_hgnn::hetgraph::{HetGraph, HetGraphBuilder, VId};
+use tlv_hgnn::loadgen::{install_quiet_panic_hook, run_fault_injection, LoadConfig};
+use tlv_hgnn::model::ModelKind;
+use tlv_hgnn::util::SmallRng;
+
+/// Same synthetic heterogeneous graph shape as `coordinator_e2e`: two
+/// vertex types (100 P targets @64, 150 A @64), AP + PP semantics.
+fn graph(seed: u64) -> HetGraph {
+    let mut b = HetGraphBuilder::new("chaos");
+    let p = b.add_vertex_type("P", 100, 64);
+    let a = b.add_vertex_type("A", 150, 64);
+    let s0 = b.add_semantic("AP", a, p);
+    let s1 = b.add_semantic("PP", p, p);
+    b.set_target_type(p);
+    let mut rng = SmallRng::seed_from_u64(seed);
+    for t in 0..100u32 {
+        for _ in 0..rng.gen_range(10) {
+            b.add_edge(VId(100 + rng.gen_range(150) as u32), VId(t), s0);
+        }
+        for _ in 0..rng.gen_range(4) {
+            let s = rng.gen_range(100) as u32;
+            if s != t {
+                b.add_edge(VId(s), VId(t), s1);
+            }
+        }
+    }
+    b.build().unwrap()
+}
+
+fn chaos_load() -> LoadConfig {
+    LoadConfig {
+        requests: 120,
+        concurrency: 4,
+        skew: 1.2,
+        batch: 8,
+        unique: 16,
+        seed: 7,
+        deadline_ms: Some(2_000),
+    }
+}
+
+#[test]
+fn chaos_matrix_every_submission_resolves_bitwise_or_typed() {
+    // 3 models × channels {1, 2, 8} under panic + delay + executor-error
+    // injection. The closed loop in run_fault_injection only returns if
+    // every submit resolved (no hang); the shutdown join inside it proves
+    // no thread leak; the assertions pin the rest.
+    let g = Arc::new(graph(41));
+    let cfg = chaos_load();
+    let faults = FaultPlan::parse("panic:0.05,delay:0.10,error:0.05,delay_ms:1").unwrap();
+    for kind in [ModelKind::Rgcn, ModelKind::Rgat, ModelKind::Nars] {
+        for channels in [1usize, 2, 8] {
+            let r = run_fault_injection(&g, kind, channels, 8 << 20, &cfg, faults, 64, true)
+                .expect("chaos run");
+            let tag = format!("{kind:?} x {channels}ch");
+            assert_eq!(r.mismatches, 0, "{tag}: surviving rows must stay bitwise");
+            assert_eq!(
+                r.ok + r.errors(),
+                r.requests,
+                "{tag}: every submission must resolve exactly once \
+                 (ok={} timeouts={} shed={} lost={} shutdown={})",
+                r.ok,
+                r.timeouts,
+                r.shed,
+                r.worker_lost,
+                r.shutdown_rejects,
+            );
+            assert!(r.injected_faults > 0, "{tag}: the plan must actually fire");
+            assert!(r.worker_restarts <= 64, "{tag}: restarts bounded by the budget");
+            assert!(r.ok > 0, "{tag}: chaos at these rates must not kill every request");
+        }
+    }
+}
+
+#[test]
+fn fault_free_harness_run_is_bitwise_clean_with_zero_error_counts() {
+    // FaultPlan::default() is inactive: the identical harness must behave
+    // exactly like production serving — all rows, no error classes, no
+    // injection, no supervision events.
+    let g = Arc::new(graph(43));
+    let r = run_fault_injection(
+        &g,
+        ModelKind::Rgcn,
+        2,
+        8 << 20,
+        &chaos_load(),
+        FaultPlan::default(),
+        8,
+        true,
+    )
+    .expect("fault-free run");
+    assert_eq!(r.ok, r.requests, "every submission returns rows");
+    assert_eq!(r.errors(), 0);
+    assert_eq!(r.timeouts, 0, "fault-free runs must not time out");
+    assert_eq!(r.shed, 0, "fault-free runs must not shed");
+    assert_eq!(r.mismatches, 0, "fault-free rows are bitwise");
+    assert_eq!(r.injected_faults, 0);
+    assert_eq!(r.worker_panics, 0);
+    assert_eq!(r.worker_restarts, 0);
+    assert!((r.availability() - 1.0).abs() < 1e-12);
+}
+
+#[test]
+fn respawned_workers_keep_serving_bitwise() {
+    // Heavy crash rate with a deep restart budget: workers die and respawn
+    // repeatedly mid-stream, yet the stream completes, restarts show up in
+    // the metrics, and surviving rows never drift from the oracle.
+    let g = Arc::new(graph(47));
+    let faults = FaultPlan { panic_rate: 0.3, ..FaultPlan::default() };
+    let r = run_fault_injection(&g, ModelKind::Rgat, 2, 8 << 20, &chaos_load(), faults, 1024, true)
+        .expect("respawn run");
+    assert_eq!(r.mismatches, 0, "rows under crash-respawn churn must stay bitwise");
+    assert_eq!(r.ok + r.errors(), r.requests);
+    assert!(r.worker_panics > 0, "30% panic rate over 120 requests must crash workers");
+    assert!(r.worker_restarts > 0, "the supervisor must have respawned workers");
+    assert!(r.ok > 0, "respawns must restore enough capacity to serve");
+}
+
+#[test]
+fn restart_budget_exhaustion_degrades_to_typed_errors() {
+    // channels=1, budget=0, panic on every item: the first submission gets
+    // the panicking worker's WorkerLost reply; the worker is NOT respawned,
+    // so the second submission's part is never executed and resolves as a
+    // deadline Timeout. Degraded, typed, and hang-free — never stuck.
+    install_quiet_panic_hook();
+    let g = Arc::new(graph(53));
+    let faults = FaultPlan { panic_rate: 1.0, ..FaultPlan::default() };
+    let cfg = ServerConfig {
+        channels: 1,
+        restart_budget: 0,
+        default_deadline: Duration::from_millis(50),
+        faults: Some(faults),
+        ..ServerConfig::cpu(ModelKind::Rgcn)
+    };
+    let server = Server::start(Arc::clone(&g), cfg).unwrap();
+    match server.submit(vec![VId(0)]) {
+        Err(ServeError::WorkerLost { detail }) => {
+            assert!(detail.contains("panicked"), "detail: {detail}");
+        }
+        other => panic!("expected WorkerLost, got {other:?}"),
+    }
+    match server.submit(vec![VId(1)]) {
+        Err(ServeError::Timeout { .. }) => {}
+        other => panic!("expected Timeout on the dead channel, got {other:?}"),
+    }
+    let metrics = Arc::clone(&server.metrics);
+    server.shutdown(); // joins the dead worker's handle + supervisor
+    assert_eq!(metrics.worker_panics.load(Ordering::Relaxed), 1);
+    assert_eq!(metrics.worker_restarts.load(Ordering::Relaxed), 0, "budget 0 = no respawns");
+    assert_eq!(
+        metrics.workers_abandoned.load(Ordering::Relaxed),
+        1,
+        "the crash must be recorded as abandoned"
+    );
+    assert_eq!(metrics.worker_lost.load(Ordering::Relaxed), 1);
+    assert_eq!(metrics.timeouts.load(Ordering::Relaxed), 1);
+}

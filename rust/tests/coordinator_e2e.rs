@@ -3,8 +3,10 @@
 //! tests skip (with a message) when artifacts are not built; the CPU
 //! executor tests run everywhere and are held to bitwise equality.
 
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
-use tlv_hgnn::coordinator::{Server, ServerConfig};
+use std::time::Duration;
+use tlv_hgnn::coordinator::{FaultPlan, ServeError, Server, ServerConfig};
 use tlv_hgnn::engine::ReferenceEngine;
 use tlv_hgnn::hetgraph::{HetGraph, HetGraphBuilder, VId};
 use tlv_hgnn::model::{ModelConfig, ModelKind};
@@ -193,6 +195,124 @@ fn cpu_executor_concurrent_requests_complete() {
         h.join().unwrap();
     }
     assert_eq!(server.metrics.requests.load(std::sync::atomic::Ordering::Relaxed), 4);
+}
+
+#[test]
+fn invalid_target_rejected_up_front() {
+    // A target outside the plan's vertex space must cost a typed
+    // rejection before any work is enqueued — not an out-of-bounds panic
+    // inside the router (the graph has 250 vertices).
+    let g = Arc::new(graph(29));
+    let server = Server::start(Arc::clone(&g), ServerConfig::cpu(ModelKind::Rgcn)).unwrap();
+    let bad = VId(10_000_000);
+    match server.submit(vec![VId(0), bad]) {
+        Err(ServeError::InvalidTarget { vid }) => assert_eq!(vid, bad),
+        other => panic!("expected InvalidTarget, got {other:?}"),
+    }
+    assert_eq!(server.metrics.invalid_targets.load(Ordering::Relaxed), 1);
+    assert_eq!(server.metrics.ok_responses.load(Ordering::Relaxed), 0);
+    // The server is unharmed: a valid request still serves.
+    assert!(server.submit(vec![VId(0)]).is_ok());
+    server.shutdown();
+}
+
+#[test]
+fn deadline_timeout_resolves_instead_of_hanging() {
+    // Injected 200ms delays against a 20ms deadline: the submission must
+    // resolve as a typed Timeout at ~20ms, not block on the slow worker.
+    let g = Arc::new(graph(31));
+    let faults = FaultPlan {
+        delay_rate: 1.0,
+        delay: Duration::from_millis(200),
+        ..FaultPlan::default()
+    };
+    let cfg = ServerConfig {
+        channels: 1,
+        default_deadline: Duration::from_millis(20),
+        faults: Some(faults),
+        ..ServerConfig::cpu(ModelKind::Rgcn)
+    };
+    let server = Server::start(Arc::clone(&g), cfg).unwrap();
+    let t0 = std::time::Instant::now();
+    match server.submit((0..10).map(VId).collect()) {
+        Err(ServeError::Timeout { deadline }) => {
+            assert_eq!(deadline, Duration::from_millis(20));
+        }
+        other => panic!("expected Timeout, got {other:?}"),
+    }
+    assert!(t0.elapsed() < Duration::from_secs(2), "timeout must fire near the deadline");
+    assert_eq!(server.metrics.timeouts.load(Ordering::Relaxed), 1);
+    // Per-request override beats the server default: generous deadline,
+    // same slow worker → rows.
+    let resp = server.submit_with_deadline(vec![VId(0)], Duration::from_secs(30)).unwrap();
+    assert_eq!(resp.embeddings.len(), 1);
+    server.shutdown();
+}
+
+#[test]
+fn overload_sheds_with_typed_error() {
+    // admission_threshold = 0: the very first submission sees the queue
+    // "at" threshold and is shed with Overloaded instead of queueing.
+    let g = Arc::new(graph(37));
+    let cfg =
+        ServerConfig { admission_threshold: 0, ..ServerConfig::cpu(ModelKind::Rgat) };
+    let server = Server::start(Arc::clone(&g), cfg).unwrap();
+    match server.submit(vec![VId(0)]) {
+        Err(ServeError::Overloaded { depth }) => assert_eq!(depth, 0),
+        other => panic!("expected Overloaded, got {other:?}"),
+    }
+    assert_eq!(server.metrics.shed.load(Ordering::Relaxed), 1);
+    assert_eq!(server.queue_depth(), Some(0), "shed request must not leave queued parts");
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_with_inflight_never_strands_a_submitter() {
+    // begin_shutdown mid-stream: every concurrent submission must resolve
+    // as rows (items enqueued before the close drain — the StealQueue
+    // close contract) or as a typed ShuttingDown rejection. Nothing hangs,
+    // nothing gets a non-shutdown error. Injected 2ms delays guarantee the
+    // stream is still in flight when the shutdown lands.
+    let g = Arc::new(graph(23));
+    let faults = FaultPlan {
+        delay_rate: 1.0,
+        delay: Duration::from_millis(2),
+        ..FaultPlan::default()
+    };
+    let cfg =
+        ServerConfig { channels: 2, faults: Some(faults), ..ServerConfig::cpu(ModelKind::Rgcn) };
+    let server = Arc::new(Server::start(Arc::clone(&g), cfg).unwrap());
+    let targets: Vec<VId> = (0..40).map(VId).collect();
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            let server = Arc::clone(&server);
+            let targets = targets.clone();
+            s.spawn(move || {
+                for _ in 0..10 {
+                    match server.submit(targets.clone()) {
+                        Ok(resp) => assert_eq!(resp.embeddings.len(), targets.len()),
+                        Err(ServeError::ShuttingDown) => {}
+                        Err(e) => panic!("unexpected error during shutdown: {e}"),
+                    }
+                }
+            });
+        }
+        // 40 requests x 2 delayed parts over 2 workers needs ≥ 80ms of
+        // forced delay, so this lands mid-stream deterministically.
+        std::thread::sleep(Duration::from_millis(10));
+        server.begin_shutdown();
+    });
+    let m = &server.metrics;
+    let ok = m.ok_responses.load(Ordering::Relaxed);
+    let rejected = m.shutdown_rejects.load(Ordering::Relaxed);
+    assert_eq!(ok + rejected, 40, "every submission resolved as rows or ShuttingDown");
+    assert!(rejected > 0, "shutdown must have raced some submissions");
+    assert_eq!(m.timeouts.load(Ordering::Relaxed), 0);
+    assert_eq!(m.worker_lost.load(Ordering::Relaxed), 0);
+    match Arc::try_unwrap(server) {
+        Ok(s) => s.shutdown(), // joins workers + supervisor: no thread leak
+        Err(_) => panic!("server still shared"),
+    }
 }
 
 #[test]
