@@ -264,6 +264,54 @@ fn main() {
         ],
     );
 
+    // ---- Out-of-core budget sweep: tiered feature storage + prefetch ----
+    // Streaming embed with the projected feature table capped at a
+    // fraction of its full bytes (engine::storage). 100% stays in RAM
+    // (pure bypass accounting); smaller budgets gather through the
+    // file-backed chunk pool with dispatcher-driven prefetch. Every point
+    // must stay bitwise vs the in-RAM baseline.
+    let sweep = tlv_hgnn::report::run_budget_sweep(
+        Dataset::Am,
+        ModelKind::Rgcn,
+        0.05,
+        nt,
+        &[1.0, 0.5, 0.25, 0.10],
+    );
+    let mut budget_json = Vec::new();
+    let mut sweep_bitwise = true;
+    for p in &sweep {
+        sweep_bitwise &= p.bitwise;
+        println!(
+            "budget {:>4.0}%: {:>8.2} ms  tier {:>4}  prefetch hit {:>5.1}%  \
+             {} evictions  {}",
+            p.fraction * 100.0,
+            p.elapsed_ms,
+            if p.spilled { "file" } else { "ram" },
+            p.stats.hit_rate() * 100.0,
+            p.stats.chunk_evictions,
+            if p.bitwise { "bitwise" } else { "MISMATCH" },
+        );
+        let mut o = Json::obj();
+        o.set("fraction", p.fraction.into());
+        o.set("budget_bytes", p.stats.budget_bytes.into());
+        o.set("spilled", p.spilled.into());
+        o.set("elapsed_ms", p.elapsed_ms.into());
+        o.set("embeddings_per_s", (targets / (p.elapsed_ms / 1e3)).into());
+        o.set("prefetch_hit_rate", p.stats.hit_rate().into());
+        o.set("prefetch_hits", p.stats.prefetch_hits.into());
+        o.set("prefetch_misses", p.stats.prefetch_misses.into());
+        o.set("bypasses", p.stats.bypasses.into());
+        o.set("chunk_evictions", p.stats.chunk_evictions.into());
+        o.set("resident_bytes", p.stats.resident_bytes.into());
+        o.set("bitwise", p.bitwise.into());
+        budget_json.push(o);
+    }
+    println!(
+        "  -> budget sweep: {} points, all bitwise: {}",
+        sweep.len(),
+        if sweep_bitwise { "PASS" } else { "FAIL" }
+    );
+
     // ---- Depth-3 multi-layer: shared plan vs per-layer rebuild ----
     let ml_shared = bench("multilayer depth-3, shared plan (fused)", 3, || {
         let mut st = state.clone();
@@ -367,6 +415,13 @@ fn main() {
          grouping-cost : aggregation-cost ratio"
             .into(),
     );
+    targets_json.set(
+        "budget_sweep",
+        "tiered feature storage must stay bitwise at every budget \
+         (100% -> 10%) with a nonzero prefetch hit rate once spilled; \
+         the slowdown at 10% bounds the cost of running out-of-core"
+            .into(),
+    );
 
     let mut out = Json::obj();
     out.set("generated_by", "cargo bench --bench hotpath".into());
@@ -383,6 +438,8 @@ fn main() {
     out.set("dispatch_steals", (dispatch_stats.steals as f64).into());
     out.set("dispatch_stolen_fraction", dispatch_stats.stolen_fraction().into());
     out.set("dispatch_queue_high_water", (dispatch_stats.high_water as f64).into());
+    out.set("budget_sweep", Json::Arr(budget_json));
+    out.set("budget_sweep_bitwise", sweep_bitwise.into());
     out.set("results", Json::Arr(results));
     println!(
         "acceptance: fused walk speedup {:.2}x vs target >= 3.0x: {}",

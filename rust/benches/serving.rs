@@ -34,6 +34,7 @@ fn main() {
         unique: 512,
         seed: 42,
         deadline_ms: None,
+        mem_budget_bytes: None,
     };
     let g = Arc::new(dataset.load(scale));
     println!(

@@ -10,7 +10,7 @@
 //! sample of the whole stream.
 
 use super::request::ServeError;
-use crate::engine::TileCacheOutcome;
+use crate::engine::{StorageStats, TileCacheOutcome};
 use crate::util::rng::SmallRng;
 use crate::util::table::human_bytes;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -101,6 +101,14 @@ pub struct Metrics {
     pub workers_abandoned: AtomicU64,
     /// Faults the injection plan actually fired (0 without `--faults`).
     pub injected_faults: AtomicU64,
+    // Storage-tier gauges (engine::storage; all zero without
+    // `--mem-budget-mb`). Stored as *snapshots* of the tier's cumulative
+    // `StorageStats` — `record_storage` overwrites rather than adds.
+    pub feature_resident_bytes: AtomicU64,
+    pub feature_budget_bytes: AtomicU64,
+    pub feature_prefetch_hits: AtomicU64,
+    pub feature_prefetch_misses: AtomicU64,
+    pub feature_bypasses: AtomicU64,
     latencies_us: Mutex<Reservoir>,
 }
 
@@ -175,6 +183,25 @@ impl Metrics {
         self.tile_bypass.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Overwrite the storage-tier gauges with a fresh snapshot of the
+    /// tier's cumulative [`StorageStats`] (store, not add — the stats are
+    /// lifetime counters of the tier, so adding would double-count).
+    pub fn record_storage(&self, s: &StorageStats) {
+        self.feature_resident_bytes.store(s.resident_bytes, Ordering::Relaxed);
+        self.feature_budget_bytes.store(s.budget_bytes, Ordering::Relaxed);
+        self.feature_prefetch_hits.store(s.prefetch_hits, Ordering::Relaxed);
+        self.feature_prefetch_misses.store(s.prefetch_misses, Ordering::Relaxed);
+        self.feature_bypasses.store(s.bypasses, Ordering::Relaxed);
+    }
+
+    /// Bytes currently resident across the feature pool *and* every
+    /// worker's tile cache — the one number the unified
+    /// `engine::storage::MemoryBudget` accounting bounds.
+    pub fn resident_bytes_total(&self) -> u64 {
+        self.feature_resident_bytes.load(Ordering::Relaxed)
+            + self.tile_cached_bytes.load(Ordering::Relaxed)
+    }
+
     /// Hits over cache-eligible executions (bypasses excluded); 0 when the
     /// cache never ran.
     pub fn tile_hit_rate(&self) -> f64 {
@@ -246,6 +273,23 @@ impl Metrics {
                 self.tile_evictions.load(Ordering::Relaxed),
                 human_bytes(self.tile_cached_bytes.load(Ordering::Relaxed)),
                 human_bytes(self.tile_gather_bytes_saved.load(Ordering::Relaxed)),
+            ));
+        }
+        if self.feature_budget_bytes.load(Ordering::Relaxed) > 0 {
+            let hits = self.feature_prefetch_hits.load(Ordering::Relaxed);
+            let misses = self.feature_prefetch_misses.load(Ordering::Relaxed);
+            let looked = hits + misses;
+            let rate = if looked == 0 { 0.0 } else { hits as f64 / looked as f64 };
+            s.push_str(&format!(
+                " storage: budget={} feature_resident={} resident_total={} \
+                 prefetch_hit_rate={:.1}% hits={} misses={} bypasses={}",
+                human_bytes(self.feature_budget_bytes.load(Ordering::Relaxed)),
+                human_bytes(self.feature_resident_bytes.load(Ordering::Relaxed)),
+                human_bytes(self.resident_bytes_total()),
+                rate * 100.0,
+                hits,
+                misses,
+                self.feature_bypasses.load(Ordering::Relaxed),
             ));
         }
         if self.errors_total() > 0 || self.worker_panics.load(Ordering::Relaxed) > 0 {
@@ -391,6 +435,35 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("faults: avail=37.50%"), "{s}");
         assert!(s.contains("timeout=1") && s.contains("lost=1"), "{s}");
+    }
+
+    #[test]
+    fn storage_gauges_store_snapshots_not_sums() {
+        let m = Metrics::default();
+        let snap = StorageStats {
+            prefetch_hits: 10,
+            prefetch_misses: 5,
+            rows_gathered: 15,
+            resident_bytes: 2048,
+            budget_bytes: 4096,
+            ..Default::default()
+        };
+        m.record_storage(&snap);
+        m.record_storage(&snap); // idempotent: gauges, not counters
+        assert_eq!(m.feature_prefetch_hits.load(Ordering::Relaxed), 10);
+        assert_eq!(m.feature_resident_bytes.load(Ordering::Relaxed), 2048);
+        m.tile_cached_bytes.store(1000, Ordering::Relaxed);
+        assert_eq!(m.resident_bytes_total(), 3048);
+        let s = m.summary();
+        assert!(s.contains("storage: budget=4.00 KB"), "{s}");
+        assert!(s.contains("prefetch_hit_rate=66.7%"), "{s}");
+    }
+
+    #[test]
+    fn summary_omits_storage_line_without_a_budget() {
+        let m = Metrics::default();
+        m.record_request(1);
+        assert!(!m.summary().contains("storage:"), "{}", m.summary());
     }
 
     #[test]

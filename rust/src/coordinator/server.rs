@@ -32,6 +32,13 @@
 //!   traffic would only pollute it — and take the ordinary slow path, so
 //!   stealing remains a pure perf decision. Caches are tagged with the
 //!   plan's [`PlanCache`] epoch; a plan rebuild invalidates every tile.
+//! * With a memory budget ([`ServerConfig::mem_budget_bytes`],
+//!   `--mem-budget-mb`) the projected feature table itself is tiered
+//!   (`engine::storage`): spilled to disk behind a byte-budgeted resident
+//!   chunk pool when it exceeds the budget, and every worker's gather
+//!   reads through the pool — bitwise-identically. The feature-pool and
+//!   tile-cache budgets are declared under one [`MemoryBudget`], debug-
+//!   checked in the worker loop and reported by `Metrics::summary`.
 //! * `submit` splits a request by channel affinity, enqueues the parts,
 //!   and assembles the response; rows come back tagged by vertex.
 //!
@@ -75,7 +82,8 @@ use super::plans::PlanCache;
 use super::request::{InferenceRequest, InferenceResponse, ServeError};
 use super::router::Router;
 use crate::engine::{
-    FeatureState, FusedEngine, InferencePlan, PushError, StealQueue, TileCache, TileScratch,
+    FeatureState, FusedEngine, InferencePlan, MemoryBudget, PushError, StealQueue, TileCache,
+    TileScratch,
 };
 use crate::grouping::{default_n_max, group_overlap_driven, OverlapHypergraph};
 use crate::hetgraph::{HetGraph, VId};
@@ -182,6 +190,15 @@ pub struct ServerConfig {
     /// Deterministic fault injection (test/CLI hook; `None` in
     /// production). Consulted per work item by CPU workers.
     pub faults: Option<FaultPlan>,
+    /// Memory budget for the projected feature table in bytes (CPU
+    /// executor; PJRT states stay in RAM). `None` keeps the table fully
+    /// in RAM; `Some(b)` routes it through the storage tier
+    /// (`engine::storage`) — spilled to disk with a byte-budgeted
+    /// resident chunk pool when it exceeds `b`. Bitwise-identical either
+    /// way. Together with [`ServerConfig::tile_cache_bytes`] this is
+    /// declared under one [`MemoryBudget`], so the two knobs cannot
+    /// silently oversubscribe RAM.
+    pub mem_budget_bytes: Option<usize>,
 }
 
 impl ServerConfig {
@@ -198,6 +215,7 @@ impl ServerConfig {
             admission_threshold: CPU_QUEUE_CAP,
             restart_budget: DEFAULT_RESTART_BUDGET,
             faults: None,
+            mem_budget_bytes: None,
         }
     }
 
@@ -230,6 +248,9 @@ struct CpuWorkerCtx {
     queue: Arc<StealQueue<WorkItem>>,
     shared: Arc<PlanState>,
     cache_bytes: usize,
+    /// Unified resident-memory declaration (feature pool + all workers'
+    /// tile caches); workers debug-check tracked residency against it.
+    budget: MemoryBudget,
     metrics: Arc<Metrics>,
     faults: Option<FaultPlan>,
 }
@@ -290,7 +311,14 @@ impl Server {
                 // from the cache.
                 let (plan, epoch) =
                     cfg.plans.get_or_build_epoch(&g, ModelConfig::new(cfg.kind), CPU_MAX_IN_DIM);
-                let state = FeatureState::project_all(&plan, cfg.channels.max(1));
+                let mut state = FeatureState::project_all(&plan, cfg.channels.max(1));
+                if let Some(b) = cfg.mem_budget_bytes {
+                    // Tier the projected table against the budget: spilled
+                    // to disk (budgeted resident pool) when it does not
+                    // fit, a Ram-marker tier when it does. Workers gather
+                    // through the tier either way — bitwise-identically.
+                    state.spill_to_budget(b).context("spill feature table to memory budget")?;
+                }
                 Arc::new(PlanState { plan, state, epoch })
             }
         };
@@ -339,10 +367,20 @@ impl Server {
                 // One shared work-stealing queue: routed parts are placed
                 // on their affine channel's deque, idle channels steal.
                 let queue = Arc::new(StealQueue::new(cfg.channels, CPU_QUEUE_CAP));
+                // Declare both resident budgets under one struct. The
+                // feature share uses the tier's *clamped* budget (the pool
+                // keeps at least one chunk resident), so the debug assert
+                // reflects what the tier actually enforces.
+                let budget = MemoryBudget::new(
+                    shared.state.tier().map(|t| t.budget_bytes()),
+                    cfg.tile_cache_bytes,
+                    cfg.channels,
+                );
                 let ctx = Arc::new(CpuWorkerCtx {
                     queue: Arc::clone(&queue),
                     shared: Arc::clone(&shared),
                     cache_bytes: cfg.tile_cache_bytes,
+                    budget,
                     metrics: Arc::clone(&metrics),
                     faults: cfg.faults,
                 });
@@ -694,6 +732,15 @@ fn worker_loop_cpu(
                 w.targets.iter().enumerate().map(|(i, &t)| (t, m.row(i).to_vec())).collect();
             Ok(rows)
         }));
+        // Storage-tier gauges + the unified-budget debug check, refreshed
+        // per item (cheap: atomic loads on the tier's counters).
+        if let Some(stats) = ctx.shared.state.storage_stats() {
+            ctx.metrics.record_storage(&stats);
+            ctx.budget.check_resident(
+                stats.resident_bytes,
+                ctx.metrics.tile_cached_bytes.load(Ordering::Relaxed),
+            );
+        }
         match outcome {
             Ok(Ok(rows)) => {
                 let _ = w.reply.send((w.req, Ok(rows)));

@@ -27,7 +27,12 @@
 //!   run the existing tile-gather + aggregate kernel immediately; the
 //!   calling thread scatters finished groups into the output matrix as
 //!   they complete. Grouping cost and aggregation cost overlap, exactly
-//!   like the hardware.
+//!   like the hardware. When the feature table is spilled to the storage
+//!   tier (`engine::storage`), the producer doubles as a *prefetcher
+//!   driver*: it knows each group's distinct row set before any worker
+//!   pops the group, so it pushes the group's chunk set to a prefetch
+//!   thread as free lookahead ([`PREFETCH_QUEUE_CAP`]) — workers block
+//!   only on rows that lost the race.
 //!
 //! **Bitwise-preservation argument.** The dispatcher assigns each emitted
 //! group the next contiguous row range of the caller-order output
@@ -54,12 +59,13 @@
 
 use super::access::TileReuse;
 use super::fused::{FusedEngine, TileScratch};
+use super::storage::TieredFeatures;
 use super::tensor::Matrix;
 use crate::grouping::{stream_overlap_driven, OverlapHypergraph};
 use crate::hetgraph::VId;
 use std::collections::VecDeque;
 use std::sync::mpsc;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// How grouped execution is dispatched onto workers.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -306,6 +312,16 @@ impl<T> std::fmt::Debug for PushError<T> {
 /// never materializes more than a small window of the schedule.
 pub const STREAM_QUEUE_CAP_PER_WORKER: usize = 4;
 
+/// Depth of the dispatcher→prefetcher channel when the feature table is
+/// spilled (`engine::storage`): deep enough to hide one group's chunk
+/// fetches behind the previous group's execution, shallow enough that
+/// prefetch stays *lookahead* — chunks land in the resident pool just
+/// ahead of their group, not as an unbounded sweep of the file that would
+/// thrash the LRU. Sends are advisory (`try_send`): a full channel drops
+/// the hint — the worker then fetches on demand — rather than stalling
+/// group emission on disk.
+pub const PREFETCH_QUEUE_CAP: usize = 8;
+
 /// One finished group traveling back to the scatter loop.
 struct DoneGroup {
     worker: usize,
@@ -372,15 +388,54 @@ impl<'a> FusedEngine<'a> {
             return (order, out, reuse, stats);
         }
 
+        // Storage-tier lookahead: when the feature table is spilled, the
+        // producer — which knows each group's distinct row set before any
+        // worker pops the group — streams the group's chunk set to a
+        // prefetch thread, which pulls those chunks into the tier's
+        // resident pool while earlier groups are still executing. Workers
+        // then block only on rows that lost the race.
+        let tier: Option<Arc<TieredFeatures>> =
+            self.state().tier().filter(|t| t.is_spilled()).cloned();
         let queue: StealQueue<GroupTask> = StealQueue::new(workers, queue_cap);
         let (done_tx, done_rx) = mpsc::channel::<DoneGroup>();
         let order = std::thread::scope(|s| {
+            let mut prefetch_tx: Option<mpsc::SyncSender<Vec<u32>>> = None;
+            if let Some(t) = tier.as_ref().map(Arc::clone) {
+                let (tx, rx) = mpsc::sync_channel::<Vec<u32>>(PREFETCH_QUEUE_CAP);
+                s.spawn(move || {
+                    while let Ok(chunks) = rx.recv() {
+                        t.prefetch_chunks(&chunks);
+                    }
+                });
+                prefetch_tx = Some(tx);
+            }
             let producer = s.spawn(|| {
+                // Moved in (the surrounding closure stays by-ref): the
+                // sender drops when emission ends — on every path,
+                // including producer panic — so the prefetch thread's
+                // recv() errors out and the scope always joins.
+                let prefetch = prefetch_tx;
+                let tier = tier.as_deref();
+                let fused = self.plan().adjacency();
                 let mut order: Vec<VId> = Vec::with_capacity(num_rows);
                 let mut seq = 0u32;
                 let queue = &queue;
                 let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                     let mut emit = |targets: Vec<VId>| {
+                        if let (Some(tx), Some(t)) = (&prefetch, tier) {
+                            let mut chunks: Vec<u32> = Vec::new();
+                            for &v in &targets {
+                                chunks.extend(t.chunk_of(v.idx()));
+                                for e in fused.entries_of(v) {
+                                    for &u in fused.neighbors(e) {
+                                        chunks.extend(t.chunk_of(u.idx()));
+                                    }
+                                }
+                            }
+                            chunks.sort_unstable();
+                            chunks.dedup();
+                            let _ = tx.try_send(chunks); // advisory — never block emission
+                        }
                         let row_base = order.len() as u32;
                         assert!(
                             order.len() + targets.len() <= num_rows,

@@ -104,6 +104,13 @@ impl<'a> FusedEngine<'a> {
         self.plan
     }
 
+    /// The feature state this executor reads. Crate-visible so the
+    /// streaming dispatcher (`engine::dispatch`) can see the storage tier
+    /// and drive its prefetcher from producer lookahead.
+    pub(crate) fn state(&self) -> &'a FeatureState {
+        self.state
+    }
+
     /// Default worker count: one per available core.
     pub fn default_threads() -> usize {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
@@ -122,7 +129,7 @@ impl<'a> FusedEngine<'a> {
         }
         let threads = threads.clamp(1, order.len());
         if threads == 1 {
-            self.embed_range(order, &mut out.data);
+            self.embed_stripe(order, &mut out.data);
             return out;
         }
         // Contiguous stripes: order.chunks and out.data.chunks_mut stay in
@@ -130,10 +137,25 @@ impl<'a> FusedEngine<'a> {
         let chunk = order.len().div_ceil(threads);
         std::thread::scope(|s| {
             for (targets, stripe) in order.chunks(chunk).zip(out.data.chunks_mut(chunk * h)) {
-                s.spawn(move || self.embed_range(targets, stripe));
+                s.spawn(move || self.embed_stripe(targets, stripe));
             }
         });
         out
+    }
+
+    /// One worker's stripe, routed by storage backing: in-RAM states run
+    /// the classic per-target loop straight over `projected`; spilled
+    /// states run the same targets as one group-local tile so every row
+    /// read goes through the tier's resident pool instead of the (empty)
+    /// matrix. The tile path is bitwise identical to the per-target loop
+    /// — same op order, unmodified row copies — so routing by backing
+    /// never changes the bits.
+    fn embed_stripe(&self, targets: &[VId], out: &mut [f32]) {
+        if self.state.is_spilled() {
+            self.embed_group_tiled(targets, &mut TileScratch::default(), out);
+        } else {
+            self.embed_range(targets, out);
+        }
     }
 
     /// Embed in the locality-preserving grouped order (paper §IV-C):
@@ -321,10 +343,23 @@ impl<'a> FusedEngine<'a> {
             }
         }
 
-        // Pass 2: gather — each distinct row fetched exactly once.
+        // Pass 2: gather — each distinct row fetched exactly once. When
+        // the feature table is spilled, rows come through the storage
+        // tier's resident pool (bitwise-identical bytes — LE round-trip);
+        // in-RAM states copy straight out of `projected`, counting the
+        // rows as bypasses when a Ram-marker tier is attached so the
+        // storage accounting equation holds on every backend.
         tile.clear();
-        for &v in tile_ids.iter() {
-            tile.extend_from_slice(projected.row(v.idx()));
+        match self.state.tier() {
+            Some(t) if t.is_spilled() => t.gather_rows(tile_ids, tile),
+            tier => {
+                for &v in tile_ids.iter() {
+                    tile.extend_from_slice(projected.row(v.idx()));
+                }
+                if let Some(t) = tier {
+                    t.record_bypass(tile_ids.len() as u64);
+                }
+            }
         }
 
         // Pass 3: aggregate from the tile, same op order as embed_into.

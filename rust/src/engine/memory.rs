@@ -27,6 +27,19 @@ impl MemoryTracker {
         }
     }
 
+    /// Resident constant for the projected feature table behind `state`'s
+    /// storage tier: the full matrix bytes while in RAM, but only the
+    /// tier's clamped pool budget once spilled — the point of out-of-core
+    /// execution is that the expansion ratio's resident term stops scaling
+    /// with the dataset (`engine/storage.rs`).
+    pub fn for_feature_state(state: &super::plan::FeatureState) -> Self {
+        let resident = match state.tier() {
+            Some(t) if t.is_spilled() => t.budget_bytes() as u64,
+            _ => (state.projected.data.len() * 4) as u64,
+        };
+        MemoryTracker::with_resident(resident)
+    }
+
     fn bump(&mut self) {
         if self.live_bytes > self.peak_bytes {
             self.peak_bytes = self.live_bytes;
@@ -96,6 +109,23 @@ mod tests {
         t.partial_free(VId(1), SemanticId(0), 50);
         assert_eq!(t.live_bytes, 100);
         assert_eq!(t.peak_bytes, 200);
+    }
+
+    #[test]
+    fn resident_term_tracks_the_storage_tier() {
+        use crate::datasets::Dataset;
+        use crate::engine::{FeatureState, InferencePlan};
+        use crate::model::{ModelConfig, ModelKind};
+        let g = Dataset::Acm.load(0.03);
+        let plan = InferencePlan::build(&g, ModelConfig::new(ModelKind::Rgcn), 16);
+        let ram = FeatureState::project_all(&plan, 1);
+        let full = MemoryTracker::for_feature_state(&ram).resident_bytes;
+        assert_eq!(full, (ram.projected.data.len() * 4) as u64);
+        let mut spilled = ram.clone();
+        spilled.spill_to_budget(full as usize / 8).unwrap();
+        let budgeted = MemoryTracker::for_feature_state(&spilled).resident_bytes;
+        assert_eq!(budgeted, spilled.tier().unwrap().budget_bytes() as u64);
+        assert!(budgeted < full, "a budgeted tier must shrink the resident term");
     }
 
     #[test]

@@ -15,6 +15,9 @@
 //! aggregation — [`ScheduleMode`] selects static vs streaming);
 //! `tile_cache` carries materialized group tiles *across* serving
 //! requests (an epoch-tagged, byte-budgeted per-worker LRU);
+//! `storage` puts the projected feature table behind a memory-budgeted
+//! tier (in-RAM or spilled to an unlinked temp file with a chunk-LRU
+//! resident pool, prefetched by the streaming dispatcher's lookahead);
 //! `multilayer` runs whole stacks on one plan. Every path computes
 //! bitwise-identical embeddings.
 
@@ -28,6 +31,7 @@ pub mod memory;
 pub mod paradigm;
 pub mod plan;
 pub mod schedule;
+pub mod storage;
 pub mod tensor;
 pub mod tile_cache;
 pub mod trace;
@@ -37,7 +41,8 @@ pub use batchwise::{
     batched_semantic_passes, walk_per_semantic_batched, walk_per_semantic_batched_fused,
 };
 pub use dispatch::{
-    DispatchStats, GroupTask, PushError, ScheduleMode, StealQueue, STREAM_QUEUE_CAP_PER_WORKER,
+    DispatchStats, GroupTask, PushError, ScheduleMode, StealQueue, PREFETCH_QUEUE_CAP,
+    STREAM_QUEUE_CAP_PER_WORKER,
 };
 pub use functional::ReferenceEngine;
 pub use fused::{FusedEngine, TileScratch};
@@ -53,6 +58,7 @@ pub use paradigm::{
 };
 pub use plan::{FeatureState, InferencePlan, ModelParams};
 pub use schedule::{group_tile_counts, measure_reuse, GroupSchedule, WorkerPlan};
+pub use storage::{MemoryBudget, StorageStats, TieredFeatures, SPILL_CHUNK_ROWS};
 pub use tensor::Matrix;
 pub use tile_cache::{TileCache, TileCacheOutcome, TileCacheStats};
 pub use trace::{NullSink, StreamSink, TeeSink, TraceSink};

@@ -29,6 +29,7 @@
 use super::functional::{
     attention_vectors, fusion_weight, projection_weight, raw_feature, LEAKY_SLOPE,
 };
+use super::storage::{StorageStats, TieredFeatures};
 use super::tensor::{axpy, dot, Matrix};
 use crate::hetgraph::{FusedAdjacency, HetGraph, SemanticId, VId};
 use crate::model::{ModelConfig, ModelKind};
@@ -188,10 +189,22 @@ impl InferencePlan {
 /// The mutable per-layer piece: the projected feature table h'_v for every
 /// vertex, indexed by `VId`. Built once by [`FeatureState::project_all`]
 /// (the FP stage), then re-seeded between layers.
+///
+/// After [`FeatureState::spill_to_budget`] the rows sit behind a
+/// [`TieredFeatures`]: either still in [`FeatureState::projected`] (the
+/// matrix fits, the tier only accounts bypasses) or spilled to an
+/// unlinked temp file with a budget-capped resident pool — in which case
+/// `projected` is replaced by an empty `0 × hidden` matrix (the column
+/// count is kept so dimension asserts stay meaningful) and every gather
+/// goes through [`TieredFeatures::gather_rows`]. The tier lives behind an
+/// `Arc`, so clones of a spilled state share one pool and one budget.
 #[derive(Debug, Clone)]
 pub struct FeatureState {
-    /// Projected features, row v ↔ `VId(v)`.
+    /// Projected features, row v ↔ `VId(v)`. Empty (`rows == 0`) once the
+    /// table has been spilled — read through [`FeatureState::tier`] then.
     pub projected: Matrix,
+    /// Storage tier; `None` until [`FeatureState::spill_to_budget`].
+    tier: Option<Arc<TieredFeatures>>,
 }
 
 impl FeatureState {
@@ -216,13 +229,59 @@ impl FeatureState {
                 });
             }
         }
-        FeatureState { projected }
+        FeatureState { projected, tier: None }
     }
 
     /// Wrap an externally produced projection (e.g. the PJRT `fp_block`
     /// output on the serving path).
     pub fn from_projected(projected: Matrix) -> FeatureState {
-        FeatureState { projected }
+        FeatureState { projected, tier: None }
+    }
+
+    /// Put the feature table behind a memory budget. If the matrix fits
+    /// in `budget_bytes` it stays in RAM behind an accounting-only tier;
+    /// otherwise it is spilled to an unlinked temp file and served through
+    /// a chunk-LRU resident pool of at most `budget_bytes` (clamped up to
+    /// one chunk). Idempotent — a state that already carries a tier is
+    /// left untouched. Bitwise-neutral at every budget (storage module
+    /// docs): the tier changes where bytes live, never what they are.
+    pub fn spill_to_budget(&mut self, budget_bytes: usize) -> std::io::Result<()> {
+        if self.tier.is_some() {
+            return Ok(());
+        }
+        let bytes = self.projected.data.len() * 4;
+        if bytes <= budget_bytes || bytes == 0 {
+            self.tier = Some(Arc::new(TieredFeatures::in_ram(
+                self.projected.rows,
+                self.projected.cols,
+                budget_bytes,
+            )));
+        } else {
+            let tier = TieredFeatures::spill(&self.projected, budget_bytes)?;
+            // Keep the column count: dimension asserts (and `hidden()`
+            // checks) stay meaningful on a spilled state.
+            self.projected = Matrix::zeros(0, self.projected.cols);
+            self.tier = Some(Arc::new(tier));
+        }
+        Ok(())
+    }
+
+    /// The storage tier, once budgeted ([`FeatureState::spill_to_budget`]).
+    #[inline]
+    pub fn tier(&self) -> Option<&Arc<TieredFeatures>> {
+        self.tier.as_ref()
+    }
+
+    /// Whether the rows actually live in the spill file (false for both
+    /// unbudgeted and fits-in-budget states).
+    #[inline]
+    pub fn is_spilled(&self) -> bool {
+        self.tier.as_ref().is_some_and(|t| t.is_spilled())
+    }
+
+    /// Storage counters, if a tier is attached.
+    pub fn storage_stats(&self) -> Option<StorageStats> {
+        self.tier.as_ref().map(|t| t.stats())
     }
 
     /// Scatter layer-l output rows back into the feature table (row i of
@@ -232,6 +291,14 @@ impl FeatureState {
     pub fn reseed(&mut self, order: &[VId], out: &Matrix) {
         assert_eq!(order.len(), out.rows, "order/output row mismatch");
         assert_eq!(out.cols, self.projected.cols, "hidden dim mismatch");
+        if let Some(tier) = &self.tier {
+            if tier.is_spilled() {
+                // Write-through to the spill file; touched chunks are
+                // dropped from the pool so the next gather rereads them.
+                tier.write_rows(order, out);
+                return;
+            }
+        }
         for (i, &t) in order.iter().enumerate() {
             self.projected.row_mut(t.idx()).copy_from_slice(out.row(i));
         }
@@ -295,6 +362,48 @@ mod tests {
             let par = FeatureState::project_all(&plan, threads);
             assert_eq!(serial.projected.max_abs_diff(&par.projected), 0.0, "t={threads}");
         }
+    }
+
+    #[test]
+    fn spill_to_budget_round_trips_and_reseeds_bitwise() {
+        let g = Dataset::Acm.load(0.03);
+        let plan = InferencePlan::build(&g, ModelConfig::new(ModelKind::Rgcn), 16);
+        let mut ram = FeatureState::project_all(&plan, 2);
+        let mut spilled = ram.clone();
+        spilled.spill_to_budget(1024).unwrap(); // far below the table size
+        assert!(spilled.is_spilled());
+        assert_eq!(spilled.projected.rows, 0, "spilled table leaves projected empty");
+        assert_eq!(spilled.projected.cols, plan.hidden(), "but keeps the column count");
+        let tier = Arc::clone(spilled.tier().expect("tier attached"));
+        let ids: Vec<VId> = (0..plan.num_vertices() as u32).map(VId).collect();
+        let mut out = Vec::new();
+        tier.gather_rows(&ids, &mut out);
+        assert_eq!(out, ram.projected.data, "every spilled row must round-trip bitwise");
+        // Reseed goes write-through; the next gather sees the new rows.
+        let order = g.target_vertices();
+        let new_rows = Matrix::from_fn(order.len(), plan.hidden(), |r, c| (r + c) as f32 * 0.5);
+        ram.reseed(&order, &new_rows);
+        spilled.reseed(&order, &new_rows);
+        let mut again = Vec::new();
+        tier.gather_rows(&ids, &mut again);
+        assert_eq!(again, ram.projected.data, "reseed must write through the tier");
+        assert!(spilled.storage_stats().unwrap().accounted());
+    }
+
+    #[test]
+    fn budget_that_fits_keeps_the_table_in_ram() {
+        let g = Dataset::Acm.load(0.03);
+        let plan = InferencePlan::build(&g, ModelConfig::new(ModelKind::Rgcn), 16);
+        let mut state = FeatureState::project_all(&plan, 1);
+        let before = state.projected.clone();
+        state.spill_to_budget(usize::MAX).unwrap();
+        assert!(!state.is_spilled());
+        assert!(state.tier().is_some(), "fits-in-budget still attaches the accounting tier");
+        assert_eq!(state.projected.max_abs_diff(&before), 0.0);
+        // Idempotent: a second call must not re-tier.
+        let tier = Arc::clone(state.tier().unwrap());
+        state.spill_to_budget(0).unwrap();
+        assert!(Arc::ptr_eq(&tier, state.tier().unwrap()));
     }
 
     #[test]

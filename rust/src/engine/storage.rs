@@ -1,0 +1,637 @@
+//! Memory-budgeted tiered storage for the projected feature table — the
+//! out-of-core seam the ROADMAP names as the refactor that unlocks
+//! paper-scale datasets (the paper's whole pitch is *memory-efficient*
+//! inference; aggregation is bound by DRAM traffic, and at `scale: 1.0`
+//! the projected matrix simply does not fit).
+//!
+//! A [`TieredFeatures`] wraps the projected feature rows behind one of two
+//! backings:
+//!
+//! * **Ram** — the matrix stays where it always lived, in
+//!   [`FeatureState::projected`](super::plan::FeatureState); the tier is a
+//!   pure accounting shim (gathers count as *bypasses*). Chosen whenever
+//!   the matrix fits the configured budget.
+//! * **Spilled** — the rows live in an unlinked temp file (row-major
+//!   little-endian `f32`), read through a chunk-granular resident pool
+//!   capped at the byte budget. Gathers classify every row as a
+//!   *prefetch hit* (its chunk was resident — via dispatcher prefetch,
+//!   chunk reuse, or an earlier demand fetch) or a *prefetch miss*
+//!   (synchronous `pread` on the worker). Eviction is strict LRU over
+//!   chunks; concurrent readers keep an `Arc` to the chunk they are
+//!   copying from, so eviction never invalidates an in-flight gather.
+//!
+//! The streaming dispatcher's producer knows each group's distinct row
+//! set one-or-more groups before a worker pops it, and feeds that
+//! lookahead into [`TieredFeatures::prefetch_chunks`] (see
+//! `engine/dispatch.rs`) — prefetch installs chunks *cold* (no hit/miss
+//! is counted and an already-resident chunk is left untouched, mirroring
+//! `sim::FifoCache::insert_cold`), so the counters stay a pure
+//! demand-side classification and the invariant
+//! `prefetch_hits + prefetch_misses + bypasses == rows_gathered`
+//! holds by construction.
+//!
+//! **Bitwise-preservation argument.** `f32::to_le_bytes` /
+//! `f32::from_le_bytes` are exact inverses for every bit pattern
+//! (including NaN payloads and signed zeros), so a row read back from the
+//! spill file is byte-identical to the row that was written. The tier
+//! changes *where* bytes live, never what they are — every engine path
+//! over a spilled state funnels into the same tile-kernel aggregation as
+//! the in-RAM path and stays bitwise-identical to `ReferenceEngine` at
+//! every budget.
+//!
+//! The resident pool deliberately mirrors the accelerator cost model's
+//! LRU feature cache (`sim/cache.rs`): a lockstep test in
+//! `rust/tests/storage.rs` drives both on the same access stream and
+//! asserts identical per-access hit/miss classification.
+
+use super::tensor::Matrix;
+use crate::hetgraph::VId;
+use rustc_hash::FxHashMap;
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io;
+use std::os::unix::fs::FileExt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Rows per spill chunk — the pool's transfer and eviction granularity.
+/// Chunks amortize syscall + locking cost over whole row runs while
+/// keeping the minimum resident footprint (one chunk) small.
+pub const SPILL_CHUNK_ROWS: usize = 64;
+
+/// Lifetime counters of one [`TieredFeatures`] (cumulative snapshot).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct StorageStats {
+    /// Rows gathered whose chunk was already resident (prefetched, reused
+    /// within a tile, or demand-fetched earlier).
+    pub prefetch_hits: u64,
+    /// Rows gathered that paid a synchronous chunk fetch.
+    pub prefetch_misses: u64,
+    /// Rows served straight from the in-RAM matrix (Ram backing).
+    pub bypasses: u64,
+    /// Every row that went through the tier; equals
+    /// `prefetch_hits + prefetch_misses + bypasses` by construction.
+    pub rows_gathered: u64,
+    /// Chunks the dispatcher asked to prefetch (advisory lookahead).
+    pub prefetch_requests: u64,
+    /// Prefetch requests that actually installed a non-resident chunk.
+    pub prefetch_installs: u64,
+    /// Chunk reads from the spill file (demand + prefetch).
+    pub chunk_fetches: u64,
+    /// Chunks evicted to stay under the budget.
+    pub chunk_evictions: u64,
+    /// Feature bytes currently resident (pool contents, or the whole
+    /// matrix under Ram backing).
+    pub resident_bytes: u64,
+    /// The configured (clamped) budget in bytes.
+    pub budget_bytes: u64,
+}
+
+impl StorageStats {
+    /// Fraction of tiered (non-bypass) rows whose chunk was resident at
+    /// gather time; 0.0 before any spilled gather ran.
+    pub fn hit_rate(&self) -> f64 {
+        let looked = self.prefetch_hits + self.prefetch_misses;
+        if looked == 0 {
+            return 0.0;
+        }
+        self.prefetch_hits as f64 / looked as f64
+    }
+
+    /// The non-negotiable counter equation (every gathered row classified
+    /// exactly once).
+    pub fn accounted(&self) -> bool {
+        self.prefetch_hits + self.prefetch_misses + self.bypasses == self.rows_gathered
+    }
+}
+
+#[derive(Debug, Default)]
+struct Counters {
+    prefetch_hits: AtomicU64,
+    prefetch_misses: AtomicU64,
+    bypasses: AtomicU64,
+    rows_gathered: AtomicU64,
+    prefetch_requests: AtomicU64,
+    prefetch_installs: AtomicU64,
+    chunk_fetches: AtomicU64,
+    chunk_evictions: AtomicU64,
+}
+
+/// Resident-chunk pool bookkeeping (behind the pool mutex). Chunk buffers
+/// are `Arc`ed so a reader that acquired one keeps copying from it even if
+/// the pool evicts it concurrently.
+#[derive(Debug, Default)]
+struct PoolInner {
+    /// chunk id → (LRU tick, buffer).
+    resident: FxHashMap<u32, (u64, Arc<Vec<f32>>)>,
+    /// Recency index: tick → chunk id. First entry is the LRU victim.
+    lru: BTreeMap<u64, u32>,
+    tick: u64,
+    resident_bytes: usize,
+}
+
+impl PoolInner {
+    /// Return the chunk if resident, refreshing its LRU recency.
+    fn touch(&mut self, chunk: u32) -> Option<Arc<Vec<f32>>> {
+        let old_tick = self.resident.get(&chunk)?.0;
+        self.tick += 1;
+        let tick = self.tick;
+        self.lru.remove(&old_tick);
+        self.lru.insert(tick, chunk);
+        let entry = self.resident.get_mut(&chunk).expect("checked resident");
+        entry.0 = tick;
+        Some(Arc::clone(&entry.1))
+    }
+
+    /// Insert a freshly fetched chunk, then evict LRU chunks until the
+    /// pool fits the budget again. The just-inserted chunk carries the
+    /// newest tick, so the `len > 1` guard means it is never its own
+    /// victim (the budget is clamped to hold at least one chunk).
+    fn install(&mut self, chunk: u32, buf: Arc<Vec<f32>>, budget: usize, counters: &Counters) {
+        self.tick += 1;
+        self.resident_bytes += buf.len() * 4;
+        self.lru.insert(self.tick, chunk);
+        self.resident.insert(chunk, (self.tick, buf));
+        while self.resident_bytes > budget && self.lru.len() > 1 {
+            let (&victim_tick, &victim) = self.lru.iter().next().expect("pool over budget");
+            self.lru.remove(&victim_tick);
+            let (_, old) = self.resident.remove(&victim).expect("lru entry resident");
+            self.resident_bytes -= old.len() * 4;
+            counters.chunk_evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Drop a chunk whose file bytes were rewritten (reseed write-through).
+    fn invalidate(&mut self, chunk: u32) {
+        if let Some((tick, old)) = self.resident.remove(&chunk) {
+            self.lru.remove(&tick);
+            self.resident_bytes -= old.len() * 4;
+        }
+    }
+}
+
+/// The file-backed tier: an unlinked temp file of row-major LE `f32`
+/// rows plus the budgeted resident pool.
+#[derive(Debug)]
+struct SpillPool {
+    file: File,
+    inner: Mutex<PoolInner>,
+}
+
+#[derive(Debug)]
+enum Backing {
+    /// Rows stay in [`FeatureState::projected`](super::plan::FeatureState);
+    /// the tier only accounts bypasses.
+    Ram,
+    Spilled(SpillPool),
+}
+
+/// Create-new an exclusively named temp file and unlink it immediately:
+/// the pool reads/writes through the handle, and the kernel reclaims the
+/// blocks when the handle drops — even on abnormal exit.
+fn spill_file() -> io::Result<File> {
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let dir = std::env::temp_dir();
+    loop {
+        let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+        let path = dir.join(format!("tlv-hgnn-spill-{}-{n}", std::process::id()));
+        match OpenOptions::new().read(true).write(true).create_new(true).open(&path) {
+            Ok(f) => {
+                let _ = std::fs::remove_file(&path);
+                return Ok(f);
+            }
+            Err(e) if e.kind() == io::ErrorKind::AlreadyExists => continue,
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Memory-budgeted storage tier for the projected feature table (module
+/// docs). Shared read-mostly across workers behind an `Arc`; the only
+/// interior mutation is the resident pool (mutex) and the counters
+/// (atomics), so clones of a spilled [`FeatureState`]
+/// (`super::plan::FeatureState`) share one pool and one budget.
+#[derive(Debug)]
+pub struct TieredFeatures {
+    rows: usize,
+    cols: usize,
+    /// Clamped budget: at least one chunk under Spilled backing.
+    budget_bytes: usize,
+    backing: Backing,
+    counters: Counters,
+}
+
+impl TieredFeatures {
+    /// Accounting-only tier over a matrix that fits the budget: rows keep
+    /// being read straight from the in-RAM matrix and every gather counts
+    /// as a bypass.
+    pub fn in_ram(rows: usize, cols: usize, budget_bytes: usize) -> TieredFeatures {
+        TieredFeatures {
+            rows,
+            cols,
+            budget_bytes,
+            backing: Backing::Ram,
+            counters: Counters::default(),
+        }
+    }
+
+    /// Spill `m` to an unlinked temp file and serve it through a resident
+    /// pool of at most `budget_bytes` (clamped up to one chunk so forward
+    /// progress is always possible).
+    pub fn spill(m: &Matrix, budget_bytes: usize) -> io::Result<TieredFeatures> {
+        let (rows, cols) = (m.rows, m.cols);
+        assert!(rows * cols > 0, "spilling an empty matrix is meaningless");
+        let file = spill_file()?;
+        let mut buf = Vec::with_capacity(SPILL_CHUNK_ROWS * cols * 4);
+        let mut offset = 0u64;
+        for slab in m.data.chunks(SPILL_CHUNK_ROWS * cols) {
+            buf.clear();
+            for &x in slab {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+            file.write_all_at(&buf, offset)?;
+            offset += buf.len() as u64;
+        }
+        let one_chunk = SPILL_CHUNK_ROWS.min(rows) * cols * 4;
+        Ok(TieredFeatures {
+            rows,
+            cols,
+            budget_bytes: budget_bytes.max(one_chunk),
+            backing: Backing::Spilled(SpillPool { file, inner: Mutex::new(PoolInner::default()) }),
+            counters: Counters::default(),
+        })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn is_spilled(&self) -> bool {
+        matches!(self.backing, Backing::Spilled(_))
+    }
+
+    /// The clamped resident budget this tier enforces.
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
+    }
+
+    /// Spill chunks covering the whole table.
+    pub fn num_chunks(&self) -> usize {
+        self.rows.div_ceil(SPILL_CHUNK_ROWS)
+    }
+
+    /// Chunk holding `row`; `None` under Ram backing (nothing to
+    /// prefetch).
+    pub fn chunk_of(&self, row: usize) -> Option<u32> {
+        match self.backing {
+            Backing::Ram => None,
+            Backing::Spilled(_) => Some((row / SPILL_CHUNK_ROWS) as u32),
+        }
+    }
+
+    /// Feature bytes currently resident (the whole matrix under Ram
+    /// backing).
+    pub fn resident_bytes(&self) -> u64 {
+        match &self.backing {
+            Backing::Ram => (self.rows * self.cols * 4) as u64,
+            Backing::Spilled(pool) => pool.inner.lock().unwrap().resident_bytes as u64,
+        }
+    }
+
+    /// Cumulative counter snapshot plus the resident/budget gauges.
+    pub fn stats(&self) -> StorageStats {
+        let c = &self.counters;
+        StorageStats {
+            prefetch_hits: c.prefetch_hits.load(Ordering::Relaxed),
+            prefetch_misses: c.prefetch_misses.load(Ordering::Relaxed),
+            bypasses: c.bypasses.load(Ordering::Relaxed),
+            rows_gathered: c.rows_gathered.load(Ordering::Relaxed),
+            prefetch_requests: c.prefetch_requests.load(Ordering::Relaxed),
+            prefetch_installs: c.prefetch_installs.load(Ordering::Relaxed),
+            chunk_fetches: c.chunk_fetches.load(Ordering::Relaxed),
+            chunk_evictions: c.chunk_evictions.load(Ordering::Relaxed),
+            resident_bytes: self.resident_bytes(),
+            budget_bytes: self.budget_bytes as u64,
+        }
+    }
+
+    /// Account `n` rows served straight from the in-RAM matrix (called by
+    /// the gather pass under Ram backing, where the tier never sees the
+    /// bytes).
+    pub fn record_bypass(&self, n: u64) {
+        self.counters.bypasses.fetch_add(n, Ordering::Relaxed);
+        self.counters.rows_gathered.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Read the chunk's rows from the spill file. Byte-exact by the LE
+    /// round-trip argument in the module docs. I/O errors on our own
+    /// unlinked temp file are unrecoverable mid-gather, so they panic.
+    fn fetch_chunk(&self, pool: &SpillPool, chunk: u32) -> Arc<Vec<f32>> {
+        let row0 = chunk as usize * SPILL_CHUNK_ROWS;
+        assert!(row0 < self.rows, "chunk {chunk} out of range");
+        let nrows = SPILL_CHUNK_ROWS.min(self.rows - row0);
+        let mut bytes = vec![0u8; nrows * self.cols * 4];
+        pool.file
+            .read_exact_at(&mut bytes, (row0 * self.cols * 4) as u64)
+            .expect("spill-file read");
+        let mut buf = Vec::with_capacity(nrows * self.cols);
+        for b in bytes.chunks_exact(4) {
+            buf.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+        }
+        self.counters.chunk_fetches.fetch_add(1, Ordering::Relaxed);
+        Arc::new(buf)
+    }
+
+    /// Resident-or-fetch: the returned bool is true when the chunk was
+    /// already resident. The fetch runs *outside* the pool lock; a raced
+    /// concurrent fetch of the same chunk keeps the first installed buffer
+    /// (both racers still count their own miss — they both paid the read).
+    fn acquire(&self, pool: &SpillPool, chunk: u32) -> (Arc<Vec<f32>>, bool) {
+        if let Some(buf) = pool.inner.lock().unwrap().touch(chunk) {
+            return (buf, true);
+        }
+        let fetched = self.fetch_chunk(pool, chunk);
+        let mut inner = pool.inner.lock().unwrap();
+        if let Some(existing) = inner.touch(chunk) {
+            return (existing, false);
+        }
+        inner.install(chunk, Arc::clone(&fetched), self.budget_bytes, &self.counters);
+        (fetched, false)
+    }
+
+    /// Gather `ids` (in order) through the resident pool, appending each
+    /// row to `out`. Spilled backing only — under Ram backing the gather
+    /// pass reads [`FeatureState::projected`](super::plan::FeatureState)
+    /// directly and calls [`TieredFeatures::record_bypass`].
+    pub fn gather_rows(&self, ids: &[VId], out: &mut Vec<f32>) {
+        let Backing::Spilled(pool) = &self.backing else {
+            panic!("gather_rows on an in-RAM tier: read FeatureState::projected directly");
+        };
+        let c = &self.counters;
+        c.rows_gathered.fetch_add(ids.len() as u64, Ordering::Relaxed);
+        // Hold the current chunk across consecutive same-chunk rows so a
+        // sorted tile-id run costs one pool lookup per chunk, not per row.
+        let mut held: Option<(u32, Arc<Vec<f32>>)> = None;
+        for &v in ids {
+            let row = v.idx();
+            debug_assert!(row < self.rows, "gather row {row} out of range");
+            let chunk = (row / SPILL_CHUNK_ROWS) as u32;
+            match &held {
+                Some((h, _)) if *h == chunk => {
+                    c.prefetch_hits.fetch_add(1, Ordering::Relaxed);
+                }
+                _ => {
+                    let (buf, was_resident) = self.acquire(pool, chunk);
+                    if was_resident {
+                        c.prefetch_hits.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        c.prefetch_misses.fetch_add(1, Ordering::Relaxed);
+                    }
+                    held = Some((chunk, buf));
+                }
+            }
+            let (_, buf) = held.as_ref().expect("held chunk set above");
+            let base = (row - chunk as usize * SPILL_CHUNK_ROWS) * self.cols;
+            out.extend_from_slice(&buf[base..base + self.cols]);
+        }
+    }
+
+    /// Advisory prefetch from the dispatcher's lookahead: install each
+    /// non-resident chunk *cold* — no hit/miss is counted, and an
+    /// already-resident chunk is left untouched (no LRU refresh), exactly
+    /// mirroring `sim::FifoCache::insert_cold` so the cost-model lockstep
+    /// holds. No-op under Ram backing.
+    pub fn prefetch_chunks(&self, chunks: &[u32]) {
+        let Backing::Spilled(pool) = &self.backing else { return };
+        for &chunk in chunks {
+            self.counters.prefetch_requests.fetch_add(1, Ordering::Relaxed);
+            if pool.inner.lock().unwrap().resident.contains_key(&chunk) {
+                continue;
+            }
+            let fetched = self.fetch_chunk(pool, chunk);
+            let mut inner = pool.inner.lock().unwrap();
+            if inner.resident.contains_key(&chunk) {
+                continue; // raced with a demand fetch; keep theirs
+            }
+            inner.install(chunk, fetched, self.budget_bytes, &self.counters);
+            self.counters.prefetch_installs.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Reseed write-through: scatter `rows.row(i)` to file row
+    /// `order[i]`, then drop every touched chunk from the pool so the next
+    /// gather rereads the new bytes. Caller contract (same as
+    /// `FeatureState::reseed`): runs between layers, never concurrently
+    /// with gathers.
+    pub fn write_rows(&self, order: &[VId], rows: &Matrix) {
+        let Backing::Spilled(pool) = &self.backing else {
+            panic!("write_rows on an in-RAM tier: reseed FeatureState::projected directly");
+        };
+        assert_eq!(rows.cols, self.cols, "reseed hidden dim mismatch");
+        assert_eq!(order.len(), rows.rows, "reseed row count mismatch");
+        let mut bytes = Vec::with_capacity(self.cols * 4);
+        let mut touched: Vec<u32> = Vec::new();
+        for (i, &t) in order.iter().enumerate() {
+            let r = t.idx();
+            assert!(r < self.rows, "reseed row {r} out of range");
+            bytes.clear();
+            for &x in rows.row(i) {
+                bytes.extend_from_slice(&x.to_le_bytes());
+            }
+            pool.file.write_all_at(&bytes, (r * self.cols * 4) as u64).expect("spill-file write");
+            touched.push((r / SPILL_CHUNK_ROWS) as u32);
+        }
+        touched.sort_unstable();
+        touched.dedup();
+        let mut inner = pool.inner.lock().unwrap();
+        for chunk in touched {
+            inner.invalidate(chunk);
+        }
+    }
+}
+
+/// One accounting struct for everything the serving stack keeps resident:
+/// the feature pool (this module) and the per-worker hot-tile caches
+/// (`engine/tile_cache.rs`). Before this existed the two budgets were
+/// independent knobs that could silently oversubscribe RAM; now the
+/// coordinator declares both up front, `Metrics::summary` prints the
+/// combined resident line, and [`MemoryBudget::check_resident`] debug-asserts
+/// that tracked residency stays within the declared shares.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct MemoryBudget {
+    /// Feature-pool budget (the tier's *clamped* budget; `None` =
+    /// unbudgeted in-RAM state, no tier at all).
+    pub feature_pool_bytes: Option<usize>,
+    /// Per-worker hot-tile cache budget.
+    pub tile_cache_bytes: usize,
+    /// Worker (channel) count the tile budget multiplies over.
+    pub workers: usize,
+}
+
+impl MemoryBudget {
+    pub fn new(
+        feature_pool_bytes: Option<usize>,
+        tile_cache_bytes: usize,
+        workers: usize,
+    ) -> MemoryBudget {
+        MemoryBudget { feature_pool_bytes, tile_cache_bytes, workers }
+    }
+
+    /// Tile-cache bytes across all workers.
+    pub fn tile_cache_total(&self) -> usize {
+        self.tile_cache_bytes * self.workers
+    }
+
+    /// Everything the config promises to keep resident (feature pool +
+    /// all tile caches) — the number to compare against host RAM.
+    pub fn total_declared(&self) -> usize {
+        self.feature_pool_bytes.unwrap_or(0) + self.tile_cache_total()
+    }
+
+    /// Debug-assert that tracked residency stays within the declared
+    /// shares (tile caches self-enforce per worker; the feature pool
+    /// self-enforces its clamped budget — this catches accounting drift
+    /// between the two).
+    pub fn check_resident(&self, feature_resident_bytes: u64, tile_cached_bytes: u64) {
+        if let Some(pool) = self.feature_pool_bytes {
+            debug_assert!(
+                feature_resident_bytes <= pool as u64,
+                "feature pool resident {feature_resident_bytes} exceeds declared budget {pool}"
+            );
+        }
+        debug_assert!(
+            tile_cached_bytes <= self.tile_cache_total() as u64,
+            "tile caches hold {tile_cached_bytes} bytes, declared total {}",
+            self.tile_cache_total()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SmallRng;
+
+    fn random_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = SmallRng::seed_from_u64(seed);
+        Matrix::from_fn(rows, cols, |_, _| (rng.gen_f64() * 2.0 - 1.0) as f32)
+    }
+
+    fn gather_all(t: &TieredFeatures, order: &[u32]) -> Vec<f32> {
+        let mut out = Vec::new();
+        t.gather_rows(&order.iter().map(|&r| VId(r)).collect::<Vec<_>>(), &mut out);
+        out
+    }
+
+    #[test]
+    fn spill_round_trips_bitwise_at_tiny_budget() {
+        let m = random_matrix(3 * SPILL_CHUNK_ROWS + 7, 9, 0xC0FFEE);
+        // Budget of one chunk: almost every chunk transition evicts.
+        let t = TieredFeatures::spill(&m, 1).unwrap();
+        assert!(t.is_spilled());
+        assert_eq!(t.budget_bytes(), SPILL_CHUNK_ROWS * 9 * 4);
+        let order: Vec<u32> = (0..m.rows as u32).rev().collect();
+        let got = gather_all(&t, &order);
+        for (i, &r) in order.iter().enumerate() {
+            assert_eq!(
+                &got[i * 9..(i + 1) * 9],
+                m.row(r as usize),
+                "row {r} must round-trip bitwise"
+            );
+        }
+        let s = t.stats();
+        assert!(s.accounted(), "{s:?}");
+        assert_eq!(s.rows_gathered, m.rows as u64);
+        assert!(s.chunk_evictions > 0, "one-chunk budget must thrash: {s:?}");
+        assert!(s.resident_bytes <= s.budget_bytes);
+    }
+
+    #[test]
+    fn resident_chunk_is_reused_not_refetched() {
+        let m = random_matrix(2 * SPILL_CHUNK_ROWS, 4, 7);
+        let t = TieredFeatures::spill(&m, usize::MAX).unwrap();
+        // Two passes over the same chunk: second pass is all hits.
+        let order: Vec<u32> = (0..SPILL_CHUNK_ROWS as u32).collect();
+        gather_all(&t, &order);
+        let first = t.stats();
+        assert_eq!(first.prefetch_misses, 1, "one chunk fetch for a contiguous run");
+        assert_eq!(first.prefetch_hits, SPILL_CHUNK_ROWS as u64 - 1);
+        gather_all(&t, &order);
+        let second = t.stats();
+        assert_eq!(second.prefetch_misses, 1, "no refetch of a resident chunk");
+        assert_eq!(second.chunk_fetches, 1);
+        assert!(second.accounted());
+    }
+
+    #[test]
+    fn prefetch_installs_turn_misses_into_hits() {
+        let m = random_matrix(4 * SPILL_CHUNK_ROWS, 6, 99);
+        let t = TieredFeatures::spill(&m, 2 * SPILL_CHUNK_ROWS * 6 * 4).unwrap();
+        t.prefetch_chunks(&[2, 3]);
+        let s = t.stats();
+        assert_eq!(s.prefetch_requests, 2);
+        assert_eq!(s.prefetch_installs, 2);
+        assert_eq!(s.prefetch_hits + s.prefetch_misses, 0, "prefetch is not a demand access");
+        // Rows in the prefetched chunks now hit without any demand fetch.
+        gather_all(&t, &[2 * SPILL_CHUNK_ROWS as u32, 3 * SPILL_CHUNK_ROWS as u32]);
+        let s = t.stats();
+        assert_eq!(s.prefetch_misses, 0);
+        assert_eq!(s.prefetch_hits, 2);
+        // Prefetching a resident chunk is a no-op (no install, no refetch).
+        t.prefetch_chunks(&[2]);
+        let s2 = t.stats();
+        assert_eq!(s2.prefetch_installs, 2);
+        assert_eq!(s2.chunk_fetches, 2);
+    }
+
+    #[test]
+    fn reseed_write_through_invalidates_and_rereads() {
+        let m = random_matrix(2 * SPILL_CHUNK_ROWS, 3, 5);
+        let t = TieredFeatures::spill(&m, usize::MAX).unwrap();
+        // Make chunk 0 resident with the old bytes.
+        gather_all(&t, &[0]);
+        let replacement = random_matrix(2, 3, 6);
+        t.write_rows(&[VId(0), VId(SPILL_CHUNK_ROWS as u32)], &replacement);
+        let got = gather_all(&t, &[0, SPILL_CHUNK_ROWS as u32, 1]);
+        assert_eq!(&got[0..3], replacement.row(0), "rewritten row must be reread");
+        assert_eq!(&got[3..6], replacement.row(1));
+        assert_eq!(&got[6..9], m.row(1), "untouched row unchanged");
+    }
+
+    #[test]
+    fn ram_backing_counts_bypasses_only() {
+        let t = TieredFeatures::in_ram(100, 8, 1 << 20);
+        assert!(!t.is_spilled());
+        assert_eq!(t.chunk_of(50), None);
+        t.record_bypass(42);
+        let s = t.stats();
+        assert_eq!(s.bypasses, 42);
+        assert_eq!(s.rows_gathered, 42);
+        assert!(s.accounted());
+        assert_eq!(s.resident_bytes, 100 * 8 * 4);
+        t.prefetch_chunks(&[0, 1]); // no-op, not even counted as requests
+        assert_eq!(t.stats().prefetch_requests, 0);
+    }
+
+    #[test]
+    fn memory_budget_accounting() {
+        let b = MemoryBudget::new(Some(10 << 20), 4 << 20, 3);
+        assert_eq!(b.tile_cache_total(), 12 << 20);
+        assert_eq!(b.total_declared(), 22 << 20);
+        b.check_resident(10 << 20, 12 << 20); // exactly at budget: fine
+        let unbudgeted = MemoryBudget::new(None, 0, 4);
+        assert_eq!(unbudgeted.total_declared(), 0);
+        unbudgeted.check_resident(u64::MAX, 0); // no feature budget declared
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds declared budget")]
+    #[cfg(debug_assertions)]
+    fn memory_budget_catches_oversubscription() {
+        MemoryBudget::new(Some(1024), 0, 1).check_resident(2048, 0);
+    }
+}

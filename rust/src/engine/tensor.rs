@@ -3,8 +3,31 @@
 //! This is deliberately small: the production numeric path is the AOT
 //! JAX/Pallas artifact executed through PJRT (`runtime::executor`); this
 //! type only backs the pure-Rust oracle used for cross-validation.
+//!
+//! **`fma` cargo feature.** With `--features fma`, every
+//! multiply-accumulate in [`axpy`] and [`dot`] goes through
+//! [`f32::mul_add`] (one rounding instead of two) via the single
+//! [`mul_acc`] helper. The feature changes the *bits* relative to the
+//! default build — fused rounding is a different (more accurate) result —
+//! but it is applied uniformly: reference and fused engines, wide lanes
+//! and scalar tails, all funnel through `mul_acc`, so cross-engine
+//! equivalence stays bitwise under either setting of the feature.
 
-
+/// One multiply-accumulate step, the uniform primitive behind [`axpy`]
+/// and [`dot`]: `acc + a * b` by default, `a.mul_add(b, acc)` under the
+/// `fma` cargo feature. Keeping a single funnel is what makes the feature
+/// safe for the bitwise cross-engine invariant (see module docs).
+#[inline(always)]
+pub fn mul_acc(acc: f32, a: f32, b: f32) -> f32 {
+    #[cfg(feature = "fma")]
+    {
+        a.mul_add(b, acc)
+    }
+    #[cfg(not(feature = "fma"))]
+    {
+        acc + a * b
+    }
+}
 
 /// Dense row-major matrix.
 #[derive(Debug, Clone, PartialEq)]
@@ -52,7 +75,7 @@ impl Matrix {
                 let orow = &other.data[k * other.cols..(k + 1) * other.cols];
                 let out_row = &mut out.data[i * other.cols..(i + 1) * other.cols];
                 for (o, &b) in out_row.iter_mut().zip(orow) {
-                    *o += a * b;
+                    *o = mul_acc(*o, a, b);
                 }
             }
         }
@@ -84,17 +107,17 @@ pub fn axpy(acc: &mut [f32], x: &[f32], a: f32) {
     let (acc_w, acc_t) = acc.split_at_mut(wide);
     let (x_w, x_t) = x.split_at(wide);
     for (o, v) in acc_w.chunks_exact_mut(8).zip(x_w.chunks_exact(8)) {
-        o[0] += a * v[0];
-        o[1] += a * v[1];
-        o[2] += a * v[2];
-        o[3] += a * v[3];
-        o[4] += a * v[4];
-        o[5] += a * v[5];
-        o[6] += a * v[6];
-        o[7] += a * v[7];
+        o[0] = mul_acc(o[0], a, v[0]);
+        o[1] = mul_acc(o[1], a, v[1]);
+        o[2] = mul_acc(o[2], a, v[2]);
+        o[3] = mul_acc(o[3], a, v[3]);
+        o[4] = mul_acc(o[4], a, v[4]);
+        o[5] = mul_acc(o[5], a, v[5]);
+        o[6] = mul_acc(o[6], a, v[6]);
+        o[7] = mul_acc(o[7], a, v[7]);
     }
     for (o, &v) in acc_t.iter_mut().zip(x_t) {
-        *o += a * v;
+        *o = mul_acc(*o, a, v);
     }
 }
 
@@ -104,18 +127,18 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     let wide = n / 8 * 8;
     let mut s = [0.0f32; 8];
     for (x, y) in a[..wide].chunks_exact(8).zip(b[..wide].chunks_exact(8)) {
-        s[0] += x[0] * y[0];
-        s[1] += x[1] * y[1];
-        s[2] += x[2] * y[2];
-        s[3] += x[3] * y[3];
-        s[4] += x[4] * y[4];
-        s[5] += x[5] * y[5];
-        s[6] += x[6] * y[6];
-        s[7] += x[7] * y[7];
+        s[0] = mul_acc(s[0], x[0], y[0]);
+        s[1] = mul_acc(s[1], x[1], y[1]);
+        s[2] = mul_acc(s[2], x[2], y[2]);
+        s[3] = mul_acc(s[3], x[3], y[3]);
+        s[4] = mul_acc(s[4], x[4], y[4]);
+        s[5] = mul_acc(s[5], x[5], y[5]);
+        s[6] = mul_acc(s[6], x[6], y[6]);
+        s[7] = mul_acc(s[7], x[7], y[7]);
     }
     let mut tail = 0.0f32;
-    for (x, y) in a[wide..n].iter().zip(&b[wide..n]) {
-        tail += x * y;
+    for (&x, &y) in a[wide..n].iter().zip(&b[wide..n]) {
+        tail = mul_acc(tail, x, y);
     }
     ((s[0] + s[1]) + (s[2] + s[3])) + ((s[4] + s[5]) + (s[6] + s[7])) + tail
 }
@@ -175,10 +198,36 @@ mod tests {
             let mut got: Vec<f32> = (0..n).map(|i| i as f32).collect();
             let mut want = got.clone();
             axpy(&mut got, &x, 0.75);
+            // Scalar reference through the same mul_acc funnel, so this
+            // holds bitwise with and without the `fma` feature.
             for (o, &v) in want.iter_mut().zip(&x) {
-                *o += 0.75 * v;
+                *o = mul_acc(*o, 0.75, v);
             }
             assert_eq!(got, want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn mul_acc_follows_the_fma_feature() {
+        // The single funnel behind axpy/dot: fused rounding iff the
+        // feature is on. (1 + 2^-12)^2 - 1 distinguishes one rounding
+        // from two at f32 precision.
+        let a = 1.0f32 + 2.0f32.powi(-12);
+        for (acc, x, y) in [(-1.0f32, a, a), (0.25, 1.5, -2.75), (1e-8, 3.0, 7.0)] {
+            let want = if cfg!(feature = "fma") { x.mul_add(y, acc) } else { acc + x * y };
+            assert_eq!(mul_acc(acc, x, y).to_bits(), want.to_bits());
+        }
+    }
+
+    #[test]
+    fn axpy_and_dot_agree_on_the_same_mac_sequence() {
+        // Uniformity gate for the `fma` feature: a length-1 dot and a
+        // length-1 axpy perform the identical single mul_acc, so their
+        // bits must match under either feature setting.
+        for (x, y) in [(0.3f32, -1.7f32), (1.0 + 2.0f32.powi(-12), 1.0 + 2.0f32.powi(-12))] {
+            let mut acc = [0.0f32];
+            axpy(&mut acc, &[x], y);
+            assert_eq!(acc[0].to_bits(), dot(&[x], &[y]).to_bits());
         }
     }
 

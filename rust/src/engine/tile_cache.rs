@@ -36,7 +36,13 @@
 //! group's tile can dwarf a hundred leaf tiles. Admission copies the
 //! worker's [`TileScratch`] (the tile was just materialized there anyway);
 //! entries too large for the whole budget are rejected outright; eviction
-//! is strict LRU via an ordered tick index.
+//! is strict LRU via an ordered tick index. In the serving coordinator
+//! this per-worker budget is one term of the unified
+//! [`MemoryBudget`](super::storage::MemoryBudget) accounting — tile-cache
+//! bytes and the storage tier's resident feature pool are declared (and
+//! debug-checked) against one struct, so the two knobs cannot silently
+//! oversubscribe RAM; `Metrics::summary` reports the combined resident
+//! bytes.
 //!
 //! [`FeatureState`]: super::plan::FeatureState
 //! [`FusedEngine::embed_group_tile_cached`]: FusedEngine::embed_group_tile_cached

@@ -99,6 +99,11 @@ pub struct LoadConfig {
     /// Request deadline in milliseconds; `None` keeps the server default
     /// ([`DEFAULT_DEADLINE`]).
     pub deadline_ms: Option<u64>,
+    /// Feature-table memory budget in bytes for the servers under load
+    /// (`ServerConfig::mem_budget_bytes`); `None` keeps the table in RAM.
+    /// Below the working set this forces the storage tier to spill and the
+    /// run measures out-of-core serving — still bitwise-verified.
+    pub mem_budget_bytes: Option<usize>,
 }
 
 impl Default for LoadConfig {
@@ -111,6 +116,7 @@ impl Default for LoadConfig {
             unique: 512,
             seed: 42,
             deadline_ms: None,
+            mem_budget_bytes: None,
         }
     }
 }
@@ -182,6 +188,11 @@ pub struct LoadReport {
     pub tile_cached_bytes: u64,
     pub gather_bytes_saved: u64,
     pub steals: u64,
+    // Storage-tier gauges (zero without a memory budget).
+    pub prefetch_hits: u64,
+    pub prefetch_misses: u64,
+    pub feature_resident_bytes: u64,
+    pub feature_budget_bytes: u64,
     /// Response rows that failed bitwise verification (0 when verification
     /// was off — see [`run_load`]'s `expected`).
     pub mismatches: u64,
@@ -209,6 +220,16 @@ impl LoadReport {
             return 0.0;
         }
         self.tile_hits as f64 / lookups as f64
+    }
+
+    /// Storage-tier hit rate: tiered rows whose chunk was resident at
+    /// gather time, over all tiered (non-bypass) rows.
+    pub fn prefetch_hit_rate(&self) -> f64 {
+        let looked = self.prefetch_hits + self.prefetch_misses;
+        if looked == 0 {
+            return 0.0;
+        }
+        self.prefetch_hits as f64 / looked as f64
     }
 
     /// Submissions that resolved with a typed error, across all classes.
@@ -244,6 +265,11 @@ impl LoadReport {
         j.set("tile_cached_bytes", self.tile_cached_bytes.into());
         j.set("gather_bytes_saved", self.gather_bytes_saved.into());
         j.set("steals", self.steals.into());
+        j.set("prefetch_hit_rate", self.prefetch_hit_rate().into());
+        j.set("prefetch_hits", self.prefetch_hits.into());
+        j.set("prefetch_misses", self.prefetch_misses.into());
+        j.set("feature_resident_bytes", self.feature_resident_bytes.into());
+        j.set("feature_budget_bytes", self.feature_budget_bytes.into());
         j.set("verified", self.verified.into());
         j.set("mismatches", self.mismatches.into());
         j.set("ok", self.ok.into());
@@ -318,6 +344,10 @@ pub fn run_load(
         tile_cached_bytes: m.tile_cached_bytes.load(Ordering::Relaxed),
         gather_bytes_saved: m.tile_gather_bytes_saved.load(Ordering::Relaxed),
         steals: server.steal_count().unwrap_or(0),
+        prefetch_hits: m.feature_prefetch_hits.load(Ordering::Relaxed),
+        prefetch_misses: m.feature_prefetch_misses.load(Ordering::Relaxed),
+        feature_resident_bytes: m.feature_resident_bytes.load(Ordering::Relaxed),
+        feature_budget_bytes: m.feature_budget_bytes.load(Ordering::Relaxed),
         mismatches: mismatches.load(Ordering::Relaxed),
         verified: expected.is_some(),
         ok: m.ok_responses.load(Ordering::Relaxed),
@@ -374,6 +404,7 @@ pub fn run_cache_comparison(
                 tile_cache_bytes: bytes,
                 plans: Arc::clone(&plans),
                 default_deadline: cfg.deadline(),
+                mem_budget_bytes: cfg.mem_budget_bytes,
                 ..ServerConfig::cpu(kind)
             },
         )?;
@@ -444,6 +475,7 @@ pub fn run_fault_injection(
             default_deadline: cfg.deadline(),
             restart_budget,
             faults: faults.is_active().then_some(faults),
+            mem_budget_bytes: cfg.mem_budget_bytes,
             ..ServerConfig::cpu(kind)
         },
     )?;

@@ -9,14 +9,15 @@
 //! ablate  <dataset> [--model M]            all four -B/-S/-P/-O configs
 //! group   <dataset> [--scale S]            grouping quality report
 //! engine  <dataset> [--model M] [--threads N] [--dispatch static|streaming|both]
-//!                                          host engine: striped vs static
+//!         [--mem-budget-mb N]              host engine: striped vs static
 //!                                          LPT schedule vs streaming
-//!                                          work-stealing dispatch
+//!                                          work-stealing dispatch; with a
+//!                                          budget, replay out-of-core too
 //! compare <dataset> [--model M]            TLV vs A100 vs HiHGNN
-//! bench-table <fig2|fig7|fig8|fig9|table3|table4|reuse|serving>  paper table
+//! bench-table <fig2|fig7|fig8|fig9|table3|table4|reuse|serving|budget>  paper table
 //! serve   [--model M] [--scale S] [--cpu]  demo serving loop (PJRT needs
 //!         [--cache-mb N] [--no-cache]      artifacts; --cpu needs none)
-//!         [--deadline-ms N]
+//!         [--deadline-ms N] [--mem-budget-mb N]
 //! loadgen <dataset> [--model M] [--scale S] closed-loop Zipfian load vs
 //!         [--requests N] [--concurrency C]  `serve --cpu`, cache-on vs
 //!         [--skew S] [--batch B]            cache-off on the identical
@@ -26,6 +27,7 @@
 //!         [--json PATH] [--deadline-ms N]   mismatch, hit-rate miss, or
 //!         [--faults SPEC]                   typed serve error
 //!         [--restart-budget N]
+//!         [--mem-budget-mb N]
 //! ```
 //!
 //! `loadgen --faults panic:0.01,delay:0.05[,error:R,delay_ms:D,seed:S]`
@@ -51,12 +53,12 @@ fn usage() -> ! {
         "usage: tlv-hgnn <stats|sim|ablate|group|engine|compare|bench-table|serve|loadgen> [args]\n\
          datasets: acm imdb dblp am fb | models: rgcn rgat nars\n\
          modes: -B -S -P -O | flags: --scale S --model M --mode X --threads N --cpu\n\
-         \x20       --dispatch static|streaming|both (engine subcommand)\n\
-         \x20       --cache-mb N --no-cache --deadline-ms N (serve)\n\
+         \x20       --dispatch static|streaming|both --mem-budget-mb N (engine)\n\
+         \x20       --cache-mb N --no-cache --deadline-ms N --mem-budget-mb N (serve)\n\
          \x20       loadgen: --requests N --concurrency C --skew S --batch B --unique U\n\
          \x20       --seed X --channels N --verify --min-hit-rate F --json PATH\n\
          \x20       --deadline-ms N --faults panic:R,delay:R,error:R,delay_ms:D,seed:S\n\
-         \x20       --restart-budget N"
+         \x20       --restart-budget N --mem-budget-mb N"
     );
     exit(2)
 }
@@ -103,6 +105,15 @@ fn parse_mode(s: &str) -> ExecMode {
 /// Pull `--flag value` out of the arg list.
 fn flag(args: &[String], name: &str) -> Option<String> {
     args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+/// `--mem-budget-mb N` → bytes. Fractional values are allowed so smoke
+/// tests can force the storage tier to spill at tiny dataset scales
+/// (e.g. `--mem-budget-mb 0.05`).
+fn mem_budget_bytes(args: &[String]) -> Option<usize> {
+    flag(args, "--mem-budget-mb")
+        .and_then(|s| s.parse::<f64>().ok())
+        .map(|mb| (mb * 1024.0 * 1024.0).max(0.0) as usize)
 }
 
 fn main() {
@@ -303,6 +314,50 @@ fn main() {
                 );
                 failed |= diff != 0.0;
             }
+            // Out-of-core replay: with --mem-budget-mb the projected feature
+            // table is spilled behind the storage tier and the streaming
+            // dispatch path must reproduce the identical bits while the
+            // prefetcher works the budgeted chunk pool.
+            if let Some(budget) = mem_budget_bytes(rest) {
+                let mut tiered_state = FeatureState::project_all(&plan, threads);
+                if let Err(e) = tiered_state.spill_to_budget(budget) {
+                    eprintln!("spill to {} failed: {e}", human_bytes(budget as u64));
+                    exit(1);
+                }
+                let tiered = FusedEngine::over(&plan, &tiered_state);
+                let t3 = Instant::now();
+                let (b_order, b_grouped, _, _) =
+                    tiered.embed_grouped_streaming(&h, n_max, threads);
+                let tiered_t = t3.elapsed();
+                let stats = tiered_state.storage_stats().expect("tier attached after spill");
+                println!(
+                    "  tiered embed         {tiered_t:.2?} ({}, budget {})",
+                    if tiered_state.is_spilled() { "file-backed" } else { "in-RAM" },
+                    human_bytes(stats.budget_bytes),
+                );
+                println!(
+                    "  storage              resident {}, prefetch hit rate {}, \
+                     {} hits / {} misses / {} bypasses, {} evictions",
+                    human_bytes(stats.resident_bytes),
+                    pct(stats.hit_rate()),
+                    stats.prefetch_hits,
+                    stats.prefetch_misses,
+                    stats.bypasses,
+                    stats.chunk_evictions,
+                );
+                if !stats.accounted() {
+                    println!(
+                        "  storage accounting   FAIL (hits+misses+bypasses != rows gathered)"
+                    );
+                    failed = true;
+                }
+                let diff = striped.max_abs_diff(&b_grouped);
+                println!(
+                    "  tiered max |diff|    {diff:e} {}",
+                    if diff == 0.0 && b_order == order { "(bitwise)" } else { "(FAIL)" }
+                );
+                failed |= diff != 0.0 || b_order != order;
+            }
             if failed {
                 exit(1);
             }
@@ -357,6 +412,7 @@ fn main() {
                 Some("table3") => println!("{}", report::table3_expansion().render()),
                 Some("table4") => println!("{}", report::table4_area_power().render()),
                 Some("reuse") => println!("{}", report::reuse_table().render()),
+                Some("budget") => println!("{}", report::budget_sweep_table().render()),
                 Some("serving") => {
                     // Small verified demo of the hot-tile cache comparison;
                     // the `loadgen` subcommand exposes the full knob set.
@@ -411,6 +467,10 @@ fn main() {
             if let Some(ms) = flag(rest, "--deadline-ms").and_then(|s| s.parse::<u64>().ok()) {
                 cfg.default_deadline = std::time::Duration::from_millis(ms);
             }
+            // Feature-table memory budget: --mem-budget-mb N (fractional MB
+            // allowed) spills the projected table to the file-backed tier
+            // when it exceeds the budget; results stay bitwise-identical.
+            cfg.mem_budget_bytes = mem_budget_bytes(rest);
             let server = match tlv_hgnn::coordinator::Server::start(
                 std::sync::Arc::clone(&g),
                 cfg,
@@ -472,6 +532,7 @@ fn main() {
                     .unwrap_or(defaults.unique),
                 seed: flag(rest, "--seed").and_then(|s| s.parse().ok()).unwrap_or(defaults.seed),
                 deadline_ms: flag(rest, "--deadline-ms").and_then(|s| s.parse().ok()),
+                mem_budget_bytes: mem_budget_bytes(rest),
             };
             let g = std::sync::Arc::new(d.load(scale));
             if let Some(faults) = faults {

@@ -9,12 +9,15 @@ use crate::energy::{
     area_power_report, chip_area_mm2, chip_power_w, gpu_energy, hihgnn_energy, tlv_energy,
     EnergyTable,
 };
-use crate::engine::{measure_reuse, walk_per_semantic, MemoryTracker};
+use crate::engine::{
+    measure_reuse, walk_per_semantic, FeatureState, FusedEngine, InferencePlan, MemoryTracker,
+    StorageStats,
+};
 use crate::grouping::{default_n_max, group_overlap_driven, OverlapHypergraph};
 use crate::hetgraph::stats;
 use crate::model::{ModelConfig, ModelKind};
 use crate::sim::{AccelConfig, ExecMode, SimResult, Simulator};
-use crate::util::table::{f2, fx, human_count, pct, Table};
+use crate::util::table::{f2, fx, human_bytes, human_count, pct, Table};
 
 /// Geometric mean helper (the paper reports GM across workloads).
 pub fn geomean(xs: &[f64]) -> f64 {
@@ -297,6 +300,96 @@ pub fn reuse_table() -> Table {
     t
 }
 
+/// One point of the out-of-core budget sweep: a streaming-dispatch run
+/// with the projected feature table capped at `fraction` of its full
+/// byte size (see `engine::storage`).
+#[derive(Debug, Clone)]
+pub struct BudgetPoint {
+    /// Budget as a fraction of the full projected-table bytes.
+    pub fraction: f64,
+    /// The tier's effective budget (clamped to at least one chunk).
+    pub budget_bytes: u64,
+    /// Whether the rows actually live in the spill file.
+    pub spilled: bool,
+    /// Wall time of the streaming embed at this budget.
+    pub elapsed_ms: f64,
+    /// Bitwise-identical to the in-RAM striped baseline (must be true).
+    pub bitwise: bool,
+    /// Storage counters after the run.
+    pub stats: StorageStats,
+}
+
+/// Run the streaming dispatch path at several feature-pool budgets and
+/// check every run bitwise against the in-RAM striped baseline. `1.0`
+/// keeps the table resident (pure bypass accounting); smaller fractions
+/// force the file-backed tier and dispatcher-driven chunk prefetch.
+pub fn run_budget_sweep(
+    d: Dataset,
+    kind: ModelKind,
+    scale: f64,
+    threads: usize,
+    fractions: &[f64],
+) -> Vec<BudgetPoint> {
+    let g = d.load(scale);
+    let plan = InferencePlan::build(&g, ModelConfig::new(kind), 64);
+    let state = FeatureState::project_all(&plan, threads);
+    let full_bytes = (state.projected.data.len() * std::mem::size_of::<f32>()) as f64;
+    let engine = FusedEngine::over(&plan, &state);
+    let h = OverlapHypergraph::build(&g, 0.01);
+    let n_max = default_n_max(g.target_vertices().len(), threads);
+    let grouping = group_overlap_driven(&h, n_max, threads);
+    let order = grouping.flat_order();
+    let baseline = engine.embed_semantics_complete(&order, threads);
+
+    fractions
+        .iter()
+        .map(|&fraction| {
+            let budget = (full_bytes * fraction) as usize;
+            let mut tiered_state = FeatureState::project_all(&plan, threads);
+            tiered_state.spill_to_budget(budget).expect("spill projected features to budget");
+            let tiered = FusedEngine::over(&plan, &tiered_state);
+            let t0 = std::time::Instant::now();
+            let (b_order, b_out, _, _) = tiered.embed_grouped_streaming(&h, n_max, threads);
+            let elapsed_ms = t0.elapsed().as_secs_f64() * 1e3;
+            let stats = tiered_state.storage_stats().expect("tier attached after spill");
+            BudgetPoint {
+                fraction,
+                budget_bytes: stats.budget_bytes,
+                spilled: tiered_state.is_spilled(),
+                elapsed_ms,
+                bitwise: b_order == order && baseline.max_abs_diff(&b_out) == 0.0,
+                stats,
+            }
+        })
+        .collect()
+}
+
+/// Budget sweep as a rendered table (the `bench-table budget` CLI arm):
+/// streaming embed at 100/50/25/10% of the projected-table bytes, with
+/// prefetch hit rates and a bitwise verdict per point.
+pub fn budget_sweep_table() -> Table {
+    let mut t = Table::new(&[
+        "budget", "bytes", "tier", "time_ms", "hit%", "hits", "misses", "bypasses", "evict",
+        "resident", "ok",
+    ]);
+    for p in run_budget_sweep(Dataset::Acm, ModelKind::Rgcn, 0.1, 4, &[1.0, 0.5, 0.25, 0.10]) {
+        t.row(&[
+            pct(p.fraction),
+            human_bytes(p.budget_bytes),
+            if p.spilled { "file".into() } else { "ram".into() },
+            f2(p.elapsed_ms),
+            pct(p.stats.hit_rate()),
+            p.stats.prefetch_hits.to_string(),
+            p.stats.prefetch_misses.to_string(),
+            p.stats.bypasses.to_string(),
+            p.stats.chunk_evictions.to_string(),
+            human_bytes(p.stats.resident_bytes),
+            if p.bitwise { "bitwise".into() } else { "MISMATCH".into() },
+        ]);
+    }
+    t
+}
+
 /// Serving-side reuse: the hot-tile cache comparison (`loadgen`) as a
 /// two-row table — cache-on vs cache-off under the identical Zipfian
 /// trace. The interesting columns are hit %, gather bytes saved, and the
@@ -376,6 +469,24 @@ mod tests {
         let r = measure_reuse(&grouping, &fused);
         assert!(r.distinct_loads < r.total_loads, "ACM must show overlap reuse");
         assert!(r.reuse_factor() > 1.0);
+    }
+
+    #[test]
+    fn budget_sweep_is_bitwise_and_accounted_at_test_scale() {
+        // One in-RAM point and one forced-spill point; the full sweep
+        // (100/50/25/10%) runs in benches/CLI.
+        let points = run_budget_sweep(Dataset::Acm, ModelKind::Rgcn, 0.05, 2, &[1.0, 0.1]);
+        assert_eq!(points.len(), 2);
+        assert!(!points[0].spilled, "100% budget must stay in RAM");
+        assert!(points[1].spilled, "10% budget must spill");
+        for p in &points {
+            assert!(p.bitwise, "budget {:.2} diverged from the in-RAM baseline", p.fraction);
+            assert!(p.stats.accounted(), "budget {:.2} counter leak", p.fraction);
+        }
+        assert!(
+            points[1].stats.prefetch_hits + points[1].stats.prefetch_misses > 0,
+            "spilled run must gather through the tier"
+        );
     }
 
     #[test]

@@ -58,6 +58,7 @@ fn chaos_load() -> LoadConfig {
         unique: 16,
         seed: 7,
         deadline_ms: Some(2_000),
+        mem_budget_bytes: None,
     }
 }
 

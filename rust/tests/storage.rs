@@ -1,0 +1,204 @@
+//! Integration tests for the memory-budgeted storage tier
+//! (`engine/storage.rs`): bitwise equivalence of tiered execution against
+//! the in-RAM engines at every budget, the demand-side counter equation,
+//! engineered eviction thrash, dispatcher-driven prefetch effectiveness,
+//! end-to-end over-budget serving, and the lockstep between the resident
+//! chunk pool and the accelerator cost model's LRU feature cache.
+
+use std::sync::Arc;
+use tlv_hgnn::datasets::Dataset;
+use tlv_hgnn::engine::{
+    FeatureState, FusedEngine, InferencePlan, Matrix, ReferenceEngine, TieredFeatures,
+    SPILL_CHUNK_ROWS,
+};
+use tlv_hgnn::grouping::{default_n_max, OverlapHypergraph};
+use tlv_hgnn::hetgraph::{HetGraph, VId};
+use tlv_hgnn::loadgen::{run_cache_comparison, LoadConfig};
+use tlv_hgnn::model::{ModelConfig, ModelKind};
+use tlv_hgnn::sim::{FifoCache, Replacement};
+use tlv_hgnn::util::prop::{check, gen};
+use tlv_hgnn::util::SmallRng;
+
+/// Build everything a tiered-vs-RAM comparison needs for one graph.
+struct Fixture {
+    plan: Arc<InferencePlan>,
+    state: FeatureState,
+    h: OverlapHypergraph,
+    n_max: usize,
+}
+
+impl Fixture {
+    fn build(g: &HetGraph, kind: ModelKind, threads: usize) -> Fixture {
+        let plan = Arc::new(InferencePlan::build(g, ModelConfig::new(kind), 64));
+        let state = FeatureState::project_all(&plan, threads);
+        let h = OverlapHypergraph::build(g, 0.01);
+        let n_max = default_n_max(g.target_vertices().len(), threads.max(1));
+        Fixture { plan, state, h, n_max }
+    }
+
+    fn full_bytes(&self) -> usize {
+        self.state.projected.data.len() * 4
+    }
+
+    /// A spilled (or fits-in-budget) clone of the in-RAM state.
+    fn tiered(&self, budget_bytes: usize) -> FeatureState {
+        let mut t = self.state.clone();
+        t.spill_to_budget(budget_bytes).expect("spill projected features");
+        t
+    }
+}
+
+/// Random graphs x random budgets x threads {1, 2, 8} x all three models:
+/// the tiered engine must reproduce the in-RAM streaming output (and the
+/// reference oracle) bit for bit, on both the streaming dispatch path and
+/// the striped path, with every gathered row accounted exactly once.
+#[test]
+fn tiered_execution_is_bitwise_across_random_graphs_and_budgets() {
+    check("tiered-bitwise", 10, |rng| {
+        let g = gen::hetgraph(rng);
+        let kind = ModelKind::ALL[rng.gen_index(ModelKind::ALL.len())];
+        let threads = [1, 2, 8][rng.gen_index(3)];
+        let fx = Fixture::build(&g, kind, threads);
+        let engine = FusedEngine::over(&fx.plan, &fx.state);
+        let (order, baseline, _, _) = engine.embed_grouped_streaming(&fx.h, fx.n_max, threads);
+
+        // Oracle on its own (never spilled) in-RAM state.
+        let reference = ReferenceEngine::with_plan(&g, Arc::clone(&fx.plan), fx.state.clone());
+        let oracle = reference.embed_semantics_complete(&order);
+        assert_eq!(baseline.max_abs_diff(&oracle), 0.0, "in-RAM streaming vs reference");
+
+        // Budget anywhere from ~5% to ~95% of the full table: always spills.
+        let frac = 0.05 + rng.gen_f64() * 0.9;
+        let tiered_state = fx.tiered((fx.full_bytes() as f64 * frac) as usize);
+        assert!(tiered_state.is_spilled(), "fraction {frac:.3} must spill");
+        let tiered = FusedEngine::over(&fx.plan, &tiered_state);
+
+        let (t_order, t_out, _, _) = tiered.embed_grouped_streaming(&fx.h, fx.n_max, threads);
+        assert_eq!(t_order, order, "tiered streaming must emit the same order");
+        assert_eq!(baseline.max_abs_diff(&t_out), 0.0, "tiered streaming diverged");
+
+        let t_striped = tiered.embed_semantics_complete(&order, threads);
+        assert_eq!(baseline.max_abs_diff(&t_striped), 0.0, "tiered striped diverged");
+
+        let s = tiered_state.storage_stats().expect("tier attached");
+        assert!(s.accounted(), "counter equation violated: {s:?}");
+        assert!(s.rows_gathered > 0, "spilled runs must gather through the tier");
+        assert!(s.resident_bytes <= s.budget_bytes, "pool over budget: {s:?}");
+    });
+}
+
+/// Engineered thrash: a budget of one byte clamps to a single resident
+/// chunk, so nearly every chunk transition evicts — and the bits must
+/// still match the in-RAM baseline.
+#[test]
+fn one_chunk_budget_thrashes_but_stays_bitwise() {
+    let g = Dataset::Acm.load(0.05);
+    let fx = Fixture::build(&g, ModelKind::Rgcn, 2);
+    let engine = FusedEngine::over(&fx.plan, &fx.state);
+    let (order, baseline, _, _) = engine.embed_grouped_streaming(&fx.h, fx.n_max, 2);
+
+    let tiered_state = fx.tiered(1);
+    assert!(tiered_state.is_spilled());
+    let tiered = FusedEngine::over(&fx.plan, &tiered_state);
+    let (t_order, t_out, _, _) = tiered.embed_grouped_streaming(&fx.h, fx.n_max, 2);
+    assert_eq!(t_order, order);
+    assert_eq!(baseline.max_abs_diff(&t_out), 0.0, "thrashing run diverged");
+
+    let s = tiered_state.storage_stats().expect("tier attached");
+    assert!(s.chunk_evictions > 0, "one-chunk budget must evict: {s:?}");
+    assert!(s.accounted(), "{s:?}");
+}
+
+/// Below the working set the dispatcher's lookahead (plus chunk reuse
+/// inside sorted tiles) must convert a nonzero share of gathers into
+/// resident hits — the acceptance criterion for the prefetcher.
+#[test]
+fn sub_working_set_budget_yields_prefetch_hits() {
+    let g = Dataset::Acm.load(0.05);
+    let fx = Fixture::build(&g, ModelKind::Rgcn, 2);
+    let tiered_state = fx.tiered(fx.full_bytes() / 4);
+    assert!(tiered_state.is_spilled());
+    let tiered = FusedEngine::over(&fx.plan, &tiered_state);
+    let _ = tiered.embed_grouped_streaming(&fx.h, fx.n_max, 2);
+
+    let s = tiered_state.storage_stats().expect("tier attached");
+    assert!(s.prefetch_hits > 0, "no resident hits at 25% budget: {s:?}");
+    assert!(s.hit_rate() > 0.0);
+    assert!(s.accounted(), "{s:?}");
+}
+
+/// End-to-end over-budget serving: the coordinator spills the feature
+/// table far below its working set and the full loadgen comparison (tile
+/// cache on and off, verified against the in-RAM reference rows) must
+/// complete with zero mismatches and zero typed errors.
+#[test]
+fn over_budget_serving_completes_bitwise() {
+    let g = Arc::new(Dataset::Acm.load(0.05));
+    let cfg = LoadConfig {
+        requests: 60,
+        concurrency: 3,
+        unique: 8,
+        mem_budget_bytes: Some(16 << 10), // far below the projected table
+        ..Default::default()
+    };
+    let cmp = run_cache_comparison(&g, ModelKind::Rgcn, 2, 4 << 20, &cfg, true)
+        .expect("over-budget load run");
+    for r in [&cmp.on, &cmp.off] {
+        assert!(r.verified);
+        assert_eq!(r.mismatches, 0, "{}: bitwise mismatch under spill", r.label);
+        assert_eq!(r.errors(), 0, "{}: typed errors on a fault-free run", r.label);
+        assert!(r.feature_budget_bytes > 0, "{}: budget gauge missing", r.label);
+        assert!(
+            r.prefetch_hits + r.prefetch_misses > 0,
+            "{}: gathers never went through the tier",
+            r.label
+        );
+        assert!(r.feature_resident_bytes <= r.feature_budget_bytes, "{}: pool over budget", r.label);
+    }
+}
+
+/// The resident chunk pool deliberately speaks the same protocol as the
+/// accelerator cost model's LRU feature cache (`sim::FifoCache` with
+/// `Replacement::Lru`): demand hits refresh recency, misses install and
+/// evict the least-recent entry, prefetch installs cold without touching
+/// resident entries. Drive both on one access stream — chunk ids as cache
+/// keys, one single-row gather per access so rows and accesses coincide —
+/// and require identical hit/miss/eviction counts at every step.
+#[test]
+fn resident_pool_locksteps_with_cost_model_lru() {
+    let chunks = 6;
+    let rows = chunks * SPILL_CHUNK_ROWS; // equal-size chunks only
+    let cols = 5;
+    let mut rng = SmallRng::seed_from_u64(0xD15C);
+    let m = Matrix::from_fn(rows, cols, |_, _| (rng.gen_f64() * 2.0 - 1.0) as f32);
+    let chunk_bytes = SPILL_CHUNK_ROWS * cols * 4;
+    let capacity = 2; // resident chunks — forces steady-state eviction
+    let tier = TieredFeatures::spill(&m, capacity * chunk_bytes).expect("spill");
+    let mut model = FifoCache::with_policy(capacity, Replacement::Lru);
+
+    let mut out = Vec::new();
+    for step in 0..4000u32 {
+        if step % 7 == 3 {
+            // Dispatcher-style advisory prefetch of a small chunk set.
+            let a = rng.gen_index(chunks) as u32;
+            let b = rng.gen_index(chunks) as u32;
+            tier.prefetch_chunks(&[a, b]);
+            model.insert_cold(VId(a));
+            model.insert_cold(VId(b));
+        }
+        let row = rng.gen_index(rows);
+        out.clear();
+        tier.gather_rows(&[VId(row as u32)], &mut out);
+        assert_eq!(out.as_slice(), m.row(row), "row {row} must round-trip bitwise");
+        model.access(VId((row / SPILL_CHUNK_ROWS) as u32));
+
+        let s = tier.stats();
+        assert_eq!(s.prefetch_hits, model.hits, "hit divergence at step {step}");
+        assert_eq!(s.prefetch_misses, model.misses, "miss divergence at step {step}");
+        assert_eq!(s.chunk_evictions, model.evictions, "eviction divergence at step {step}");
+    }
+    let s = tier.stats();
+    assert!(s.accounted(), "{s:?}");
+    assert!(s.chunk_evictions > 0, "a 2-of-6-chunk pool must evict under a random stream");
+    assert!(s.prefetch_installs > 0, "prefetch must have installed at least one chunk");
+}
