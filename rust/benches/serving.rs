@@ -3,7 +3,10 @@
 //! with every response row verified bitwise against the serial reference —
 //! plus a chaos section: the same workload shape under seeded fault
 //! injection (worker panics, delays, executor errors), reporting
-//! availability and error-class counts.
+//! availability and error-class counts; plus a mutation section: live
+//! graph deltas published mid-load through `Server::apply_delta`,
+//! reporting swap count and latency, stale-epoch completions, tiles
+//! dropped by epoch invalidation, and the epoch-boundary bitwise verdict.
 //!
 //! Writes `BENCH_serving.json` at the repository root so successive PRs
 //! have a serving-latency (and availability) trajectory to compare
@@ -15,7 +18,9 @@ use std::path::Path;
 use std::sync::Arc;
 use tlv_hgnn::coordinator::FaultPlan;
 use tlv_hgnn::datasets::Dataset;
-use tlv_hgnn::loadgen::{run_cache_comparison, run_fault_injection, LoadConfig};
+use tlv_hgnn::loadgen::{
+    run_cache_comparison, run_fault_injection, run_mutation_load, LoadConfig, MutationSchedule,
+};
 use tlv_hgnn::model::ModelKind;
 use tlv_hgnn::report::serving_table;
 use tlv_hgnn::util::json::Json;
@@ -83,6 +88,30 @@ fn main() {
         if chaos.mismatches == 0 { "PASS" } else { "FAIL" },
     );
 
+    // Mutation section: live deltas through Server::apply_delta between
+    // phases of the same trace shape. Swap latency is the build-to-publish
+    // cost of a delta (paid off-thread, never by a worker); the boundary
+    // verdict proves every epoch bitwise-equal to a from-scratch rebuild.
+    let mutate_cfg = LoadConfig { requests: 5_000, ..cfg.clone() };
+    let schedule = MutationSchedule { deltas: 4, edges_per_delta: 64, seed: 11 };
+    let mutation =
+        run_mutation_load(&g, kind, channels, cache_mb << 20, &mutate_cfg, &schedule, true)
+            .expect("mutation run");
+    let mr = &mutation.report;
+    println!(
+        "mutation: {} swaps ({} compacted) to epoch {}, swap latency last/mean/max \
+         {}us/{}us/{}us, {} stale-epoch completions, {} tiles dropped, boundary bitwise {}",
+        mutation.swaps,
+        mutation.compactions,
+        mutation.final_epoch,
+        mr.swap_latency_last_us,
+        mr.swap_latency_mean_us,
+        mr.swap_latency_max_us,
+        mr.stale_epoch_completions,
+        mr.tile_epoch_drops,
+        if mutation.phase_mismatches + mutation.boundary_mismatches == 0 { "PASS" } else { "FAIL" },
+    );
+
     let mut workload = Json::obj();
     workload.set("dataset", dataset.name().into());
     workload.set("scale", Json::Num(scale));
@@ -115,6 +144,13 @@ fn main() {
          surviving rows stay bitwise, availability stays high"
             .into(),
     );
+    targets.set(
+        "mutation",
+        "live deltas publish under strictly larger epochs with bounded swap latency; \
+         every epoch boundary is bitwise-equal to a from-scratch rebuild; warm tiles \
+         drop on epoch change"
+            .into(),
+    );
 
     let mut chaos_workload = Json::obj();
     chaos_workload.set("requests", chaos_cfg.requests.into());
@@ -129,6 +165,14 @@ fn main() {
     out.set("comparison", cmp.to_json());
     out.set("chaos_workload", chaos_workload);
     out.set("chaos", chaos.to_json());
+
+    let mut mutation_workload = Json::obj();
+    mutation_workload.set("requests", mutate_cfg.requests.into());
+    mutation_workload.set("deltas", (schedule.deltas as u64).into());
+    mutation_workload.set("edges_per_delta", (schedule.edges_per_delta as u64).into());
+    mutation_workload.set("delta_seed", schedule.seed.into());
+    out.set("mutation_workload", mutation_workload);
+    out.set("mutation", mutation.to_json());
 
     let path = Path::new(env!("CARGO_MANIFEST_DIR"))
         .parent()

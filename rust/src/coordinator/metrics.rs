@@ -101,6 +101,20 @@ pub struct Metrics {
     pub workers_abandoned: AtomicU64,
     /// Faults the injection plan actually fired (0 without `--faults`).
     pub injected_faults: AtomicU64,
+    // Live-graph epoch accounting (all zero until `apply_delta` runs).
+    /// Plan swaps published (one per applied `GraphDelta`).
+    pub epoch_swaps: AtomicU64,
+    /// Build-to-publish latency of the most recent swap, microseconds.
+    pub swap_latency_us_last: AtomicU64,
+    /// Worst build-to-publish swap latency observed, microseconds.
+    pub swap_latency_us_max: AtomicU64,
+    /// Sum of all swap latencies (mean = total / swaps), microseconds.
+    pub swap_latency_us_total: AtomicU64,
+    /// Work items that finished on a plan already superseded by a newer
+    /// epoch — in-flight requests allowed to complete across a swap.
+    pub stale_epoch_completions: AtomicU64,
+    /// Tiles dropped from worker caches by epoch invalidation.
+    pub tile_epoch_drops: AtomicU64,
     // Storage-tier gauges (engine::storage; all zero without
     // `--mem-budget-mb`). Stored as *snapshots* of the tier's cumulative
     // `StorageStats` — `record_storage` overwrites rather than adds.
@@ -181,6 +195,25 @@ impl Metrics {
     /// A stolen work item took the cache-less slow path.
     pub fn record_tile_bypass(&self) {
         self.tile_bypass.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One plan swap published: record its build-to-publish latency.
+    pub fn record_swap(&self, build_to_publish: Duration) {
+        let us = build_to_publish.as_micros() as u64;
+        self.epoch_swaps.fetch_add(1, Ordering::Relaxed);
+        self.swap_latency_us_last.store(us, Ordering::Relaxed);
+        self.swap_latency_us_max.fetch_max(us, Ordering::Relaxed);
+        self.swap_latency_us_total.fetch_add(us, Ordering::Relaxed);
+    }
+
+    /// Mean build-to-publish swap latency in microseconds (0 before any
+    /// swap).
+    pub fn swap_latency_mean_us(&self) -> u64 {
+        let swaps = self.epoch_swaps.load(Ordering::Relaxed);
+        if swaps == 0 {
+            return 0;
+        }
+        self.swap_latency_us_total.load(Ordering::Relaxed) / swaps
     }
 
     /// Overwrite the storage-tier gauges with a fresh snapshot of the
@@ -290,6 +323,18 @@ impl Metrics {
                 hits,
                 misses,
                 self.feature_bypasses.load(Ordering::Relaxed),
+            ));
+        }
+        let swaps = self.epoch_swaps.load(Ordering::Relaxed);
+        if swaps > 0 {
+            s.push_str(&format!(
+                " epochs: swaps={swaps} swap_last={}us swap_mean={}us swap_max={}us \
+                 stale_completions={} tile_epoch_drops={}",
+                self.swap_latency_us_last.load(Ordering::Relaxed),
+                self.swap_latency_mean_us(),
+                self.swap_latency_us_max.load(Ordering::Relaxed),
+                self.stale_epoch_completions.load(Ordering::Relaxed),
+                self.tile_epoch_drops.load(Ordering::Relaxed),
             ));
         }
         if self.errors_total() > 0 || self.worker_panics.load(Ordering::Relaxed) > 0 {
@@ -464,6 +509,26 @@ mod tests {
         let m = Metrics::default();
         m.record_request(1);
         assert!(!m.summary().contains("storage:"), "{}", m.summary());
+    }
+
+    #[test]
+    fn swap_metrics_track_last_mean_max_and_gate_the_summary_line() {
+        let m = Metrics::default();
+        assert!(!m.summary().contains("epochs:"), "{}", m.summary());
+        assert_eq!(m.swap_latency_mean_us(), 0);
+        m.record_swap(Duration::from_micros(300));
+        m.record_swap(Duration::from_micros(100));
+        assert_eq!(m.epoch_swaps.load(Ordering::Relaxed), 2);
+        assert_eq!(m.swap_latency_us_last.load(Ordering::Relaxed), 100);
+        assert_eq!(m.swap_latency_us_max.load(Ordering::Relaxed), 300);
+        assert_eq!(m.swap_latency_mean_us(), 200);
+        m.stale_epoch_completions.fetch_add(3, Ordering::Relaxed);
+        m.tile_epoch_drops.fetch_add(7, Ordering::Relaxed);
+        let s = m.summary();
+        assert!(s.contains("epochs: swaps=2"), "{s}");
+        assert!(s.contains("swap_max=300us"), "{s}");
+        assert!(s.contains("stale_completions=3"), "{s}");
+        assert!(s.contains("tile_epoch_drops=7"), "{s}");
     }
 
     #[test]

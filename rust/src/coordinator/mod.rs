@@ -1,9 +1,11 @@
 //! L3 serving coordinator: request router (group affinity), dynamic block
 //! batcher, keyed inference-plan cache (epoch-tagged for downstream
 //! hot-tile caches), multi-channel worker pool over PJRT or the
-//! in-process CPU fused engine, serving metrics, and the failure model
+//! in-process CPU fused engine, serving metrics, the failure model
 //! (typed errors, deadlines, worker supervision, deterministic fault
-//! injection).
+//! injection), and live graph mutation (`Server::apply_delta`:
+//! epoch-swapped plans over incremental adjacency deltas, no
+//! stop-the-world).
 
 pub mod batcher;
 pub mod faults;
@@ -20,6 +22,6 @@ pub use plans::PlanCache;
 pub use request::{InferenceRequest, InferenceResponse, ServeError};
 pub use router::Router;
 pub use server::{
-    ExecutorKind, Server, ServerConfig, CPU_MAX_IN_DIM, DEFAULT_DEADLINE, DEFAULT_RESTART_BUDGET,
-    TILE_CACHE_DEFAULT_BYTES,
+    ExecutorKind, Server, ServerConfig, SwapReport, COMPACT_APPEND_FRACTION, CPU_MAX_IN_DIM,
+    DEFAULT_DEADLINE, DEFAULT_RESTART_BUDGET, TILE_CACHE_DEFAULT_BYTES,
 };

@@ -15,6 +15,21 @@
 //! (or the address was reused by a different allocation), the entry is
 //! rebuilt and replaced instead of being served stale.
 //!
+//! # Graph identity across live deltas
+//!
+//! Pointer identity is only sound while the `Arc` is alive: a dropped
+//! graph's address can be reused by the allocator, and a delta-mutated
+//! graph is a *new* allocation that must never resolve to the old graph's
+//! plans. Two rules close the hazard:
+//!
+//! * every `invalidate`/publish first evicts dead entries (so a reused
+//!   address can't match a stale `Weak`-dead entry — and the `Weak`
+//!   liveness check catches any that race in between), and
+//! * `Server::apply_delta` holds the **old** graph `Arc` across
+//!   `invalidate` + publish of the new one, so both allocations coexist
+//!   and therefore cannot share an address; the new graph always gets a
+//!   fresh key under a strictly larger epoch (tested below).
+//!
 //! Every published plan additionally carries an **epoch**: a cache-wide
 //! monotonically increasing counter stamped at publish time and returned
 //! by [`PlanCache::get_or_build_epoch`]. Downstream caches keyed off a
@@ -140,6 +155,36 @@ impl PlanCache {
         } else {
             Arc::new(InferencePlan::with_adjacency(g, key.m.clone(), max_in_dim, canonical))
         };
+        Self::evict_dead_locked(&mut inner);
+        inner.last_epoch += 1;
+        let epoch = inner.last_epoch;
+        inner.plans.insert(key, PlanEntry { graph: Arc::downgrade(g), plan: Arc::clone(&plan), epoch });
+        (plan, epoch)
+    }
+
+    /// Publish a plan wrapped around a caller-built adjacency — the
+    /// live-delta path. `Server::apply_delta` merges a `GraphDelta` into
+    /// the old plan's adjacency incrementally
+    /// (`FusedAdjacency::apply_delta`); routing that result through
+    /// `get_or_build_epoch` would throw the merge away and re-transpose
+    /// from scratch, so this entry point installs it directly: the
+    /// adjacency becomes `g`'s canonical one, any existing entries under
+    /// `g`'s key are replaced, and the plan is published under a strictly
+    /// larger epoch (dead entries evicted first, like every epoch bump).
+    pub fn publish_with_adjacency(
+        &self,
+        g: &Arc<HetGraph>,
+        m: ModelConfig,
+        max_in_dim: usize,
+        fused: Arc<FusedAdjacency>,
+    ) -> (Arc<InferencePlan>, u64) {
+        let gid = Arc::as_ptr(g) as usize;
+        let key = PlanKey { graph: gid, m, max_in_dim };
+        let plan =
+            Arc::new(InferencePlan::with_adjacency(g, key.m.clone(), max_in_dim, Arc::clone(&fused)));
+        let mut inner = self.inner.lock().expect("plan cache poisoned");
+        Self::evict_dead_locked(&mut inner);
+        inner.adjacencies.insert(gid, (Arc::downgrade(g), fused));
         inner.last_epoch += 1;
         let epoch = inner.last_epoch;
         inner.plans.insert(key, PlanEntry { graph: Arc::downgrade(g), plan: Arc::clone(&plan), epoch });
@@ -154,6 +199,7 @@ impl PlanCache {
     pub fn invalidate(&self, g: &Arc<HetGraph>) {
         let gid = Arc::as_ptr(g) as usize;
         let mut inner = self.inner.lock().expect("plan cache poisoned");
+        Self::evict_dead_locked(&mut inner);
         inner.plans.retain(|k, _| k.graph != gid);
         inner.adjacencies.remove(&gid);
     }
@@ -167,10 +213,22 @@ impl PlanCache {
         self.len() == 0
     }
 
-    /// Drop entries whose graph is gone (long-running multi-tenant
-    /// servers call this between graph swaps).
+    /// Number of cached per-graph adjacencies (diagnostics/tests).
+    pub fn adjacency_count(&self) -> usize {
+        self.inner.lock().expect("plan cache poisoned").adjacencies.len()
+    }
+
+    /// Drop entries whose graph is gone. Runs automatically inside every
+    /// `invalidate` and every epoch bump (`get_or_build_epoch` publish,
+    /// `publish_with_adjacency`), so a long-lived server cannot
+    /// accumulate dead-graph entries across live-delta swaps; also
+    /// callable directly.
     pub fn evict_dead(&self) {
         let mut inner = self.inner.lock().expect("plan cache poisoned");
+        Self::evict_dead_locked(&mut inner);
+    }
+
+    fn evict_dead_locked(inner: &mut CacheInner) {
         inner.plans.retain(|_, e| e.graph.upgrade().is_some());
         inner.adjacencies.retain(|_, (w, _)| w.upgrade().is_some());
     }
@@ -266,6 +324,66 @@ mod tests {
         let (b, eb) = cache.get_or_build_epoch(&g, ModelConfig::new(ModelKind::Rgcn), 24);
         assert!(!Arc::ptr_eq(&a, &b), "invalidate must drop the cached plan");
         assert!(eb > ea, "rebuild after invalidate must advance the epoch");
+    }
+
+    #[test]
+    fn publish_with_adjacency_installs_the_given_transpose() {
+        let g = Arc::new(Dataset::Acm.load(0.03));
+        let cache = PlanCache::new();
+        let (_, e0) = cache.get_or_build_epoch(&g, ModelConfig::new(ModelKind::Rgcn), 24);
+        let fused = Arc::new(crate::hetgraph::FusedAdjacency::build(&g));
+        let (plan, e1) =
+            cache.publish_with_adjacency(&g, ModelConfig::new(ModelKind::Rgcn), 24, Arc::clone(&fused));
+        assert!(e1 > e0, "forced publish advances the epoch");
+        assert!(Arc::ptr_eq(&plan.share_adjacency(), &fused), "the provided arenas are served");
+        // The published entry is now the cached one, at its publish epoch.
+        let (again, e2) = cache.get_or_build_epoch(&g, ModelConfig::new(ModelKind::Rgcn), 24);
+        assert!(Arc::ptr_eq(&again, &plan));
+        assert_eq!(e2, e1);
+        assert_eq!(cache.len(), 1, "forced publish replaces, never duplicates");
+    }
+
+    #[test]
+    fn dead_graphs_are_evicted_on_the_next_publish() {
+        // Satellite: evict_dead is wired into the serve path — after a
+        // graph is dropped, the next publish (epoch bump) removes its
+        // plans AND its adjacency without anyone calling evict_dead.
+        let cache = PlanCache::new();
+        let keep = Arc::new(Dataset::Acm.load(0.03));
+        {
+            let transient = Arc::new(Dataset::Imdb.load(0.03));
+            cache.get_or_build(&transient, ModelConfig::new(ModelKind::Rgcn), 24);
+            assert_eq!(cache.len(), 1);
+            assert_eq!(cache.adjacency_count(), 1);
+        }
+        cache.get_or_build(&keep, ModelConfig::new(ModelKind::Rgcn), 24);
+        assert_eq!(cache.len(), 1, "dead plans gone after the publish");
+        assert_eq!(cache.adjacency_count(), 1, "dead adjacency gone too");
+    }
+
+    #[test]
+    fn delta_swap_never_reuses_the_old_graphs_key() {
+        // The apply_delta publish sequence: the old graph Arc is held
+        // across invalidate + publish, so old and new allocations coexist
+        // — distinct addresses, distinct keys, strictly increasing epochs.
+        use crate::hetgraph::GraphDelta;
+        let cache = PlanCache::new();
+        let old = Arc::new(Dataset::Acm.load(0.03));
+        let (old_plan, e_old) = cache.get_or_build_epoch(&old, ModelConfig::new(ModelKind::Rgcn), 24);
+        let delta = GraphDelta::seeded(&old, 5, 16);
+        let new = Arc::new(delta.apply_to(&old).unwrap());
+        let fused =
+            Arc::new(old_plan.adjacency().apply_delta(&delta, old_plan.adjacency().num_targets()).unwrap());
+        cache.invalidate(&old); // old Arc still alive: address can't be reused
+        let (new_plan, e_new) =
+            cache.publish_with_adjacency(&new, ModelConfig::new(ModelKind::Rgcn), 24, fused);
+        assert!(!Arc::ptr_eq(&old_plan, &new_plan));
+        assert!(e_new > e_old, "the swap lands under a strictly larger epoch");
+        assert_eq!(cache.len(), 1, "only the new graph's plan remains");
+        // The old graph's key is gone: resolving it again rebuilds fresh.
+        let (rebuilt, e_rebuilt) = cache.get_or_build_epoch(&old, ModelConfig::new(ModelKind::Rgcn), 24);
+        assert!(!Arc::ptr_eq(&rebuilt, &old_plan));
+        assert!(e_rebuilt > e_new);
     }
 
     #[test]

@@ -40,9 +40,17 @@ impl Router {
         self.channels
     }
 
+    /// Channel for a target. Vertices beyond the routing table — added by
+    /// a live [`GraphDelta`](crate::hetgraph::GraphDelta) after the router
+    /// was built — fall back to modulo placement: routing is a locality
+    /// (perf) decision only, so an un-grouped placement is never wrong,
+    /// and the table is refreshed at the next full plan rebuild.
     #[inline]
     pub fn channel_of(&self, v: VId) -> usize {
-        self.channel_of[v.idx()] as usize
+        match self.channel_of.get(v.idx()) {
+            Some(&ch) => ch as usize,
+            None => v.idx() % self.channels,
+        }
     }
 
     /// Split a target list into per-channel sublists (order preserved).

@@ -74,6 +74,30 @@
 //! Deterministic fault injection ([`FaultPlan`], `--faults`) drives all of
 //! these paths in tests and the chaos harness without touching production
 //! defaults.
+//!
+//! # Live graph mutation (no stop-the-world)
+//!
+//! With the CPU executor, [`Server::apply_delta`] accepts a
+//! [`GraphDelta`] while serving: the mutated graph, merged adjacency
+//! (append region over the old arenas — `hetgraph::delta` module docs),
+//! plan, and a freshly projected (and re-spilled) [`FeatureState`] are all
+//! built off the worker threads, then published atomically under a
+//! strictly larger [`PlanCache`] epoch: the plan slot (an
+//! `RwLock<Arc<PlanState>>`) is written first, the epoch counter released
+//! second. Workers snapshot the slot per popped item, so every *part*
+//! executes entirely on one epoch's plan+state; in-flight parts finish on
+//! the epoch they started with (counted as `stale_epoch_completions`)
+//! while new admissions see the new one — no queue drain, no pause.
+//! Each worker's hot-tile cache is tagged with its snapshot's epoch and
+//! drops deterministically on refresh ([`TileCache::set_epoch`], counted
+//! as `tile_epoch_drops`); the old graph's plans and adjacency leave the
+//! [`PlanCache`] on publish (and the old graph `Arc` is held across the
+//! invalidate/publish pair so its pointer key cannot be reused — the
+//! graph-identity rule in `plans.rs`). Build-to-publish time is the
+//! **swap latency** metric ([`Metrics::record_swap`]). The epoch-boundary
+//! equivalence invariant (rows bitwise-equal to a from-scratch rebuild at
+//! every epoch) is property-tested in `tests/live_delta.rs` and driven
+//! under faults in `tests/chaos.rs`.
 
 use super::batcher::BlockBatcher;
 use super::faults::{FaultAction, FaultPlan, INJECTED_PANIC_MSG};
@@ -86,16 +110,16 @@ use crate::engine::{
     TileScratch,
 };
 use crate::grouping::{default_n_max, group_overlap_driven, OverlapHypergraph};
-use crate::hetgraph::{HetGraph, VId};
+use crate::hetgraph::{GraphDelta, HetGraph, VId};
 use crate::model::{ModelConfig, ModelKind};
 use crate::runtime::{BlockExecutor, Manifest};
 use anyhow::{Context, Result};
 use rustc_hash::FxHashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -160,6 +184,13 @@ pub const DEFAULT_DEADLINE: Duration = Duration::from_secs(5);
 /// down (queued work is stolen by survivors) instead of masking a
 /// crash-loop forever.
 pub const DEFAULT_RESTART_BUDGET: u32 = 8;
+
+/// Append fraction above which [`Server::apply_delta`] folds the merged
+/// adjacency back into a contiguous layout ([`FusedAdjacency::compact`])
+/// before publishing — the periodic compaction pass. Below it, the swap
+/// ships the cheap append-region merge and leaves the O(E) rebuild for a
+/// later swap that crosses the threshold.
+pub const COMPACT_APPEND_FRACTION: f64 = 0.25;
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -244,15 +275,58 @@ enum Health {
 
 /// Everything a CPU channel worker needs, bundled so the supervisor can
 /// respawn a worker from the same context it was first spawned with.
+/// Workers do not hold a `PlanState` directly: they snapshot `slot` per
+/// popped item (gated by the cheap `latest_epoch` load), so a respawned
+/// worker — and every worker after a live-delta swap — picks up the
+/// currently published plan, not the one from server start.
 struct CpuWorkerCtx {
     queue: Arc<StealQueue<WorkItem>>,
-    shared: Arc<PlanState>,
+    /// The published serving context; replaced wholesale by
+    /// [`Server::apply_delta`].
+    slot: Arc<RwLock<Arc<PlanState>>>,
+    /// Epoch of the newest published [`PlanState`] — a lock-free fast
+    /// path so workers only take the slot's read lock after a swap.
+    latest_epoch: Arc<AtomicU64>,
     cache_bytes: usize,
     /// Unified resident-memory declaration (feature pool + all workers'
     /// tile caches); workers debug-check tracked residency against it.
     budget: MemoryBudget,
     metrics: Arc<Metrics>,
     faults: Option<FaultPlan>,
+}
+
+/// Live-mutation context, present only for the CPU executor: everything
+/// [`Server::apply_delta`] needs to rebuild and republish the serving
+/// plan off the worker threads.
+struct LiveState {
+    /// Shared with every [`CpuWorkerCtx`]: writing it is the publish.
+    slot: Arc<RwLock<Arc<PlanState>>>,
+    latest_epoch: Arc<AtomicU64>,
+    plans: Arc<PlanCache>,
+    model: ModelConfig,
+    channels: usize,
+    mem_budget_bytes: Option<usize>,
+    /// The graph currently being served. The mutex serializes mutators
+    /// (one swap in flight at a time) and keeps the old graph `Arc` alive
+    /// across the invalidate/publish pair — the graph-identity rule.
+    graph: Mutex<Arc<HetGraph>>,
+}
+
+/// Outcome of one live [`GraphDelta`] swap ([`Server::apply_delta`]).
+#[derive(Debug, Clone)]
+pub struct SwapReport {
+    /// The strictly larger [`PlanCache`] epoch the new plan was published
+    /// under; new admissions execute on it.
+    pub epoch: u64,
+    /// Build-to-publish latency: delta receipt to the epoch store that
+    /// makes the new plan visible. The swap-latency metric.
+    pub swap_latency: Duration,
+    /// Whether this swap folded the append region back into a contiguous
+    /// layout (append fraction crossed [`COMPACT_APPEND_FRACTION`]).
+    pub compacted: bool,
+    /// The post-delta graph — callers build verification oracles against
+    /// it and seed the next delta from it.
+    pub graph: Arc<HetGraph>,
 }
 
 /// The running coordinator.
@@ -266,8 +340,11 @@ pub struct Server {
     health: Option<Sender<Health>>,
     pub metrics: Arc<Metrics>,
     next_id: AtomicU64,
-    /// Vertex-space bound for up-front target validation.
-    num_vertices: usize,
+    /// Vertex-space bound for up-front target validation; grows when a
+    /// live delta grows the tail vertex type.
+    num_vertices: AtomicUsize,
+    /// `Some` for the CPU executor: live deltas are accepted.
+    live: Option<LiveState>,
     default_deadline: Duration,
     admission_threshold: usize,
     closing: AtomicBool,
@@ -338,6 +415,7 @@ impl Server {
         let workers: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
         let mut supervisor = None;
         let mut health = None;
+        let mut live = None;
         // Readiness barrier: each worker compiles its PJRT executable up
         // front and signals before start() returns, so the first request
         // never pays compilation latency (it showed up as a seconds-scale
@@ -376,9 +454,21 @@ impl Server {
                     cfg.tile_cache_bytes,
                     cfg.channels,
                 );
+                let slot = Arc::new(RwLock::new(Arc::clone(&shared)));
+                let latest_epoch = Arc::new(AtomicU64::new(shared.epoch));
+                live = Some(LiveState {
+                    slot: Arc::clone(&slot),
+                    latest_epoch: Arc::clone(&latest_epoch),
+                    plans: Arc::clone(&cfg.plans),
+                    model: ModelConfig::new(cfg.kind),
+                    channels: cfg.channels,
+                    mem_budget_bytes: cfg.mem_budget_bytes,
+                    graph: Mutex::new(Arc::clone(&g)),
+                });
                 let ctx = Arc::new(CpuWorkerCtx {
                     queue: Arc::clone(&queue),
-                    shared: Arc::clone(&shared),
+                    slot,
+                    latest_epoch,
                     cache_bytes: cfg.tile_cache_bytes,
                     budget,
                     metrics: Arc::clone(&metrics),
@@ -425,7 +515,8 @@ impl Server {
             health,
             metrics,
             next_id: AtomicU64::new(1),
-            num_vertices,
+            num_vertices: AtomicUsize::new(num_vertices),
+            live,
             default_deadline: cfg.default_deadline,
             admission_threshold: cfg.admission_threshold,
             closing: AtomicBool::new(false),
@@ -464,8 +555,13 @@ impl Server {
             return fail(ServeError::ShuttingDown);
         }
         // Validate before any work is enqueued: a bad id must cost a typed
-        // rejection, not an out-of-bounds panic inside the router.
-        if let Some(&bad) = req.targets.iter().find(|t| t.idx() >= self.num_vertices) {
+        // rejection, not an out-of-bounds panic inside the router. The
+        // bound is atomic because a live delta can grow the vertex space
+        // concurrently (it only ever grows — a stale read rejects a
+        // just-added vertex, which the submitter retries, never admits an
+        // invalid one).
+        let num_vertices = self.num_vertices.load(Ordering::Acquire);
+        if let Some(&bad) = req.targets.iter().find(|t| t.idx() >= num_vertices) {
             return fail(ServeError::InvalidTarget { vid: bad });
         }
         // Admission control: shed instead of queueing into a backlog that
@@ -558,6 +654,91 @@ impl Server {
             WorkQueues::PerChannel(_) => None,
             WorkQueues::Stealing(q) => Some(q.pending()),
         }
+    }
+
+    /// Apply a [`GraphDelta`] to the serving graph without stopping the
+    /// world (module docs, "Live graph mutation"). Blocking for the
+    /// caller — the mutated graph, merged adjacency, plan, and projected
+    /// feature state are all built on this thread — but never for the
+    /// workers: they keep draining the queue on the old epoch's snapshot
+    /// until the new one is published, and in-flight parts finish on the
+    /// plan they started with. Mutators are serialized (second caller
+    /// waits); CPU executor only.
+    ///
+    /// The delta is validated against the current graph; a rejected delta
+    /// (unknown semantic, non-tail vertex growth, out-of-range endpoint)
+    /// is a clean error and the serving state is untouched.
+    pub fn apply_delta(&self, delta: &GraphDelta) -> Result<SwapReport> {
+        let live = self.live.as_ref().ok_or_else(|| {
+            anyhow::anyhow!(
+                "live deltas require the CPU executor; PJRT plans are compiled ahead of time"
+            )
+        })?;
+        // Serializes mutators AND pins the old graph Arc for the whole
+        // swap: `invalidate(old)` + `publish_with_adjacency(new)` must
+        // not race another delta, and the old allocation must outlive the
+        // new one's insertion so the cache never sees a reused pointer
+        // key (plans.rs, "Graph identity across live deltas").
+        let mut graph_slot = live.graph.lock().expect("graph slot poisoned");
+        let old_g = Arc::clone(&graph_slot);
+        let t0 = Instant::now();
+        let g2 = Arc::new(
+            delta.apply_to(&old_g).map_err(|e| anyhow::anyhow!("rejected delta: {e}"))?,
+        );
+        let old_state: Arc<PlanState> = Arc::clone(&live.slot.read().expect("plan slot poisoned"));
+        let target_range = g2.type_range(g2.target_type);
+        let num_targets = (target_range.end - target_range.start) as usize;
+        let mut fused2 = old_state
+            .plan
+            .adjacency()
+            .apply_delta(delta, num_targets)
+            .map_err(|e| anyhow::anyhow!("rejected delta: {e}"))?;
+        // Periodic compaction: fold the append region back into the
+        // contiguous CSR-of-CSRs once it dominates reads. Invisible to
+        // readers (compact() is field-for-field a scratch rebuild).
+        let compacted = fused2.append_fraction() > COMPACT_APPEND_FRACTION;
+        if compacted {
+            fused2 = fused2.compact();
+        }
+        live.plans.invalidate(&old_g);
+        let (plan2, epoch2) = live.plans.publish_with_adjacency(
+            &g2,
+            live.model.clone(),
+            CPU_MAX_IN_DIM,
+            Arc::new(fused2),
+        );
+        // Fresh FP pass over the mutated graph (new vertices need rows;
+        // old rows are bitwise-reproduced — projection is deterministic),
+        // re-spilled under the same budget so the tiered layout is
+        // deterministic per epoch.
+        let mut state2 = FeatureState::project_all(&plan2, live.channels.max(1));
+        if let Some(b) = live.mem_budget_bytes {
+            state2.spill_to_budget(b).context("re-spill feature table after delta")?;
+        }
+        let next = Arc::new(PlanState { plan: plan2, state: state2, epoch: epoch2 });
+        // Publish: slot first, epoch release second. A worker observing
+        // the new epoch is guaranteed the slot already holds the new
+        // snapshot; a worker observing the old epoch keeps the old
+        // snapshot — either way a whole part runs on one epoch.
+        *live.slot.write().expect("plan slot poisoned") = Arc::clone(&next);
+        live.latest_epoch.store(epoch2, Ordering::Release);
+        self.num_vertices.store(g2.num_vertices(), Ordering::Release);
+        *graph_slot = Arc::clone(&g2);
+        let swap_latency = t0.elapsed();
+        self.metrics.record_swap(swap_latency);
+        Ok(SwapReport { epoch: epoch2, swap_latency, compacted, graph: g2 })
+    }
+
+    /// The graph currently being served: the most recent published delta,
+    /// or the `start()` graph when none. `None` for the PJRT executor.
+    pub fn current_graph(&self) -> Option<Arc<HetGraph>> {
+        self.live.as_ref().map(|l| Arc::clone(&l.graph.lock().expect("graph slot poisoned")))
+    }
+
+    /// The [`PlanCache`] epoch new admissions execute under (`None` for
+    /// the PJRT executor).
+    pub fn current_epoch(&self) -> Option<u64> {
+        self.live.as_ref().map(|l| l.latest_epoch.load(Ordering::Acquire))
     }
 
     /// Start shutting down without consuming the server: new submissions
@@ -692,11 +873,28 @@ fn worker_loop_cpu(
     if let Some(ready) = ready {
         let _ = ready.send(Ok(()));
     }
-    let engine = FusedEngine::over(&ctx.shared.plan, &ctx.shared.state);
+    // Snapshot of the published serving context. Refreshed per popped
+    // item when the epoch counter moved (a lock-free load in the steady
+    // state), so each *part* executes entirely on one epoch's plan+state
+    // — the atomicity unit of a live-delta swap.
+    let mut current: Arc<PlanState> = Arc::clone(&ctx.slot.read().expect("plan slot poisoned"));
     let mut scratch = TileScratch::default();
-    let mut cache =
-        (ctx.cache_bytes > 0).then(|| TileCache::new(ctx.cache_bytes, ctx.shared.epoch));
+    let mut cache = (ctx.cache_bytes > 0).then(|| TileCache::new(ctx.cache_bytes, current.epoch));
     while let Some((w, stolen)) = ctx.queue.pop(ch) {
+        if ctx.latest_epoch.load(Ordering::Acquire) != current.epoch {
+            current = Arc::clone(&ctx.slot.read().expect("plan slot poisoned"));
+            if let Some(cache) = &mut cache {
+                // Deterministic drop: tiles gathered under the old
+                // adjacency/state must never serve the new epoch. The
+                // resident-bytes gauge gives the freed bytes back so the
+                // unified budget check stays truthful.
+                let (dropped, freed) = (cache.len() as u64, cache.bytes() as u64);
+                cache.set_epoch(current.epoch);
+                ctx.metrics.tile_epoch_drops.fetch_add(dropped, Ordering::Relaxed);
+                ctx.metrics.tile_cached_bytes.fetch_sub(freed, Ordering::Relaxed);
+            }
+        }
+        let engine = FusedEngine::over(&current.plan, &current.state);
         let action = ctx.faults.as_ref().map_or(FaultAction::None, |f| f.decide(w.req, w.part));
         if action != FaultAction::None {
             ctx.metrics.injected_faults.fetch_add(1, Ordering::Relaxed);
@@ -734,12 +932,18 @@ fn worker_loop_cpu(
         }));
         // Storage-tier gauges + the unified-budget debug check, refreshed
         // per item (cheap: atomic loads on the tier's counters).
-        if let Some(stats) = ctx.shared.state.storage_stats() {
+        if let Some(stats) = current.state.storage_stats() {
             ctx.metrics.record_storage(&stats);
             ctx.budget.check_resident(
                 stats.resident_bytes,
                 ctx.metrics.tile_cached_bytes.load(Ordering::Relaxed),
             );
+        }
+        // A swap published mid-execution: this part still finished —
+        // correctly, on the epoch it started with. Counted so the bench
+        // and chaos harness can see in-flight work surviving swaps.
+        if ctx.latest_epoch.load(Ordering::Acquire) > current.epoch {
+            ctx.metrics.stale_epoch_completions.fetch_add(1, Ordering::Relaxed);
         }
         match outcome {
             Ok(Ok(rows)) => {

@@ -1,0 +1,376 @@
+//! Live-graph mutation batches: `GraphDelta`.
+//!
+//! Production graphs mutate under traffic. A [`GraphDelta`] is one batch of
+//! structural insertions — typed edges plus optional vertex growth — that
+//! the serving layer applies without rebuilding the world: the coordinator
+//! merges the delta into the per-semantic CSRs (this module) and into the
+//! vertex-major transpose as append regions
+//! ([`FusedAdjacency::apply_delta`](super::fused::FusedAdjacency::apply_delta)),
+//! then publishes the result under a strictly larger plan epoch.
+//!
+//! Two rules keep deltas compatible with the repo's bitwise invariant and
+//! with stable vertex identity:
+//!
+//! * **Only the tail vertex type may grow.** Global VIds are assigned
+//!   contiguously per type in declaration order, so growing any type but
+//!   the one with the largest base would shift every later type's id range
+//!   and silently rename vertices. A non-tail growth request is a typed
+//!   [`DeltaError::VertexShift`], never a renumbering.
+//! * **Merges are canonical.** [`GraphDelta::apply_to`] rebuilds each
+//!   touched semantic via [`SemanticCsr::from_pairs`] over the union of old
+//!   and new edges — the exact constructor a from-scratch build uses — so
+//!   the mutated graph is field-for-field identical to rebuilding from the
+//!   full edge list (sorted neighbors, parallel edges deduplicated). This
+//!   is what makes "serve after delta" bitwise-equal to "rebuild from
+//!   scratch" at every epoch boundary.
+//!
+//! Deltas carry no deletions and no new semantics: a semantic is model
+//! structure (it owns learned weights), so changing the semantic set is a
+//! new model, not a graph mutation.
+
+use super::csr::SemanticCsr;
+use super::hetgraph::HetGraph;
+use super::types::{SemanticId, TypedEdge, VId, VertexTypeId};
+use crate::util::SmallRng;
+use rustc_hash::FxHashMap;
+use std::fmt;
+
+/// Why a delta cannot be applied. Every variant is a caller error detected
+/// before any state is touched — application is all-or-nothing.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DeltaError {
+    /// The delta contains no edges and no vertex growth.
+    Empty,
+    /// An edge references a semantic the graph does not declare.
+    UnknownSemantic(SemanticId),
+    /// A growth request references an undeclared vertex type.
+    UnknownVertexType(VertexTypeId),
+    /// Growth of a non-tail vertex type would shift later types' VId
+    /// ranges and rename existing vertices.
+    VertexShift { requested: VertexTypeId, tail: VertexTypeId },
+    /// An edge endpoint falls outside its semantic's declared (post-growth)
+    /// type range.
+    EndpointOutOfRange(TypedEdge),
+    /// The merged graph failed structural validation (internal bug guard).
+    Invalid(String),
+}
+
+impl fmt::Display for DeltaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DeltaError::Empty => write!(f, "delta has no edges and no vertex growth"),
+            DeltaError::UnknownSemantic(s) => write!(f, "delta references unknown semantic {s}"),
+            DeltaError::UnknownVertexType(t) => {
+                write!(f, "delta references unknown vertex type {t}")
+            }
+            DeltaError::VertexShift { requested, tail } => write!(
+                f,
+                "cannot grow non-tail vertex type {requested} (only {tail} may grow; \
+                 growing earlier types would renumber existing vertices)"
+            ),
+            DeltaError::EndpointOutOfRange(e) => write!(
+                f,
+                "edge {} --{}--> {} has an endpoint outside its semantic's type range",
+                e.src, e.semantic, e.dst
+            ),
+            DeltaError::Invalid(msg) => write!(f, "delta produced an invalid graph: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for DeltaError {}
+
+/// One batch of live insertions: typed edges under existing semantics plus
+/// optional growth of the tail vertex type. See module docs for the rules.
+#[derive(Debug, Clone, Default)]
+pub struct GraphDelta {
+    edges: Vec<TypedEdge>,
+    grow: Vec<(VertexTypeId, u32)>,
+}
+
+impl GraphDelta {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Queue one edge insertion `src --semantic--> dst` (global VIds).
+    /// Duplicates of existing edges are legal and merge to nothing
+    /// (parallel edges add nothing to neighbor aggregation).
+    pub fn add_edge(&mut self, src: VId, dst: VId, semantic: SemanticId) {
+        self.edges.push(TypedEdge { src, dst, semantic });
+    }
+
+    /// Queue growth of vertex type `t` by `extra` vertices. Only the tail
+    /// type (largest VId base) is growable — see module docs.
+    pub fn grow_type(&mut self, t: VertexTypeId, extra: u32) {
+        if extra > 0 {
+            self.grow.push((t, extra));
+        }
+    }
+
+    /// Queued edge insertions (duplicates included).
+    pub fn edges(&self) -> &[TypedEdge] {
+        &self.edges
+    }
+
+    /// Number of queued edge insertions. May exceed the number of edges
+    /// actually added: inserts that duplicate existing edges merge away.
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Total queued vertex growth across all requests.
+    pub fn num_grown(&self) -> u32 {
+        self.grow.iter().map(|&(_, n)| n).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.edges.is_empty() && self.num_grown() == 0
+    }
+
+    /// A deterministic random delta of `edges` insertions against `g`'s
+    /// current shape: each picks a semantic uniformly, then uniform
+    /// endpoints inside that semantic's declared type ranges. Same
+    /// `(graph shape, seed, edges)` → identical delta, which is what lets
+    /// the load harness and CI replay mutation schedules exactly.
+    pub fn seeded(g: &HetGraph, seed: u64, edges: usize) -> GraphDelta {
+        let mut rng = SmallRng::seed_from_u64(seed);
+        let mut d = GraphDelta::new();
+        if g.num_semantics() == 0 {
+            return d;
+        }
+        for _ in 0..edges {
+            let sid = SemanticId(rng.gen_range(g.num_semantics() as u64) as u16);
+            let spec = &g.semantics[sid.0 as usize];
+            let sr = g.type_range(spec.src_type);
+            let dr = g.type_range(spec.dst_type);
+            if sr.is_empty() || dr.is_empty() {
+                continue;
+            }
+            let src = VId(sr.start + rng.gen_range((sr.end - sr.start) as u64) as u32);
+            let dst = VId(dr.start + rng.gen_range((dr.end - dr.start) as u64) as u32);
+            d.add_edge(src, dst, sid);
+        }
+        d
+    }
+
+    /// The one growable type: the tail of the VId layout.
+    fn tail_type(g: &HetGraph) -> VertexTypeId {
+        VertexTypeId((g.vertex_types.len() - 1) as u16)
+    }
+
+    /// Check the delta against `g` without touching anything. Endpoint
+    /// ranges are evaluated *after* queued growth, so an edge may target a
+    /// vertex the same delta introduces.
+    pub fn validate(&self, g: &HetGraph) -> Result<(), DeltaError> {
+        if self.is_empty() {
+            return Err(DeltaError::Empty);
+        }
+        let tail = Self::tail_type(g);
+        let mut grown: FxHashMap<u16, u32> = FxHashMap::default();
+        for &(t, extra) in &self.grow {
+            if t.0 as usize >= g.vertex_types.len() {
+                return Err(DeltaError::UnknownVertexType(t));
+            }
+            if t != tail {
+                return Err(DeltaError::VertexShift { requested: t, tail });
+            }
+            *grown.entry(t.0).or_insert(0) += extra;
+        }
+        let range_after = |t: VertexTypeId| {
+            let r = g.type_range(t);
+            r.start..r.end + grown.get(&t.0).copied().unwrap_or(0)
+        };
+        for e in &self.edges {
+            let Some(spec) = g.semantics.get(e.semantic.0 as usize) else {
+                return Err(DeltaError::UnknownSemantic(e.semantic));
+            };
+            if !range_after(spec.src_type).contains(&e.src.0)
+                || !range_after(spec.dst_type).contains(&e.dst.0)
+            {
+                return Err(DeltaError::EndpointOutOfRange(*e));
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply the delta to `g`, producing the mutated graph. Each touched
+    /// semantic's CSR is rebuilt through [`SemanticCsr::from_pairs`] over
+    /// the union of old and new edges, so the result is field-for-field
+    /// identical to building from scratch with the union edge list (the
+    /// epoch-boundary bitwise guarantee). Untouched semantics are cloned
+    /// as-is. All-or-nothing: any validation failure leaves `g` unused.
+    pub fn apply_to(&self, g: &HetGraph) -> Result<HetGraph, DeltaError> {
+        self.validate(g)?;
+        let mut g2 = g.clone();
+        for &(t, extra) in &self.grow {
+            g2.vertex_types[t.0 as usize].count += extra;
+        }
+
+        // Bucket insertions per semantic, then per target.
+        let mut per_sem: FxHashMap<u16, FxHashMap<VId, Vec<VId>>> = FxHashMap::default();
+        for e in &self.edges {
+            per_sem.entry(e.semantic.0).or_default().entry(e.dst).or_default().push(e.src);
+        }
+        for (sid, additions) in per_sem {
+            let old = &g2.csrs[sid as usize];
+            let mut pairs: FxHashMap<VId, Vec<VId>> =
+                old.iter().map(|(t, ns)| (t, ns.to_vec())).collect();
+            for (t, srcs) in additions {
+                pairs.entry(t).or_default().extend(srcs);
+            }
+            // from_pairs re-sorts and dedups — identical to a scratch build.
+            g2.csrs[sid as usize] =
+                SemanticCsr::from_pairs(SemanticId(sid), pairs.into_iter().collect());
+        }
+        g2.validate().map_err(DeltaError::Invalid)?;
+        Ok(g2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetgraph::HetGraphBuilder;
+
+    /// Targets P = {0..3}, sources A = {3..7}; AP and PP semantics.
+    fn tiny() -> HetGraph {
+        let mut b = HetGraphBuilder::new("tiny");
+        let p = b.add_vertex_type("P", 3, 4);
+        let a = b.add_vertex_type("A", 4, 8);
+        let ap = b.add_semantic("AP", a, p);
+        let pp = b.add_semantic("PP", p, p);
+        b.add_edge(VId(3), VId(0), ap);
+        b.add_edge(VId(4), VId(0), ap);
+        b.add_edge(VId(4), VId(1), ap);
+        b.add_edge(VId(1), VId(0), pp);
+        b.set_target_type(p);
+        b.build().unwrap()
+    }
+
+    /// Scratch-build the union graph: `tiny()`'s edges plus `extra`.
+    fn scratch_union(extra: &[(u32, u32, u16)], grow_a: u32) -> HetGraph {
+        let mut b = HetGraphBuilder::new("tiny");
+        let p = b.add_vertex_type("P", 3, 4);
+        let a = b.add_vertex_type("A", 4 + grow_a, 8);
+        let ap = b.add_semantic("AP", a, p);
+        let pp = b.add_semantic("PP", p, p);
+        b.add_edge(VId(3), VId(0), ap);
+        b.add_edge(VId(4), VId(0), ap);
+        b.add_edge(VId(4), VId(1), ap);
+        b.add_edge(VId(1), VId(0), pp);
+        b.set_target_type(p);
+        for &(s, d, sem) in extra {
+            b.add_edge(VId(s), VId(d), SemanticId(sem));
+        }
+        b.build().unwrap()
+    }
+
+    fn assert_same_csrs(a: &HetGraph, b: &HetGraph) {
+        assert_eq!(a.csrs.len(), b.csrs.len());
+        for (ca, cb) in a.csrs.iter().zip(&b.csrs) {
+            assert_eq!(ca.semantic, cb.semantic);
+            assert_eq!(ca.targets, cb.targets);
+            assert_eq!(ca.offsets, cb.offsets);
+            assert_eq!(ca.sources, cb.sources);
+        }
+    }
+
+    #[test]
+    fn merge_equals_scratch_build() {
+        let g = tiny();
+        let mut d = GraphDelta::new();
+        d.add_edge(VId(5), VId(2), SemanticId(0)); // new target row
+        d.add_edge(VId(6), VId(0), SemanticId(0)); // extend existing row
+        d.add_edge(VId(2), VId(1), SemanticId(1)); // other semantic
+        let g2 = d.apply_to(&g).unwrap();
+        g2.validate().unwrap();
+        assert_same_csrs(&g2, &scratch_union(&[(5, 2, 0), (6, 0, 0), (2, 1, 1)], 0));
+        assert_eq!(g2.num_edges(), 7);
+        // Original untouched.
+        assert_eq!(g.num_edges(), 4);
+    }
+
+    #[test]
+    fn duplicate_insertions_merge_away() {
+        let g = tiny();
+        let mut d = GraphDelta::new();
+        d.add_edge(VId(3), VId(0), SemanticId(0)); // already present
+        d.add_edge(VId(5), VId(1), SemanticId(0)); // new
+        d.add_edge(VId(5), VId(1), SemanticId(0)); // duplicate of the new one
+        let g2 = d.apply_to(&g).unwrap();
+        assert_eq!(g2.num_edges(), 5, "three inserts, one actual new edge");
+        assert_same_csrs(&g2, &scratch_union(&[(5, 1, 0)], 0));
+    }
+
+    #[test]
+    fn tail_type_grows_and_new_vertex_can_source_edges() {
+        let g = tiny();
+        let mut d = GraphDelta::new();
+        d.grow_type(VertexTypeId(1), 2); // A grows 4 -> 6, VIds 7..9 appear
+        d.add_edge(VId(8), VId(2), SemanticId(0)); // edge from a new vertex
+        let g2 = d.apply_to(&g).unwrap();
+        assert_eq!(g2.num_vertices(), 9);
+        assert_eq!(g2.type_range(VertexTypeId(1)), 3..9);
+        assert_same_csrs(&g2, &scratch_union(&[(8, 2, 0)], 2));
+        // Existing VIds kept their identity: type bases unchanged.
+        assert_eq!(g2.type_base, g.type_base);
+    }
+
+    #[test]
+    fn non_tail_growth_is_a_typed_error() {
+        let g = tiny();
+        let mut d = GraphDelta::new();
+        d.grow_type(VertexTypeId(0), 1); // P is not the tail type
+        match d.apply_to(&g) {
+            Err(DeltaError::VertexShift { requested, tail }) => {
+                assert_eq!(requested, VertexTypeId(0));
+                assert_eq!(tail, VertexTypeId(1));
+            }
+            other => panic!("expected VertexShift, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_deltas_are_typed_errors() {
+        let g = tiny();
+        assert_eq!(GraphDelta::new().apply_to(&g), Err(DeltaError::Empty));
+
+        let mut d = GraphDelta::new();
+        d.add_edge(VId(3), VId(0), SemanticId(9));
+        assert!(matches!(d.apply_to(&g), Err(DeltaError::UnknownSemantic(SemanticId(9)))));
+
+        let mut d = GraphDelta::new();
+        d.add_edge(VId(0), VId(0), SemanticId(0)); // src 0 is a P vertex, AP wants A
+        assert!(matches!(d.apply_to(&g), Err(DeltaError::EndpointOutOfRange(_))));
+
+        let mut d = GraphDelta::new();
+        d.add_edge(VId(7), VId(0), SemanticId(0)); // A range is 3..7 without growth
+        assert!(matches!(d.apply_to(&g), Err(DeltaError::EndpointOutOfRange(_))));
+    }
+
+    #[test]
+    fn seeded_is_deterministic_and_valid() {
+        let g = tiny();
+        let a = GraphDelta::seeded(&g, 7, 40);
+        let b = GraphDelta::seeded(&g, 7, 40);
+        assert_eq!(a.edges(), b.edges());
+        assert_eq!(a.num_edges(), 40);
+        let g2 = a.apply_to(&g).unwrap();
+        g2.validate().unwrap();
+        assert!(GraphDelta::seeded(&g, 8, 40).edges() != a.edges(), "seeds differentiate");
+    }
+
+    #[test]
+    fn chained_deltas_equal_one_scratch_build() {
+        let g = tiny();
+        let extra = [(5u32, 2u32, 0u16), (6, 0, 0), (2, 1, 1), (6, 1, 0)];
+        let mut cur = g.clone();
+        for &(s, d, sem) in &extra {
+            let mut delta = GraphDelta::new();
+            delta.add_edge(VId(s), VId(d), SemanticId(sem));
+            cur = delta.apply_to(&cur).unwrap();
+        }
+        assert_same_csrs(&cur, &scratch_union(&extra, 0));
+    }
+}

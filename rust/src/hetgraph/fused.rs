@@ -13,8 +13,25 @@
 //! locality, which is the software analogue of the accelerator streaming a
 //! whole aggregation workload per vertex (§IV-B).
 //!
+//! # Append region (live-graph deltas)
+//!
+//! A [`GraphDelta`](super::delta::GraphDelta) mutates a served graph
+//! without a stop-the-world rebuild: [`FusedAdjacency::apply_delta`]
+//! produces a new adjacency that *shares* the contiguous base arenas of
+//! the old one (`Arc`'d `entry_offsets`/`entries`/`sources` — no O(E)
+//! copy) and carries the merged rows of touched targets in a patch arena
+//! (`patch_entries`/`patch_sources`), with a per-target redirect map
+//! consulted by [`entries_of`](FusedAdjacency::entries_of). The high bit
+//! of an entry's start offset says which arena its neighbors live in, so
+//! readers stay branch-cheap and compact adjacencies pay nothing.
+//! Re-touching a target strands its previous merge in the patch arena;
+//! [`compact`](FusedAdjacency::compact) periodically folds everything back
+//! into fresh contiguous arrays — field-for-field identical to a scratch
+//! [`build`](FusedAdjacency::build) of the mutated graph, which is what
+//! keeps delta-serving bitwise-equal to rebuild-from-scratch.
+//!
 //! Invariants (checked by [`FusedAdjacency::validate`] and the property
-//! tests in `rust/tests/properties.rs`):
+//! tests in `rust/tests/properties.rs` / `rust/tests/live_delta.rs`):
 //!
 //! * entries of one target are strictly ascending in semantic id and each
 //!   has a non-empty neighbor slice (mirroring `aggregate_partial`'s
@@ -22,20 +39,30 @@
 //!   reference engine performs);
 //! * the neighbor slice of `(target, semantic)` is bitwise the same list
 //!   as `SemanticCsr::neighbors(target)` (same sort order — this is what
-//!   makes fused numerics reproduce the reference engine exactly);
+//!   makes fused numerics reproduce the reference engine exactly), with
+//!   patched rows taking precedence over the base arena;
 //! * every edge of every semantic whose targets lie in the target-type
 //!   range appears exactly once.
 
 use super::csr::SemanticCsr;
+use super::delta::{DeltaError, GraphDelta};
 use super::hetgraph::HetGraph;
 use super::types::{SemanticId, VId};
+use rustc_hash::FxHashMap;
+use std::sync::Arc;
+
+/// Arena discriminator in [`FusedEntry::start`]: set = the neighbor slice
+/// lives in the patch arena, clear = the contiguous base arena. Caps each
+/// arena at 2^31 neighbor slots — far beyond the largest evaluated graph.
+const PATCH_BIT: u32 = 1 << 31;
 
 /// One (semantic, neighbor-range) record of a target's fused row.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct FusedEntry {
     /// The semantic this neighborhood belongs to.
     pub semantic: SemanticId,
-    /// Start offset into `FusedAdjacency::sources`.
+    /// Start offset into the owning adjacency's source arena; the high
+    /// bit ([`PATCH_BIT`]) selects base vs patch arena.
     start: u32,
     /// Neighbor count (always >= 1).
     len: u32,
@@ -60,13 +87,28 @@ pub struct FusedAdjacency {
     /// Number of target-type vertices (isolated ones included).
     num_targets: usize,
     /// `entry_offsets[i]..entry_offsets[i+1]` indexes `entries` for the
-    /// i-th target (by local index, i.e. `VId - base`).
-    entry_offsets: Vec<u32>,
+    /// i-th target (by local index, i.e. `VId - base`). `Arc`'d so a
+    /// delta-derived adjacency shares the base arenas instead of copying.
+    entry_offsets: Arc<Vec<u32>>,
     /// Per-(target, semantic) records, grouped by target, ascending
     /// semantic within each target.
-    entries: Vec<FusedEntry>,
+    entries: Arc<Vec<FusedEntry>>,
     /// Concatenated neighbor lists, grouped by target then semantic.
-    sources: Vec<VId>,
+    sources: Arc<Vec<VId>>,
+    /// Append-region redirects: local target index → entry range in
+    /// `patch_entries` that *replaces* the target's base row. Empty on a
+    /// compact adjacency, so the hot path pays one `is_empty` check.
+    patched: FxHashMap<u32, (u32, u32)>,
+    /// Entry records of patched targets (complete rows, untouched
+    /// semantics included — their neighbor slices may still point at the
+    /// base arena).
+    patch_entries: Vec<FusedEntry>,
+    /// Neighbor lists written by delta merges ([`PATCH_BIT`] offsets).
+    patch_sources: Vec<VId>,
+    /// Live edge count (base + patch, superseded rows excluded).
+    edges: usize,
+    /// Live (target, semantic) entry count.
+    entry_count: usize,
 }
 
 impl FusedAdjacency {
@@ -116,6 +158,7 @@ impl FusedAdjacency {
         // target's entries ascend in semantic id without any sort.
         let total_entries = entry_offsets[num_targets] as usize;
         let total_sources = src_offsets[num_targets] as usize;
+        assert!(total_sources < PATCH_BIT as usize, "source arena exceeds offset space");
         let mut entries =
             vec![FusedEntry { semantic: SemanticId(0), start: 0, len: 0 }; total_entries];
         let mut sources = vec![VId(0); total_sources];
@@ -141,7 +184,19 @@ impl FusedAdjacency {
             }
         }
 
-        FusedAdjacency { num_semantics, base, num_targets, entry_offsets, entries, sources }
+        FusedAdjacency {
+            num_semantics,
+            base,
+            num_targets,
+            edges: total_sources,
+            entry_count: total_entries,
+            entry_offsets: Arc::new(entry_offsets),
+            entries: Arc::new(entries),
+            sources: Arc::new(sources),
+            patched: FxHashMap::default(),
+            patch_entries: Vec::new(),
+            patch_sources: Vec::new(),
+        }
     }
 
     /// Number of semantics of the source graph.
@@ -159,13 +214,38 @@ impl FusedAdjacency {
     /// Total (target, semantic) pairs with at least one edge.
     #[inline]
     pub fn num_entries(&self) -> usize {
-        self.entries.len()
+        self.entry_count
     }
 
     /// Total edge count.
     #[inline]
     pub fn num_edges(&self) -> usize {
-        self.sources.len()
+        self.edges
+    }
+
+    /// `true` when every row lives in the contiguous base arena (no
+    /// outstanding delta patches).
+    #[inline]
+    pub fn is_compact(&self) -> bool {
+        self.patched.is_empty()
+    }
+
+    /// Neighbor slots in the append arena, superseded merges included
+    /// (re-touching a target strands its previous merge until `compact`).
+    #[inline]
+    pub fn appended_sources(&self) -> usize {
+        self.patch_sources.len()
+    }
+
+    /// Fraction of all stored neighbor slots living in the append arena —
+    /// the input to the coordinator's periodic-compaction policy.
+    pub fn append_fraction(&self) -> f64 {
+        let total = self.sources.len() + self.patch_sources.len();
+        if total == 0 {
+            0.0
+        } else {
+            self.patch_sources.len() as f64 / total as f64
+        }
     }
 
     /// Local index of a target VId, `None` if outside the target range.
@@ -183,13 +263,25 @@ impl FusedAdjacency {
         (0..self.num_targets as u32).map(|i| VId(self.base + i)).collect()
     }
 
+    /// The i-th target's row in the contiguous base arena (pre-patch).
+    #[inline]
+    fn base_entries(&self, i: usize) -> &[FusedEntry] {
+        &self.entries[self.entry_offsets[i] as usize..self.entry_offsets[i + 1] as usize]
+    }
+
     /// All cross-semantic neighborhoods of `t`, O(1) — no binary search.
     /// Empty for isolated targets and VIds outside the target range.
+    /// Patched rows (delta merges) take precedence over the base arena.
     #[inline]
     pub fn entries_of(&self, t: VId) -> &[FusedEntry] {
         match self.local_index(t) {
             Some(i) => {
-                &self.entries[self.entry_offsets[i] as usize..self.entry_offsets[i + 1] as usize]
+                if !self.patched.is_empty() {
+                    if let Some(&(lo, hi)) = self.patched.get(&(i as u32)) {
+                        return &self.patch_entries[lo as usize..hi as usize];
+                    }
+                }
+                self.base_entries(i)
             }
             None => &[],
         }
@@ -198,7 +290,13 @@ impl FusedAdjacency {
     /// Neighbor slice of one entry (same order as the source CSR).
     #[inline]
     pub fn neighbors(&self, e: &FusedEntry) -> &[VId] {
-        &self.sources[e.start as usize..(e.start + e.len) as usize]
+        let s = (e.start & !PATCH_BIT) as usize;
+        let n = e.len as usize;
+        if e.start & PATCH_BIT == 0 {
+            &self.sources[s..s + n]
+        } else {
+            &self.patch_sources[s..s + n]
+        }
     }
 
     /// Total in-degree of a target across all semantics. O(S_t), not
@@ -212,15 +310,161 @@ impl FusedAdjacency {
     /// (isolated targets yield an empty slice).
     pub fn iter(&self) -> impl Iterator<Item = (VId, &[FusedEntry])> + '_ {
         (0..self.num_targets).map(move |i| {
-            let es =
-                &self.entries[self.entry_offsets[i] as usize..self.entry_offsets[i + 1] as usize];
-            (VId(self.base + i as u32), es)
+            let t = VId(self.base + i as u32);
+            (t, self.entries_of(t))
         })
+    }
+
+    /// Merge a [`GraphDelta`] into a new adjacency that shares this one's
+    /// base arenas (no O(E) copy — see module docs). `num_targets` is the
+    /// post-delta target-type vertex count (≥ the current count; pass the
+    /// current count when the target type did not grow). Each touched
+    /// target gets a complete rebuilt row in the patch arena: new sources
+    /// merged sorted-and-deduplicated into the affected semantics —
+    /// exactly the canonical `SemanticCsr::from_pairs` order, so reading
+    /// through the result is bitwise-identical to a scratch rebuild of the
+    /// mutated graph. `self` is unchanged; in-flight readers of the old
+    /// epoch never observe the merge.
+    pub fn apply_delta(
+        &self,
+        delta: &GraphDelta,
+        num_targets: usize,
+    ) -> Result<FusedAdjacency, DeltaError> {
+        if num_targets < self.num_targets {
+            return Err(DeltaError::Invalid(format!(
+                "target count may not shrink ({} -> {num_targets})",
+                self.num_targets
+            )));
+        }
+        let mut next = self.clone();
+        if num_targets > self.num_targets {
+            // New targets start with an empty base row.
+            let offsets = Arc::make_mut(&mut next.entry_offsets);
+            let last = *offsets.last().unwrap_or(&0);
+            offsets.resize(num_targets + 1, last);
+            next.num_targets = num_targets;
+        }
+
+        // Bucket insertions per local target, per semantic. BTreeMap keeps
+        // patch-arena layout deterministic for a given delta.
+        let mut by_target: std::collections::BTreeMap<u32, FxHashMap<SemanticId, Vec<VId>>> =
+            std::collections::BTreeMap::new();
+        for e in delta.edges() {
+            if e.semantic.0 as usize >= self.num_semantics {
+                return Err(DeltaError::UnknownSemantic(e.semantic));
+            }
+            // Non-target destinations never enter the transpose (the same
+            // defensive skip `from_csrs` applies).
+            if let Some(li) = next.local_index(e.dst) {
+                by_target.entry(li as u32).or_default().entry(e.semantic).or_default().push(e.src);
+            }
+        }
+
+        for (li, additions) in by_target {
+            let t = VId(next.base + li);
+            // Read the pre-delta row from `self`; a target this adjacency
+            // already patched resolves through its existing redirect. New
+            // (grown) targets fall outside `self`'s range → empty row.
+            let old: Vec<FusedEntry> = self.entries_of(t).to_vec();
+            let old_edges: usize = old.iter().map(|e| e.degree()).sum();
+            let mut adds: Vec<(SemanticId, Vec<VId>)> = additions.into_iter().collect();
+            adds.sort_by_key(|(s, _)| *s);
+
+            let lo = next.patch_entries.len() as u32;
+            let mut new_edges = 0usize;
+            // Two-pointer merge over ascending semantics: untouched
+            // entries copy through (their slices stay in whichever arena
+            // they already occupy), touched ones get a canonical
+            // sorted+deduped union written to the patch arena.
+            let (mut oi, mut ai) = (0usize, 0usize);
+            while oi < old.len() || ai < adds.len() {
+                let take_old = ai >= adds.len()
+                    || (oi < old.len() && old[oi].semantic < adds[ai].0);
+                let take_new = oi >= old.len()
+                    || (ai < adds.len() && adds[ai].0 < old[oi].semantic);
+                if take_old {
+                    new_edges += old[oi].degree();
+                    next.patch_entries.push(old[oi]);
+                    oi += 1;
+                    continue;
+                }
+                let semantic = adds[ai].0;
+                let mut merged: Vec<VId> = if take_new {
+                    Vec::new()
+                } else {
+                    let ns = self.neighbors(&old[oi]).to_vec();
+                    oi += 1;
+                    ns
+                };
+                merged.extend_from_slice(&adds[ai].1);
+                ai += 1;
+                merged.sort();
+                merged.dedup();
+                let start = next.patch_sources.len();
+                assert!(
+                    start + merged.len() < PATCH_BIT as usize,
+                    "append arena exceeds offset space — compact first"
+                );
+                new_edges += merged.len();
+                next.patch_sources.extend_from_slice(&merged);
+                next.patch_entries.push(FusedEntry {
+                    semantic,
+                    start: PATCH_BIT | start as u32,
+                    len: merged.len() as u32,
+                });
+            }
+            let hi = next.patch_entries.len() as u32;
+            next.edges += new_edges - old_edges;
+            next.entry_count += (hi - lo) as usize - old.len();
+            next.patched.insert(li, (lo, hi));
+        }
+        Ok(next)
+    }
+
+    /// Fold all append-region patches back into fresh contiguous arenas.
+    /// The result is field-for-field identical to `FusedAdjacency::build`
+    /// of the equivalently mutated graph (property-tested), which is why
+    /// compaction can never change served bytes — it only restores the
+    /// base arena's locality and reclaims superseded patch garbage.
+    pub fn compact(&self) -> FusedAdjacency {
+        if self.is_compact() {
+            return self.clone();
+        }
+        let mut entry_offsets = Vec::with_capacity(self.num_targets + 1);
+        let mut entries = Vec::with_capacity(self.entry_count);
+        let mut sources = Vec::with_capacity(self.edges);
+        entry_offsets.push(0u32);
+        for (_, es) in self.iter() {
+            for e in es {
+                let ns = self.neighbors(e);
+                entries.push(FusedEntry {
+                    semantic: e.semantic,
+                    start: sources.len() as u32,
+                    len: ns.len() as u32,
+                });
+                sources.extend_from_slice(ns);
+            }
+            entry_offsets.push(entries.len() as u32);
+        }
+        FusedAdjacency {
+            num_semantics: self.num_semantics,
+            base: self.base,
+            num_targets: self.num_targets,
+            edges: sources.len(),
+            entry_count: entries.len(),
+            entry_offsets: Arc::new(entry_offsets),
+            entries: Arc::new(entries),
+            sources: Arc::new(sources),
+            patched: FxHashMap::default(),
+            patch_entries: Vec::new(),
+            patch_sources: Vec::new(),
+        }
     }
 
     /// Full structural cross-check against the source graph: offsets
     /// monotone, entries semantic-ascending and non-empty, every neighbor
-    /// slice identical to the per-semantic CSR's, edge totals equal.
+    /// slice identical to the per-semantic CSR's (patched rows included),
+    /// edge and entry totals consistent.
     pub fn validate(&self, g: &HetGraph) -> Result<(), String> {
         if self.num_semantics != g.num_semantics() {
             return Err("semantic count mismatch".into());
@@ -238,7 +482,16 @@ impl FusedAdjacency {
         if *self.entry_offsets.last().unwrap_or(&0) as usize != self.entries.len() {
             return Err("last entry offset != entries.len()".into());
         }
+        for (&li, &(lo, hi)) in &self.patched {
+            if li as usize >= self.num_targets {
+                return Err(format!("patched target {li} outside target range"));
+            }
+            if lo > hi || hi as usize > self.patch_entries.len() {
+                return Err(format!("patch range {lo}..{hi} out of bounds"));
+            }
+        }
         let mut edges = 0usize;
+        let mut entry_count = 0usize;
         for (t, entries) in self.iter() {
             if !entries.windows(2).all(|w| w[0].semantic < w[1].semantic) {
                 return Err(format!("entries of {t} not ascending in semantic"));
@@ -253,6 +506,16 @@ impl FusedAdjacency {
                 }
                 edges += ns.len();
             }
+            entry_count += entries.len();
+        }
+        if edges != self.edges {
+            return Err(format!("edge count drift: counted {edges} vs stored {}", self.edges));
+        }
+        if entry_count != self.entry_count {
+            return Err(format!(
+                "entry count drift: counted {entry_count} vs stored {}",
+                self.entry_count
+            ));
         }
         let expected: usize = g
             .csrs
@@ -274,7 +537,7 @@ impl FusedAdjacency {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::hetgraph::HetGraphBuilder;
+    use crate::hetgraph::{GraphDelta, HetGraphBuilder, VertexTypeId};
 
     fn tiny() -> HetGraph {
         // Targets T0 = {0,1,2}, sources T1 = {3..7}; two semantics.
@@ -291,6 +554,37 @@ mod tests {
         b.build().unwrap()
     }
 
+    /// Exact arena-level equality — only meaningful between two compact
+    /// adjacencies (a patched one stores the same rows differently).
+    fn assert_arena_eq(a: &FusedAdjacency, b: &FusedAdjacency) {
+        assert!(a.is_compact() && b.is_compact());
+        assert_eq!(a.num_semantics, b.num_semantics);
+        assert_eq!(a.base, b.base);
+        assert_eq!(a.num_targets, b.num_targets);
+        assert_eq!(*a.entry_offsets, *b.entry_offsets);
+        assert_eq!(*a.entries, *b.entries);
+        assert_eq!(*a.sources, *b.sources);
+        assert_eq!(a.edges, b.edges);
+        assert_eq!(a.entry_count, b.entry_count);
+    }
+
+    /// Reader-visible equality through the public API — what the engines
+    /// actually consume, valid across compact/patched representations.
+    fn assert_logical_eq(a: &FusedAdjacency, b: &FusedAdjacency) {
+        assert_eq!(a.num_targets(), b.num_targets());
+        assert_eq!(a.num_edges(), b.num_edges());
+        assert_eq!(a.num_entries(), b.num_entries());
+        assert_eq!(a.target_vertices(), b.target_vertices());
+        for (ea, eb) in a.iter().zip(b.iter()) {
+            assert_eq!(ea.0, eb.0);
+            assert_eq!(ea.1.len(), eb.1.len(), "entry count of {}", ea.0);
+            for (x, y) in ea.1.iter().zip(eb.1) {
+                assert_eq!(x.semantic, y.semantic);
+                assert_eq!(a.neighbors(x), b.neighbors(y), "({}, {})", ea.0, x.semantic);
+            }
+        }
+    }
+
     #[test]
     fn transpose_roundtrips() {
         let g = tiny();
@@ -299,6 +593,8 @@ mod tests {
         assert_eq!(f.num_targets(), 3);
         assert_eq!(f.num_edges(), 4);
         assert_eq!(f.num_entries(), 3); // (0,r0), (0,r1), (1,r0)
+        assert!(f.is_compact());
+        assert_eq!(f.appended_sources(), 0);
     }
 
     #[test]
@@ -350,5 +646,113 @@ mod tests {
         }
         assert_eq!(targets, 3);
         assert_eq!(edges, g.num_edges());
+    }
+
+    #[test]
+    fn delta_patches_read_like_a_scratch_rebuild() {
+        let g = tiny();
+        let f = FusedAdjacency::build(&g);
+        let mut d = GraphDelta::new();
+        d.add_edge(VId(5), VId(2), SemanticId(0)); // isolated target gains a row
+        d.add_edge(VId(6), VId(0), SemanticId(0)); // existing row extends
+        d.add_edge(VId(2), VId(1), SemanticId(1)); // new semantic on a target
+        let g2 = d.apply_to(&g).unwrap();
+        let f2 = f.apply_delta(&d, f.num_targets()).unwrap();
+        assert!(!f2.is_compact());
+        assert!(f2.appended_sources() > 0);
+        assert!(f2.append_fraction() > 0.0);
+        f2.validate(&g2).unwrap();
+        assert_logical_eq(&f2, &FusedAdjacency::build(&g2));
+        // Base arenas are shared, not copied.
+        assert!(Arc::ptr_eq(&f.sources, &f2.sources));
+        assert!(Arc::ptr_eq(&f.entries, &f2.entries));
+        // The pre-delta adjacency is untouched (old-epoch readers).
+        f.validate(&g).unwrap();
+        assert_eq!(f.num_edges(), 4);
+    }
+
+    #[test]
+    fn duplicate_edge_insert_merges_away_in_the_patch() {
+        let g = tiny();
+        let f = FusedAdjacency::build(&g);
+        let mut d = GraphDelta::new();
+        d.add_edge(VId(3), VId(0), SemanticId(0)); // already present
+        let f2 = f.apply_delta(&d, f.num_targets()).unwrap();
+        assert_eq!(f2.num_edges(), f.num_edges(), "duplicate adds nothing");
+        assert_logical_eq(&f2, &f);
+    }
+
+    #[test]
+    fn retouched_target_resolves_through_latest_patch() {
+        let g = tiny();
+        let f = FusedAdjacency::build(&g);
+        let mut d1 = GraphDelta::new();
+        d1.add_edge(VId(5), VId(0), SemanticId(0));
+        let mut d2 = GraphDelta::new();
+        d2.add_edge(VId(6), VId(0), SemanticId(0));
+        let g2 = d2.apply_to(&d1.apply_to(&g).unwrap()).unwrap();
+        let f1 = f.apply_delta(&d1, f.num_targets()).unwrap();
+        let f2 = f1.apply_delta(&d2, f1.num_targets()).unwrap();
+        f2.validate(&g2).unwrap();
+        assert_logical_eq(&f2, &FusedAdjacency::build(&g2));
+        // The first merge is stranded garbage until compaction.
+        assert!(f2.appended_sources() > f2.num_edges() - f.num_edges());
+    }
+
+    #[test]
+    fn compact_equals_scratch_build_arena_for_arena() {
+        let g = tiny();
+        let f = FusedAdjacency::build(&g);
+        let mut d = GraphDelta::new();
+        d.add_edge(VId(5), VId(2), SemanticId(0));
+        d.add_edge(VId(6), VId(0), SemanticId(0));
+        d.add_edge(VId(2), VId(1), SemanticId(1));
+        let g2 = d.apply_to(&g).unwrap();
+        let folded = f.apply_delta(&d, f.num_targets()).unwrap().compact();
+        assert!(folded.is_compact());
+        assert_eq!(folded.appended_sources(), 0);
+        folded.validate(&g2).unwrap();
+        assert_arena_eq(&folded, &FusedAdjacency::build(&g2));
+        // Compacting a compact adjacency is the identity.
+        assert_arena_eq(&f.compact(), &f);
+    }
+
+    #[test]
+    fn target_type_growth_extends_the_adjacency() {
+        // Single-type self-relation graph so the target type is the tail
+        // (growable) type.
+        let mut b = HetGraphBuilder::new("selfrel");
+        let p = b.add_vertex_type("P", 3, 4);
+        let pp = b.add_semantic("PP", p, p);
+        b.add_edge(VId(1), VId(0), pp);
+        b.set_target_type(p);
+        let g = b.build().unwrap();
+        let f = FusedAdjacency::build(&g);
+
+        let mut d = GraphDelta::new();
+        d.grow_type(VertexTypeId(0), 2); // targets 3, 4 appear
+        d.add_edge(VId(0), VId(4), SemanticId(0)); // edge into a new target
+        let g2 = d.apply_to(&g).unwrap();
+        let grown = g2.type_range(g2.target_type).len();
+        assert_eq!(grown, 5);
+        let f2 = f.apply_delta(&d, grown).unwrap();
+        assert_eq!(f2.num_targets(), 5);
+        f2.validate(&g2).unwrap();
+        assert_logical_eq(&f2, &FusedAdjacency::build(&g2));
+        assert_arena_eq(&f2.compact(), &FusedAdjacency::build(&g2));
+    }
+
+    #[test]
+    fn bad_deltas_are_rejected() {
+        let g = tiny();
+        let f = FusedAdjacency::build(&g);
+        let mut d = GraphDelta::new();
+        d.add_edge(VId(3), VId(0), SemanticId(7));
+        assert!(matches!(
+            f.apply_delta(&d, f.num_targets()),
+            Err(DeltaError::UnknownSemantic(SemanticId(7)))
+        ));
+        let ok = GraphDelta::seeded(&g, 1, 4);
+        assert!(matches!(f.apply_delta(&ok, 1), Err(DeltaError::Invalid(_))), "shrink rejected");
     }
 }

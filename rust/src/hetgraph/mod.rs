@@ -6,6 +6,7 @@
 
 pub mod builder;
 pub mod csr;
+pub mod delta;
 pub mod fused;
 pub mod generator;
 #[allow(clippy::module_inception)]
@@ -15,6 +16,7 @@ pub mod types;
 
 pub use builder::HetGraphBuilder;
 pub use csr::SemanticCsr;
+pub use delta::{DeltaError, GraphDelta};
 pub use fused::{FusedAdjacency, FusedEntry};
 pub use generator::{generate, DatasetSpec, SemSpec, TypeSpec};
 pub use hetgraph::HetGraph;

@@ -29,20 +29,31 @@
 //! by its deadline (rows or typed error, no hang), the shutdown join
 //! proves no thread leak, and every *surviving* response row is still
 //! bitwise-equal to the reference oracle.
+//!
+//! [`run_mutation_load`] / [`run_mutation_chaos`] drive the live-delta
+//! path (`loadgen --mutate`): seeded [`GraphDelta`]s are applied through
+//! [`Server::apply_delta`] while the closed loop is serving. The phased
+//! driver pauses traffic at each epoch boundary and re-verifies **every**
+//! target bitwise against a fresh oracle of the mutated graph — the
+//! epoch-boundary equivalence invariant. The racing driver mutates with
+//! requests genuinely in flight (and, with a [`FaultPlan`], with workers
+//! crashing mid-swap): each response row must match one of the published
+//! epochs' oracles, and a final full sweep must match the last epoch's
+//! oracle exactly.
 
 use crate::coordinator::{
     FaultPlan, LatencyStats, PlanCache, Server, ServerConfig, CPU_MAX_IN_DIM, DEFAULT_DEADLINE,
     INJECTED_PANIC_MSG,
 };
 use crate::engine::ReferenceEngine;
-use crate::hetgraph::{HetGraph, VId};
+use crate::hetgraph::{GraphDelta, HetGraph, VId};
 use crate::model::{ModelConfig, ModelKind};
 use crate::util::json::Json;
 use crate::util::rng::SmallRng;
 use anyhow::Result;
 use rustc_hash::FxHashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Once};
+use std::sync::{Arc, Once, RwLock};
 use std::time::{Duration, Instant};
 
 /// Zipfian sampler over ranks `0..n` (rank 0 hottest): P(i) ∝ (i+1)^-s.
@@ -210,6 +221,16 @@ pub struct LoadReport {
     pub worker_panics: u64,
     pub worker_restarts: u64,
     pub injected_faults: u64,
+    // Live-delta epoch observability (zero when no swap happened).
+    pub epoch_swaps: u64,
+    pub swap_latency_last_us: u64,
+    pub swap_latency_mean_us: u64,
+    pub swap_latency_max_us: u64,
+    /// Parts that finished on an epoch a swap had already superseded —
+    /// in-flight work surviving a swap, the no-stop-the-world evidence.
+    pub stale_epoch_completions: u64,
+    /// Hot tiles dropped by epoch invalidation across all workers.
+    pub tile_epoch_drops: u64,
 }
 
 impl LoadReport {
@@ -282,6 +303,12 @@ impl LoadReport {
         j.set("worker_panics", self.worker_panics.into());
         j.set("worker_restarts", self.worker_restarts.into());
         j.set("injected_faults", self.injected_faults.into());
+        j.set("epoch_swaps", self.epoch_swaps.into());
+        j.set("swap_latency_last_us", self.swap_latency_last_us.into());
+        j.set("swap_latency_mean_us", self.swap_latency_mean_us.into());
+        j.set("swap_latency_max_us", self.swap_latency_max_us.into());
+        j.set("stale_epoch_completions", self.stale_epoch_completions.into());
+        j.set("tile_epoch_drops", self.tile_epoch_drops.into());
         j
     }
 }
@@ -359,6 +386,12 @@ pub fn run_load(
         worker_panics: m.worker_panics.load(Ordering::Relaxed),
         worker_restarts: m.worker_restarts.load(Ordering::Relaxed),
         injected_faults: m.injected_faults.load(Ordering::Relaxed),
+        epoch_swaps: m.epoch_swaps.load(Ordering::Relaxed),
+        swap_latency_last_us: m.swap_latency_us_last.load(Ordering::Relaxed),
+        swap_latency_mean_us: m.swap_latency_mean_us(),
+        swap_latency_max_us: m.swap_latency_us_max.load(Ordering::Relaxed),
+        stale_epoch_completions: m.stale_epoch_completions.load(Ordering::Relaxed),
+        tile_epoch_drops: m.tile_epoch_drops.load(Ordering::Relaxed),
     }
 }
 
@@ -482,6 +515,322 @@ pub fn run_fault_injection(
     let report = run_load(&server, &trace, cfg, expected.as_ref(), "chaos");
     server.shutdown();
     Ok(report)
+}
+
+/// How many live deltas a mutation run applies, and their shape. Seeded:
+/// the same schedule against the same graph and trace is byte-identical,
+/// so CI smoke runs and local repros see the same mutations.
+#[derive(Debug, Clone)]
+pub struct MutationSchedule {
+    /// Deltas applied across the run (the trace is split into
+    /// `deltas + 1` serving phases by the phased driver; the racing
+    /// driver paces them by request progress).
+    pub deltas: usize,
+    /// Edge insertions per delta ([`GraphDelta::seeded`]).
+    pub edges_per_delta: usize,
+    /// Delta seed; delta `i` uses `seed + i`.
+    pub seed: u64,
+}
+
+impl Default for MutationSchedule {
+    fn default() -> MutationSchedule {
+        MutationSchedule { deltas: 4, edges_per_delta: 32, seed: 11 }
+    }
+}
+
+/// What a mutation run measured, on top of the usual [`LoadReport`]
+/// (whose counters are server-lifetime, so they cover every phase).
+#[derive(Debug, Clone)]
+pub struct MutationOutcome {
+    pub report: LoadReport,
+    /// Response rows that failed verification during serving phases
+    /// (against the phase's epoch oracle — or the union of published
+    /// epochs' oracles in the racing driver).
+    pub phase_mismatches: u64,
+    /// Rows that failed the strict epoch-boundary sweep: after each swap
+    /// (phased) and once after the run (racing), **every** target is
+    /// served and compared bitwise against a from-scratch
+    /// [`ReferenceEngine`] oracle of the mutated graph. Nonzero means the
+    /// epoch-boundary equivalence invariant is broken.
+    pub boundary_mismatches: u64,
+    /// Swaps published ([`Server::apply_delta`] calls that succeeded).
+    pub swaps: u64,
+    /// Swaps whose merged adjacency was folded back into a contiguous
+    /// layout ([`crate::coordinator::COMPACT_APPEND_FRACTION`]).
+    pub compactions: u64,
+    /// The epoch the server finished on.
+    pub final_epoch: u64,
+}
+
+impl MutationOutcome {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("report", self.report.to_json());
+        j.set("phase_mismatches", self.phase_mismatches.into());
+        j.set("boundary_mismatches", self.boundary_mismatches.into());
+        j.set("swaps", self.swaps.into());
+        j.set("compactions", self.compactions.into());
+        j.set("final_epoch", self.final_epoch.into());
+        j
+    }
+}
+
+/// Serve every target once and count rows that differ bitwise from
+/// `oracle` (typed errors count too — the sweep is fault-free by
+/// construction in the phased driver; the racing driver retries first).
+fn boundary_sweep(
+    server: &Server,
+    order: &[VId],
+    batch: usize,
+    oracle: &FxHashMap<VId, Vec<f32>>,
+    retries: usize,
+) -> u64 {
+    let mut mismatches = 0u64;
+    for chunk in order.chunks(batch.max(1)) {
+        let mut attempt = 0;
+        loop {
+            match server.submit(chunk.to_vec()) {
+                Ok(resp) => {
+                    for (v, row) in &resp.embeddings {
+                        if !oracle.get(v).is_some_and(|want| want == row) {
+                            mismatches += 1;
+                        }
+                    }
+                    break;
+                }
+                // Under fault injection a sweep chunk can eat an injected
+                // error; a fresh request id re-rolls the fault decision.
+                Err(_) if attempt < retries => attempt += 1,
+                Err(_) => {
+                    mismatches += chunk.len() as u64;
+                    break;
+                }
+            }
+        }
+    }
+    mismatches
+}
+
+/// Phased mutate-under-load driver (`loadgen --mutate N`): the trace is
+/// split into `schedule.deltas + 1` segments; between segments a seeded
+/// [`GraphDelta`] goes through [`Server::apply_delta`] and — with
+/// `verify` — the **epoch-boundary check** runs: every target of the
+/// mutated graph is served and compared bitwise against a from-scratch
+/// oracle, so each epoch's serving state is proven equivalent to a full
+/// rebuild before the next segment's traffic lands on it. Phase traffic
+/// is verified against its own epoch's oracle.
+pub fn run_mutation_load(
+    g: &Arc<HetGraph>,
+    kind: ModelKind,
+    channels: usize,
+    cache_bytes: usize,
+    cfg: &LoadConfig,
+    schedule: &MutationSchedule,
+    verify: bool,
+) -> Result<MutationOutcome> {
+    let server = Server::start(
+        Arc::clone(g),
+        ServerConfig {
+            channels,
+            tile_cache_bytes: cache_bytes,
+            default_deadline: cfg.deadline(),
+            mem_budget_bytes: cfg.mem_budget_bytes,
+            ..ServerConfig::cpu(kind)
+        },
+    )?;
+    let mut current = Arc::clone(g);
+    let mut order = current.target_vertices();
+    let mut expected = verify.then(|| reference_rows(&current, kind, &order));
+    let trace = build_trace(&order, cfg);
+    let phases = schedule.deltas + 1;
+    let seg = trace.len().div_ceil(phases).max(1);
+    let mut phase_mismatches = 0u64;
+    let mut boundary_mismatches = 0u64;
+    let mut compactions = 0u64;
+    let mut last_report: Option<LoadReport> = None;
+    let wall0 = Instant::now();
+    for pi in 0..phases {
+        let lo = (pi * seg).min(trace.len());
+        let hi = ((pi + 1) * seg).min(trace.len());
+        let r = run_load(
+            &server,
+            &trace[lo..hi],
+            cfg,
+            expected.as_ref(),
+            &format!("mutate-phase-{pi}"),
+        );
+        phase_mismatches += r.mismatches;
+        last_report = Some(r);
+        if pi + 1 < phases {
+            let delta = GraphDelta::seeded(
+                &current,
+                schedule.seed.wrapping_add(pi as u64),
+                schedule.edges_per_delta,
+            );
+            let swap = server.apply_delta(&delta)?;
+            if swap.compacted {
+                compactions += 1;
+            }
+            current = swap.graph;
+            order = current.target_vertices();
+            if verify {
+                let oracle = reference_rows(&current, kind, &order);
+                boundary_mismatches +=
+                    boundary_sweep(&server, &order, cfg.batch, &oracle, 0);
+                expected = Some(oracle);
+            }
+        }
+    }
+    let wall = wall0.elapsed();
+    let mut report =
+        last_report.unwrap_or_else(|| run_load(&server, &[], cfg, None, "mutate"));
+    report.label = "mutate".to_string();
+    report.wall = wall;
+    report.throughput_rps = trace.len() as f64 / wall.as_secs_f64().max(1e-9);
+    let swaps = report.epoch_swaps;
+    let final_epoch = server.current_epoch().unwrap_or(0);
+    server.shutdown();
+    Ok(MutationOutcome {
+        report,
+        phase_mismatches,
+        boundary_mismatches,
+        swaps,
+        compactions,
+        final_epoch,
+    })
+}
+
+/// Racing mutate-under-faults driver (`loadgen --mutate N --faults`):
+/// deltas are applied **while requests are in flight** (paced by request
+/// progress, so every delta lands mid-traffic), optionally with a seeded
+/// [`FaultPlan`] crashing workers around the swaps. A response that races
+/// a swap may have each routed part executed on a different published
+/// epoch, so phase rows are verified against the union of epoch oracles —
+/// each oracle registered *before* its swap publishes, closing the window
+/// where a row could arrive from an epoch with no oracle yet. After the
+/// clients drain, a strict sweep proves the final state bitwise-equal to
+/// a from-scratch rebuild, and `server.shutdown()` joins every thread.
+pub fn run_mutation_chaos(
+    g: &Arc<HetGraph>,
+    kind: ModelKind,
+    channels: usize,
+    cache_bytes: usize,
+    cfg: &LoadConfig,
+    schedule: &MutationSchedule,
+    faults: FaultPlan,
+    restart_budget: u32,
+) -> Result<MutationOutcome> {
+    install_quiet_panic_hook();
+    let order = g.target_vertices();
+    let trace = build_trace(&order, cfg);
+    let server = Server::start(
+        Arc::clone(g),
+        ServerConfig {
+            channels,
+            tile_cache_bytes: cache_bytes,
+            default_deadline: cfg.deadline(),
+            restart_budget,
+            faults: faults.is_active().then_some(faults),
+            mem_budget_bytes: cfg.mem_budget_bytes,
+            ..ServerConfig::cpu(kind)
+        },
+    )?;
+    // Union-of-epochs oracle: one map per published epoch, newest last.
+    let oracles: RwLock<Vec<FxHashMap<VId, Vec<f32>>>> =
+        RwLock::new(vec![reference_rows(g, kind, &order)]);
+    let phase_mismatches = AtomicU64::new(0);
+    let done = AtomicU64::new(0);
+    let conc = cfg.concurrency.max(1);
+    let total = trace.len() as u64;
+    let mut mutator_result: Result<u64> = Ok(0);
+    std::thread::scope(|s| {
+        for c in 0..conc {
+            let server = &server;
+            let trace = &trace;
+            let oracles = &oracles;
+            let phase_mismatches = &phase_mismatches;
+            let done = &done;
+            s.spawn(move || {
+                for req in trace.iter().skip(c).step_by(conc) {
+                    match server.submit(req.clone()) {
+                        Ok(resp) => {
+                            let known = oracles.read().expect("oracle lock");
+                            for (v, row) in &resp.embeddings {
+                                let ok = known
+                                    .iter()
+                                    .any(|o| o.get(v).is_some_and(|want| want == row));
+                                if !ok {
+                                    phase_mismatches.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                        }
+                        // Typed error under injected faults: tallied by
+                        // class in the server metrics.
+                        Err(_) => {}
+                    }
+                    done.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        }
+        let mutator = s.spawn(|| -> Result<u64> {
+            let mut current = Arc::clone(g);
+            let mut compactions = 0u64;
+            for di in 0..schedule.deltas {
+                // Pace by progress, not time: delta i lands after
+                // (i+1)/(deltas+1) of the trace resolved, so every delta
+                // races genuinely in-flight requests.
+                let gate = (di as u64 + 1) * total / (schedule.deltas as u64 + 1);
+                while done.load(Ordering::Relaxed) < gate {
+                    std::thread::yield_now();
+                }
+                let delta = GraphDelta::seeded(
+                    &current,
+                    schedule.seed.wrapping_add(di as u64),
+                    schedule.edges_per_delta,
+                );
+                let g2 = Arc::new(
+                    delta
+                        .apply_to(&current)
+                        .map_err(|e| anyhow::anyhow!("chaos delta rejected: {e}"))?,
+                );
+                let new_order = g2.target_vertices();
+                let oracle = reference_rows(&g2, kind, &new_order);
+                // Register the oracle BEFORE the swap publishes: no row
+                // can arrive from an epoch the clients cannot check.
+                oracles.write().expect("oracle lock").push(oracle);
+                let swap = server.apply_delta(&delta)?;
+                if swap.compacted {
+                    compactions += 1;
+                }
+                current = swap.graph;
+            }
+            Ok(compactions)
+        });
+        mutator_result = mutator.join().expect("mutator thread panicked");
+    });
+    let compactions = mutator_result?;
+    // Strict final sweep: the served state after all swaps must be
+    // bitwise-equal to a from-scratch rebuild of the final graph.
+    let final_g = server.current_graph().expect("cpu server has a live graph");
+    let final_order = final_g.target_vertices();
+    let final_oracle = reference_rows(&final_g, kind, &final_order);
+    let boundary_mismatches =
+        boundary_sweep(&server, &final_order, cfg.batch, &final_oracle, 5);
+    let mut report = run_load(&server, &[], cfg, None, "mutate-chaos");
+    let swaps = report.epoch_swaps;
+    let final_epoch = server.current_epoch().unwrap_or(0);
+    report.mismatches = phase_mismatches.load(Ordering::Relaxed);
+    report.verified = true;
+    // Shutdown joins workers + supervisor: the no-thread-leak check.
+    server.shutdown();
+    Ok(MutationOutcome {
+        report,
+        phase_mismatches: phase_mismatches.load(Ordering::Relaxed),
+        boundary_mismatches,
+        swaps,
+        compactions,
+        final_epoch,
+    })
 }
 
 #[cfg(test)]

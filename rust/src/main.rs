@@ -16,8 +16,9 @@
 //! compare <dataset> [--model M]            TLV vs A100 vs HiHGNN
 //! bench-table <fig2|fig7|fig8|fig9|table3|table4|reuse|serving|budget>  paper table
 //! serve   [--model M] [--scale S] [--cpu]  demo serving loop (PJRT needs
-//!         [--cache-mb N] [--no-cache]      artifacts; --cpu needs none)
-//!         [--deadline-ms N] [--mem-budget-mb N]
+//!         [--cache-mb N] [--no-cache]      artifacts; --cpu needs none);
+//!         [--deadline-ms N] [--mem-budget-mb N] --mutate N applies N live
+//!         [--mutate N]                     graph deltas between requests
 //! loadgen <dataset> [--model M] [--scale S] closed-loop Zipfian load vs
 //!         [--requests N] [--concurrency C]  `serve --cpu`, cache-on vs
 //!         [--skew S] [--batch B]            cache-off on the identical
@@ -28,12 +29,23 @@
 //!         [--faults SPEC]                   typed serve error
 //!         [--restart-budget N]
 //!         [--mem-budget-mb N]
+//!         [--mutate N] [--mutate-edges E]
+//!         [--mutate-seed S]
 //! ```
 //!
 //! `loadgen --faults panic:0.01,delay:0.05[,error:R,delay_ms:D,seed:S]`
 //! switches to chaos mode: one CPU server under seeded deterministic fault
 //! injection; exits 1 on any hang, unresolved submission, or bitwise
 //! mismatch among surviving responses (see `loadgen::run_fault_injection`).
+//!
+//! `loadgen --mutate N` switches to mutate-under-load mode: N seeded graph
+//! deltas are applied through `Server::apply_delta` while the closed loop
+//! serves. Without `--faults` the trace runs in phases and every epoch
+//! boundary is bitwise-verified against a from-scratch oracle
+//! (`loadgen::run_mutation_load`); with `--faults` the deltas race
+//! in-flight requests and injected worker crashes, and a strict final
+//! sweep checks the end state (`loadgen::run_mutation_chaos`). Exits 1 on
+//! any mismatch, unresolved submission, or hang.
 
 use std::process::exit;
 use std::time::Instant;
@@ -58,7 +70,8 @@ fn usage() -> ! {
          \x20       loadgen: --requests N --concurrency C --skew S --batch B --unique U\n\
          \x20       --seed X --channels N --verify --min-hit-rate F --json PATH\n\
          \x20       --deadline-ms N --faults panic:R,delay:R,error:R,delay_ms:D,seed:S\n\
-         \x20       --restart-budget N --mem-budget-mb N"
+         \x20       --restart-budget N --mem-budget-mb N\n\
+         \x20       --mutate N --mutate-edges E --mutate-seed S (live graph deltas)"
     );
     exit(2)
 }
@@ -486,6 +499,40 @@ fn main() {
                 let r = server.submit(chunk.to_vec()).expect("request");
                 println!("req {}: {} embeddings in {:?}", r.id, r.embeddings.len(), r.latency);
             }
+            // Live mutation demo: --mutate N applies N seeded deltas
+            // through Server::apply_delta (CPU executor only) and serves
+            // a few requests on each new epoch — no restart, no drain.
+            if let Some(n) = flag(rest, "--mutate").and_then(|s| s.parse::<usize>().ok()) {
+                let mut current = std::sync::Arc::clone(&g);
+                for i in 0..n {
+                    let delta =
+                        tlv_hgnn::hetgraph::GraphDelta::seeded(&current, 11 + i as u64, 32);
+                    let swap = match server.apply_delta(&delta) {
+                        Ok(s) => s,
+                        Err(e) => {
+                            eprintln!("apply_delta failed (PJRT serving is immutable): {e:#}");
+                            exit(1);
+                        }
+                    };
+                    println!(
+                        "delta {i}: +{} edges -> epoch {} in {:?}{}",
+                        delta.num_edges(),
+                        swap.epoch,
+                        swap.swap_latency,
+                        if swap.compacted { " (compacted)" } else { "" },
+                    );
+                    current = swap.graph;
+                    for chunk in current.target_vertices().chunks(32).take(2) {
+                        let r = server.submit(chunk.to_vec()).expect("request");
+                        println!(
+                            "req {}: {} embeddings in {:?}",
+                            r.id,
+                            r.embeddings.len(),
+                            r.latency
+                        );
+                    }
+                }
+            }
             println!("{}", server.metrics.summary());
             server.shutdown();
         }
@@ -535,6 +582,119 @@ fn main() {
                 mem_budget_bytes: mem_budget_bytes(rest),
             };
             let g = std::sync::Arc::new(d.load(scale));
+            // Mutate-under-load mode: seeded live deltas through
+            // Server::apply_delta while the closed loop serves. Phased
+            // (epoch-boundary verified) without --faults; racing (deltas
+            // and injected crashes against in-flight requests, strict
+            // final sweep) with --faults.
+            if let Some(deltas) = flag(rest, "--mutate").and_then(|s| s.parse::<usize>().ok()) {
+                let schedule = tlv_hgnn::loadgen::MutationSchedule {
+                    deltas,
+                    edges_per_delta: flag(rest, "--mutate-edges")
+                        .and_then(|s| s.parse().ok())
+                        .unwrap_or(32),
+                    seed: flag(rest, "--mutate-seed")
+                        .and_then(|s| s.parse().ok())
+                        .unwrap_or(11),
+                };
+                let racing = faults.is_some();
+                println!(
+                    "{} {} @ scale {scale}: mutate-under-load ({}), {} reqs, {} clients, \
+                     {channels} channels, {} deltas x {} edges (seed {}){}",
+                    d.name(),
+                    kind.name(),
+                    if racing { "racing + faults" } else { "phased" },
+                    cfg.requests,
+                    cfg.concurrency,
+                    schedule.deltas,
+                    schedule.edges_per_delta,
+                    schedule.seed,
+                    if verify || racing { ", verified" } else { "" },
+                );
+                let outcome = match faults {
+                    Some(faults) => tlv_hgnn::loadgen::run_mutation_chaos(
+                        &g,
+                        kind,
+                        channels,
+                        cache_mb << 20,
+                        &cfg,
+                        &schedule,
+                        faults,
+                        restart_budget,
+                    ),
+                    None => tlv_hgnn::loadgen::run_mutation_load(
+                        &g,
+                        kind,
+                        channels,
+                        cache_mb << 20,
+                        &cfg,
+                        &schedule,
+                        verify,
+                    ),
+                };
+                let outcome = match outcome {
+                    Ok(o) => o,
+                    Err(e) => {
+                        eprintln!("mutation run failed: {e:#}");
+                        exit(1);
+                    }
+                };
+                let r = &outcome.report;
+                println!(
+                    "  swaps {} ({} compacted), final epoch {}, swap latency last/mean/max \
+                     {}us/{}us/{}us",
+                    outcome.swaps,
+                    outcome.compactions,
+                    outcome.final_epoch,
+                    r.swap_latency_last_us,
+                    r.swap_latency_mean_us,
+                    r.swap_latency_max_us,
+                );
+                println!(
+                    "  stale-epoch completions {}, tiles dropped by epoch {}, p50 {}us p99 {}us",
+                    r.stale_epoch_completions,
+                    r.tile_epoch_drops,
+                    r.latency.p50_us,
+                    r.latency.p99_us,
+                );
+                println!(
+                    "  bitwise: {} phase mismatches, {} boundary mismatches",
+                    outcome.phase_mismatches, outcome.boundary_mismatches,
+                );
+                if let Some(path) = flag(rest, "--json") {
+                    if let Err(e) = std::fs::write(&path, outcome.to_json().render() + "\n") {
+                        eprintln!("write {path}: {e}");
+                        exit(1);
+                    }
+                    println!("wrote {path}");
+                }
+                let mut failed = false;
+                if outcome.phase_mismatches + outcome.boundary_mismatches > 0 {
+                    eprintln!(
+                        "BITWISE FAIL: {} phase / {} boundary mismatched rows across epochs",
+                        outcome.phase_mismatches, outcome.boundary_mismatches
+                    );
+                    failed = true;
+                }
+                if r.ok + r.errors() != r.requests {
+                    eprintln!(
+                        "RESOLUTION FAIL: {} ok + {} errors != {} requests",
+                        r.ok,
+                        r.errors(),
+                        r.requests
+                    );
+                    failed = true;
+                }
+                // Fault-free phased runs must also be error-free.
+                if !racing && r.errors() > 0 {
+                    eprintln!("SERVE-ERROR FAIL: {} typed errors on a fault-free run", r.errors());
+                    failed = true;
+                }
+                if failed {
+                    exit(1);
+                }
+                return;
+            }
             if let Some(faults) = faults {
                 // Chaos mode: one CPU server under seeded deterministic
                 // fault injection. Exit 1 on any unresolved submission or

@@ -15,13 +15,20 @@
 //! * **Fault-free runs are clean** — the same harness with an inactive
 //!   plan produces zero errors, zero shed, zero timeouts, and bitwise
 //!   rows: the failure machinery costs nothing when nothing fails.
+//! * **Mutations don't weaken any of it** (ISSUE 9) — live graph deltas
+//!   racing in-flight requests and worker crashes keep every invariant
+//!   above, and the post-run serving state is bitwise-equal to a
+//!   from-scratch rebuild of the final graph.
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Duration;
 use tlv_hgnn::coordinator::{FaultPlan, ServeError, Server, ServerConfig};
 use tlv_hgnn::hetgraph::{HetGraph, HetGraphBuilder, VId};
-use tlv_hgnn::loadgen::{install_quiet_panic_hook, run_fault_injection, LoadConfig};
+use tlv_hgnn::loadgen::{
+    install_quiet_panic_hook, run_fault_injection, run_mutation_chaos, LoadConfig,
+    MutationSchedule,
+};
 use tlv_hgnn::model::ModelKind;
 use tlv_hgnn::util::SmallRng;
 
@@ -137,6 +144,84 @@ fn respawned_workers_keep_serving_bitwise() {
     assert!(r.worker_panics > 0, "30% panic rate over 120 requests must crash workers");
     assert!(r.worker_restarts > 0, "the supervisor must have respawned workers");
     assert!(r.ok > 0, "respawns must restore enough capacity to serve");
+}
+
+#[test]
+fn mutations_under_faults_stay_bitwise_across_channels() {
+    // ISSUE 9 acceptance: seeded graph deltas interleaved with panic +
+    // delay + executor-error injection, across channels {1, 2, 8}. Every
+    // delta lands with requests genuinely in flight (the racing driver
+    // paces deltas by request progress), so plan swaps race worker
+    // crashes and mid-execution parts. Invariants:
+    //
+    // * every submission resolves bitwise-or-typed (no hang — the closed
+    //   loop returning IS the proof),
+    // * no thread leak (run_mutation_chaos joins workers + supervisor +
+    //   mutator before returning),
+    // * every surviving row matches some published epoch's from-scratch
+    //   oracle (phase_mismatches == 0),
+    // * the post-run serving state is bitwise-equal to a from-scratch
+    //   rebuild of the final graph (boundary_mismatches == 0).
+    let g = Arc::new(graph(59));
+    let cfg = chaos_load();
+    let schedule = MutationSchedule { deltas: 3, edges_per_delta: 24, seed: 17 };
+    let faults = FaultPlan::parse("panic:0.05,delay:0.10,error:0.05,delay_ms:1").unwrap();
+    for channels in [1usize, 2, 8] {
+        let o = run_mutation_chaos(
+            &g,
+            ModelKind::Rgcn,
+            channels,
+            8 << 20,
+            &cfg,
+            &schedule,
+            faults,
+            64,
+        )
+        .expect("mutation chaos run");
+        let tag = format!("{channels}ch");
+        assert_eq!(o.swaps, 3, "{tag}: every delta must publish a swap");
+        assert_eq!(
+            o.phase_mismatches, 0,
+            "{tag}: surviving rows must match a published epoch's oracle"
+        );
+        assert_eq!(
+            o.boundary_mismatches, 0,
+            "{tag}: final state must be bitwise-equal to a scratch rebuild"
+        );
+        let r = &o.report;
+        assert_eq!(
+            r.ok + r.errors(),
+            r.requests,
+            "{tag}: every submission must resolve exactly once (ok={} errors={})",
+            r.ok,
+            r.errors(),
+        );
+        assert!(r.injected_faults > 0, "{tag}: the fault plan must actually fire");
+        assert!(o.final_epoch > 0, "{tag}: the server must finish on a published epoch");
+        assert_eq!(r.epoch_swaps, 3, "{tag}: swap metric must count every publish");
+    }
+}
+
+#[test]
+fn worker_crash_racing_a_plan_swap_cannot_corrupt_or_hang() {
+    // The nastiest interleaving pinned explicitly: a heavy panic rate
+    // (~every third item) with a deep restart budget, so workers are
+    // crashing and respawning *while* the mutator publishes plan swaps.
+    // Respawned workers must pick up the currently published epoch (they
+    // read the shared slot, not a startup snapshot) and the final sweep
+    // must still be bitwise.
+    let g = Arc::new(graph(61));
+    let schedule = MutationSchedule { deltas: 2, edges_per_delta: 40, seed: 23 };
+    let faults = FaultPlan { panic_rate: 0.3, ..FaultPlan::default() };
+    let o = run_mutation_chaos(&g, ModelKind::Rgat, 2, 8 << 20, &chaos_load(), &schedule, faults, 1024)
+        .expect("crash-racing-swap run");
+    assert_eq!(o.phase_mismatches, 0, "rows under crash+swap churn must stay bitwise");
+    assert_eq!(o.boundary_mismatches, 0, "final state must equal a scratch rebuild");
+    assert_eq!(o.swaps, 2);
+    let r = &o.report;
+    assert_eq!(r.ok + r.errors(), r.requests, "no submission may hang or double-resolve");
+    assert!(r.worker_panics > 0, "30% panic rate must crash workers during the run");
+    assert!(r.ok > 0, "respawned workers must keep serving across swaps");
 }
 
 #[test]
