@@ -312,6 +312,53 @@ fn main() {
         if sweep_bitwise { "PASS" } else { "FAIL" }
     );
 
+    // ---- Approximate-mode sweep: accuracy/speed across error budgets ----
+    // RGAT (the attention model — RGCN/NARS weights are degree-uniform and
+    // prune nothing interesting) on the bench workload: the pruned path at
+    // widening budgets, every row verified against the exact baseline.
+    // kept_fraction is the machine-independent work axis; wall clock is
+    // the local one. Any budget violation fails the sweep.
+    let approx = tlv_hgnn::report::run_approx_sweep(
+        Dataset::Am,
+        ModelKind::Rgat,
+        0.05,
+        nt,
+        &[0.01, 0.05, 0.1, 0.2],
+    );
+    let mut approx_json = Vec::new();
+    let mut approx_ok = true;
+    for p in &approx {
+        approx_ok &= p.within_budget;
+        println!(
+            "approx eps {:>4.2}: {:>8.2} ms (exact {:>8.2} ms)  kept {:>5.1}%  \
+             fallback {:>5.1}%  max_err {:.2e}  {}",
+            p.epsilon,
+            p.elapsed_ms,
+            p.exact_ms,
+            p.kept_fraction * 100.0,
+            p.fallback_fraction * 100.0,
+            p.max_rel_err,
+            if p.within_budget { "in-budget" } else { "VIOLATION" },
+        );
+        let mut o = Json::obj();
+        o.set("epsilon", p.epsilon.into());
+        o.set("elapsed_ms", p.elapsed_ms.into());
+        o.set("exact_ms", p.exact_ms.into());
+        o.set("embeddings_per_s", (targets / (p.elapsed_ms / 1e3)).into());
+        o.set("kept_fraction", p.kept_fraction.into());
+        o.set("fallback_fraction", p.fallback_fraction.into());
+        o.set("max_rel_err", p.max_rel_err.into());
+        o.set("mean_rel_err", p.mean_rel_err.into());
+        o.set("bitwise_rows", (p.bitwise_rows as u64).into());
+        o.set("within_budget", p.within_budget.into());
+        approx_json.push(o);
+    }
+    println!(
+        "  -> approx sweep: {} points, all within budget: {}",
+        approx.len(),
+        if approx_ok { "PASS" } else { "FAIL" }
+    );
+
     // ---- Depth-3 multi-layer: shared plan vs per-layer rebuild ----
     let ml_shared = bench("multilayer depth-3, shared plan (fused)", 3, || {
         let mut st = state.clone();
@@ -422,6 +469,14 @@ fn main() {
          the slowdown at 10% bounds the cost of running out-of-core"
             .into(),
     );
+    targets_json.set(
+        "approx_sweep",
+        "pruned aggregation must stay within the per-vertex relative-error \
+         budget at every point (violations are a release blocker); kept \
+         fraction should fall — and pruned wall clock with it — as the \
+         budget widens"
+            .into(),
+    );
 
     let mut out = Json::obj();
     out.set("generated_by", "cargo bench --bench hotpath".into());
@@ -440,6 +495,8 @@ fn main() {
     out.set("dispatch_queue_high_water", (dispatch_stats.high_water as f64).into());
     out.set("budget_sweep", Json::Arr(budget_json));
     out.set("budget_sweep_bitwise", sweep_bitwise.into());
+    out.set("approx_sweep", Json::Arr(approx_json));
+    out.set("approx_sweep_within_budget", approx_ok.into());
     out.set("results", Json::Arr(results));
     println!(
         "acceptance: fused walk speedup {:.2}x vs target >= 3.0x: {}",

@@ -74,9 +74,13 @@ impl Default for FaultPlan {
 impl FaultPlan {
     /// Parse a CLI spec: comma-separated `kind:value` pairs, e.g.
     /// `panic:0.01,delay:0.05,error:0.02,delay_ms:2,seed:7`. Unknown
-    /// kinds, out-of-range rates, and band sums past 1.0 are rejected.
+    /// kinds, out-of-range rates, band sums past 1.0, and duplicate kinds
+    /// are rejected — a repeated kind is almost always a typo for a
+    /// different one, and silently letting the last occurrence win would
+    /// run chaos at rates the operator never asked for.
     pub fn parse(spec: &str) -> Result<FaultPlan, String> {
         let mut plan = FaultPlan::default();
+        let mut seen: Vec<&str> = Vec::new();
         for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
             let (key, val) = part
                 .split_once(':')
@@ -85,7 +89,12 @@ impl FaultPlan {
                 .trim()
                 .parse()
                 .map_err(|_| format!("fault value `{}` is not a number", val.trim()))?;
-            match key.trim() {
+            let key = key.trim();
+            if seen.contains(&key) {
+                return Err(format!("duplicate fault kind `{key}`"));
+            }
+            seen.push(key);
+            match key {
                 "panic" => plan.panic_rate = num,
                 "delay" => plan.delay_rate = num,
                 "error" => plan.error_rate = num,
@@ -163,6 +172,57 @@ mod tests {
         assert!(FaultPlan::parse("panic:1.5").is_err());
         assert!(FaultPlan::parse("panic:0.6,delay:0.6").is_err());
         assert!(!FaultPlan::parse("").unwrap().is_active());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_keys_with_a_pointed_message() {
+        // Missing separator names the offending fragment.
+        let e = FaultPlan::parse("panic:0.1,delay").unwrap_err();
+        assert!(e.contains("`delay`") && e.contains("kind:value"), "{e}");
+        // `=` is not the separator; the whole fragment fails shape.
+        assert!(FaultPlan::parse("panic=0.1").is_err());
+        // Empty value and empty key both fail (empty parses as not-a-number
+        // or unknown kind respectively), never silently default.
+        assert!(FaultPlan::parse("panic:").is_err());
+        assert!(FaultPlan::parse(":0.1").is_err());
+        // Unknown kinds list the accepted vocabulary.
+        let e = FaultPlan::parse("panik:0.1").unwrap_err();
+        assert!(e.contains("unknown fault kind") && e.contains("panic|delay|error"), "{e}");
+    }
+
+    #[test]
+    fn parse_rejects_out_of_range_probabilities() {
+        // Each rate key is range-checked against [0, 1] individually.
+        for key in ["panic", "delay", "error"] {
+            assert!(FaultPlan::parse(&format!("{key}:1.01")).is_err(), "{key} > 1");
+            assert!(FaultPlan::parse(&format!("{key}:-0.01")).is_err(), "{key} < 0");
+            assert!(FaultPlan::parse(&format!("{key}:nan")).is_err(), "{key} NaN");
+            // Boundaries are legal.
+            assert!(FaultPlan::parse(&format!("{key}:0.0")).is_ok());
+            assert!(FaultPlan::parse(&format!("{key}:1.0")).is_ok());
+        }
+        // The band sum is checked after the per-rate checks.
+        assert!(FaultPlan::parse("panic:0.5,delay:0.4,error:0.2").is_err());
+        assert!(FaultPlan::parse("panic:0.5,delay:0.4,error:0.1").is_ok());
+    }
+
+    #[test]
+    fn parse_rejects_duplicate_fields() {
+        // A repeated kind must be refused, not last-wins: `panic:0.0` after
+        // `panic:0.5` would silently disarm the chaos run.
+        let e = FaultPlan::parse("panic:0.5,panic:0.0").unwrap_err();
+        assert!(e.contains("duplicate fault kind `panic`"), "{e}");
+        for spec in [
+            "delay:0.1,delay:0.2",
+            "error:0.1,error:0.1", // identical value is still a duplicate
+            "seed:1,seed:2",
+            "delay_ms:1,delay_ms:2",
+            "panic:0.1, panic:0.2", // whitespace does not dodge the check
+        ] {
+            assert!(FaultPlan::parse(spec).unwrap_err().contains("duplicate"), "{spec}");
+        }
+        // Distinct kinds sharing a prefix are not duplicates.
+        assert!(FaultPlan::parse("delay:0.1,delay_ms:5").is_ok());
     }
 
     #[test]

@@ -91,6 +91,8 @@ pub struct Metrics {
     pub shed: AtomicU64,
     pub invalid_targets: AtomicU64,
     pub worker_lost: AtomicU64,
+    /// Approximate requests refused because the server was built exact.
+    pub approx_rejects: AtomicU64,
     pub shutdown_rejects: AtomicU64,
     /// Worker panics caught (injected or real) — one per crash, counted
     /// worker-side.
@@ -154,6 +156,7 @@ impl Metrics {
             ServeError::Overloaded { .. } => &self.shed,
             ServeError::InvalidTarget { .. } => &self.invalid_targets,
             ServeError::WorkerLost { .. } => &self.worker_lost,
+            ServeError::ApproxUnsupported => &self.approx_rejects,
             ServeError::ShuttingDown => &self.shutdown_rejects,
         };
         counter.fetch_add(1, Ordering::Relaxed);
@@ -165,6 +168,7 @@ impl Metrics {
             + self.shed.load(Ordering::Relaxed)
             + self.invalid_targets.load(Ordering::Relaxed)
             + self.worker_lost.load(Ordering::Relaxed)
+            + self.approx_rejects.load(Ordering::Relaxed)
             + self.shutdown_rejects.load(Ordering::Relaxed)
     }
 
@@ -340,13 +344,14 @@ impl Metrics {
         if self.errors_total() > 0 || self.worker_panics.load(Ordering::Relaxed) > 0 {
             s.push_str(&format!(
                 " faults: avail={:.2}% ok={} timeout={} shed={} invalid={} lost={} \
-                 shutdown={} panics={} restarts={} abandoned={} injected={}",
+                 approx_rejected={} shutdown={} panics={} restarts={} abandoned={} injected={}",
                 self.availability() * 100.0,
                 self.ok_responses.load(Ordering::Relaxed),
                 self.timeouts.load(Ordering::Relaxed),
                 self.shed.load(Ordering::Relaxed),
                 self.invalid_targets.load(Ordering::Relaxed),
                 self.worker_lost.load(Ordering::Relaxed),
+                self.approx_rejects.load(Ordering::Relaxed),
                 self.shutdown_rejects.load(Ordering::Relaxed),
                 self.worker_panics.load(Ordering::Relaxed),
                 self.worker_restarts.load(Ordering::Relaxed),
@@ -469,17 +474,20 @@ mod tests {
         m.record_error(&ServeError::Overloaded { depth: 9 });
         m.record_error(&ServeError::InvalidTarget { vid: VId(1) });
         m.record_error(&ServeError::WorkerLost { detail: "x".into() });
+        m.record_error(&ServeError::ApproxUnsupported);
         m.record_error(&ServeError::ShuttingDown);
         assert_eq!(m.timeouts.load(Ordering::Relaxed), 1);
         assert_eq!(m.shed.load(Ordering::Relaxed), 1);
         assert_eq!(m.invalid_targets.load(Ordering::Relaxed), 1);
         assert_eq!(m.worker_lost.load(Ordering::Relaxed), 1);
+        assert_eq!(m.approx_rejects.load(Ordering::Relaxed), 1);
         assert_eq!(m.shutdown_rejects.load(Ordering::Relaxed), 1);
-        assert_eq!(m.errors_total(), 5);
-        assert!((m.availability() - 3.0 / 8.0).abs() < 1e-12);
+        assert_eq!(m.errors_total(), 6);
+        assert!((m.availability() - 3.0 / 9.0).abs() < 1e-12);
         let s = m.summary();
-        assert!(s.contains("faults: avail=37.50%"), "{s}");
+        assert!(s.contains("faults: avail=33.33%"), "{s}");
         assert!(s.contains("timeout=1") && s.contains("lost=1"), "{s}");
+        assert!(s.contains("approx_rejected=1"), "{s}");
     }
 
     #[test]

@@ -18,16 +18,28 @@ pub struct InferenceRequest {
     /// Per-request deadline override; `None` inherits
     /// `ServerConfig::default_deadline`.
     pub deadline: Option<Duration>,
+    /// Opt into pruned (approximate) aggregation for this request. Only
+    /// honored by servers built with an approximate budget
+    /// (`ServerConfig::approx`); refused with
+    /// [`ServeError::ApproxUnsupported`] everywhere else — approximation
+    /// is a double opt-in, never a default.
+    pub approximate: bool,
 }
 
 impl InferenceRequest {
     pub fn new(id: u64, targets: Vec<VId>) -> InferenceRequest {
-        InferenceRequest { id, targets, deadline: None }
+        InferenceRequest { id, targets, deadline: None, approximate: false }
     }
 
     /// Attach a per-request deadline (overrides the server default).
     pub fn with_deadline(mut self, deadline: Duration) -> InferenceRequest {
         self.deadline = Some(deadline);
+        self
+    }
+
+    /// Mark this request as accepting approximate (error-budgeted) rows.
+    pub fn with_approximate(mut self) -> InferenceRequest {
+        self.approximate = true;
         self
     }
 }
@@ -49,6 +61,11 @@ pub enum ServeError {
     /// A worker panicked, a block executor failed, or a reply channel was
     /// lost while the request was in flight.
     WorkerLost { detail: String },
+    /// The request asked for approximate (error-budgeted) rows but the
+    /// server was built exact; rejected up front, before any work is
+    /// enqueued, so an exact deployment can never silently serve pruned
+    /// rows.
+    ApproxUnsupported,
     /// The server is shutting down and no longer admits requests.
     ShuttingDown,
 }
@@ -61,6 +78,7 @@ impl ServeError {
             ServeError::Overloaded { .. } => "overloaded",
             ServeError::InvalidTarget { .. } => "invalid_target",
             ServeError::WorkerLost { .. } => "worker_lost",
+            ServeError::ApproxUnsupported => "approx_unsupported",
             ServeError::ShuttingDown => "shutting_down",
         }
     }
@@ -79,6 +97,9 @@ impl std::fmt::Display for ServeError {
                 write!(f, "target {vid} outside the plan's vertex space")
             }
             ServeError::WorkerLost { detail } => write!(f, "worker lost: {detail}"),
+            ServeError::ApproxUnsupported => {
+                write!(f, "approximate request refused: server built in exact mode")
+            }
             ServeError::ShuttingDown => write!(f, "server is shutting down"),
         }
     }
@@ -125,12 +146,20 @@ mod tests {
             ServeError::Overloaded { depth: 7 },
             ServeError::InvalidTarget { vid: VId(9) },
             ServeError::WorkerLost { detail: "x".into() },
+            ServeError::ApproxUnsupported,
             ServeError::ShuttingDown,
         ];
         let classes: Vec<&str> = all.iter().map(|e| e.class()).collect();
         assert_eq!(
             classes,
-            ["timeout", "overloaded", "invalid_target", "worker_lost", "shutting_down"]
+            [
+                "timeout",
+                "overloaded",
+                "invalid_target",
+                "worker_lost",
+                "approx_unsupported",
+                "shutting_down"
+            ]
         );
         for e in &all {
             assert!(!e.to_string().is_empty());
@@ -146,5 +175,12 @@ mod tests {
         assert_eq!(r.deadline, None);
         let r = r.with_deadline(Duration::from_millis(250));
         assert_eq!(r.deadline, Some(Duration::from_millis(250)));
+    }
+
+    #[test]
+    fn approximate_is_off_by_default_and_rides_the_request() {
+        let r = InferenceRequest::new(4, vec![VId(0)]);
+        assert!(!r.approximate, "approximation must be opt-in per request");
+        assert!(r.with_approximate().approximate);
     }
 }

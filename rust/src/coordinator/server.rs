@@ -106,8 +106,8 @@ use super::plans::PlanCache;
 use super::request::{InferenceRequest, InferenceResponse, ServeError};
 use super::router::Router;
 use crate::engine::{
-    FeatureState, FusedEngine, InferencePlan, MemoryBudget, PushError, StealQueue, TileCache,
-    TileScratch,
+    ApproxScores, EngineMode, FeatureState, FusedEngine, InferencePlan, Matrix, MemoryBudget,
+    PruneBudget, PushError, StealQueue, TileCache, TileScratch,
 };
 use crate::grouping::{default_n_max, group_overlap_driven, OverlapHypergraph};
 use crate::hetgraph::{GraphDelta, HetGraph, VId};
@@ -136,6 +136,9 @@ struct WorkItem {
     /// executing the item.
     part: u32,
     targets: Vec<VId>,
+    /// The request opted into approximate (error-budgeted) execution and
+    /// the server was built with a budget — workers run the pruned path.
+    approx: bool,
     reply: Sender<Reply>,
 }
 
@@ -148,6 +151,12 @@ struct PlanState {
     /// [`PlanCache`] epoch the plan was resolved under — tags every
     /// worker's hot-tile cache so a plan rebuild drops stale tiles.
     epoch: u64,
+    /// Approximate-mode ranking scores, precomputed per published
+    /// (plan, state) pair **before** any spill (they read projected rows)
+    /// — `Some` iff the server was built with [`ServerConfig::approx`].
+    /// Republished alongside the plan on every live-delta swap, so pruned
+    /// execution always ranks against the state it serves.
+    scores: Option<Arc<ApproxScores>>,
 }
 
 /// Which execution backend the channel workers run.
@@ -230,6 +239,15 @@ pub struct ServerConfig {
     /// declared under one [`MemoryBudget`], so the two knobs cannot
     /// silently oversubscribe RAM.
     pub mem_budget_bytes: Option<usize>,
+    /// Build the server in approximate mode with this per-vertex
+    /// relative-error budget (CPU executor only). `None` (the default)
+    /// builds an exact server that **refuses** approximate requests with
+    /// [`ServeError::ApproxUnsupported`]; `Some` enables opt-in pruned
+    /// execution for requests that set `InferenceRequest::approximate` —
+    /// exact requests on an approximate server still run the bitwise
+    /// path. Approximation is a double opt-in: server build *and*
+    /// per-request flag.
+    pub approx: Option<PruneBudget>,
 }
 
 impl ServerConfig {
@@ -247,6 +265,7 @@ impl ServerConfig {
             restart_budget: DEFAULT_RESTART_BUDGET,
             faults: None,
             mem_budget_bytes: None,
+            approx: None,
         }
     }
 
@@ -293,6 +312,10 @@ struct CpuWorkerCtx {
     budget: MemoryBudget,
     metrics: Arc<Metrics>,
     faults: Option<FaultPlan>,
+    /// The server-level approximate budget; `Some` iff the server was
+    /// built approximate. Items flagged `approx` run the pruned path
+    /// under it.
+    approx: Option<PruneBudget>,
 }
 
 /// Live-mutation context, present only for the CPU executor: everything
@@ -306,6 +329,8 @@ struct LiveState {
     model: ModelConfig,
     channels: usize,
     mem_budget_bytes: Option<usize>,
+    /// Rebuild approximate-mode scores for every republished state.
+    approx: Option<PruneBudget>,
     /// The graph currently being served. The mutex serializes mutators
     /// (one swap in flight at a time) and keeps the old graph `Arc` alive
     /// across the invalidate/publish pair — the graph-identity rule.
@@ -347,6 +372,9 @@ pub struct Server {
     live: Option<LiveState>,
     default_deadline: Duration,
     admission_threshold: usize,
+    /// `Some` iff the server was built approximate — the admission gate
+    /// for requests flagged `approximate`.
+    approx: Option<PruneBudget>,
     closing: AtomicBool,
 }
 
@@ -361,6 +389,11 @@ impl Server {
         // per-(target, semantic) binary searches and without per-worker
         // rebuilds.
         let num_vertices = g.num_vertices();
+        if cfg.approx.is_some() && cfg.executor == ExecutorKind::Pjrt {
+            anyhow::bail!(
+                "approximate mode requires the CPU executor; PJRT artifacts are exact-only"
+            );
+        }
         let shared = match cfg.executor {
             ExecutorKind::Pjrt => {
                 // FP pass once, in the caller's thread, with a throwaway
@@ -380,7 +413,7 @@ impl Server {
                 model.fusion_dim = hidden as u32;
                 let (plan, epoch) = cfg.plans.get_or_build_epoch(&g, model, max_in_dim);
                 debug_assert_eq!(plan.hidden(), state.projected.cols);
-                Arc::new(PlanState { plan, state, epoch })
+                Arc::new(PlanState { plan, state, epoch, scores: None })
             }
             ExecutorKind::Cpu => {
                 // FP pass through the parallel in-process projector — the
@@ -389,6 +422,10 @@ impl Server {
                 let (plan, epoch) =
                     cfg.plans.get_or_build_epoch(&g, ModelConfig::new(cfg.kind), CPU_MAX_IN_DIM);
                 let mut state = FeatureState::project_all(&plan, cfg.channels.max(1));
+                // Attention scores must be derived while the projected
+                // table is fully resident (ApproxScores::build reads every
+                // row), so build them before any spill.
+                let scores = cfg.approx.map(|_| Arc::new(ApproxScores::build(&plan, &state)));
                 if let Some(b) = cfg.mem_budget_bytes {
                     // Tier the projected table against the budget: spilled
                     // to disk (budgeted resident pool) when it does not
@@ -396,7 +433,7 @@ impl Server {
                     // through the tier either way — bitwise-identically.
                     state.spill_to_budget(b).context("spill feature table to memory budget")?;
                 }
-                Arc::new(PlanState { plan, state, epoch })
+                Arc::new(PlanState { plan, state, epoch, scores })
             }
         };
 
@@ -463,6 +500,7 @@ impl Server {
                     model: ModelConfig::new(cfg.kind),
                     channels: cfg.channels,
                     mem_budget_bytes: cfg.mem_budget_bytes,
+                    approx: cfg.approx,
                     graph: Mutex::new(Arc::clone(&g)),
                 });
                 let ctx = Arc::new(CpuWorkerCtx {
@@ -473,6 +511,7 @@ impl Server {
                     budget,
                     metrics: Arc::clone(&metrics),
                     faults: cfg.faults,
+                    approx: cfg.approx,
                 });
                 let (health_tx, health_rx) = channel::<Health>();
                 for ch in 0..cfg.channels {
@@ -519,6 +558,7 @@ impl Server {
             live,
             default_deadline: cfg.default_deadline,
             admission_threshold: cfg.admission_threshold,
+            approx: cfg.approx,
             closing: AtomicBool::new(false),
         })
     }
@@ -540,6 +580,15 @@ impl Server {
         self.submit_as(InferenceRequest::new(id, targets).with_deadline(deadline))
     }
 
+    /// [`submit`](Server::submit) with the request flagged approximate.
+    /// Only meaningful on a server built with `ServerConfig::approx`;
+    /// anywhere else the flag is refused with
+    /// [`ServeError::ApproxUnsupported`].
+    pub fn submit_approx(&self, targets: Vec<VId>) -> Result<InferenceResponse, ServeError> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.submit_as(InferenceRequest::new(id, targets).with_approximate())
+    }
+
     /// Serve one request end to end. Resolves within the deadline, with
     /// rows or exactly one typed [`ServeError`] — never a hang (see the
     /// module-level failure model).
@@ -553,6 +602,12 @@ impl Server {
         };
         if self.closing.load(Ordering::Acquire) {
             return fail(ServeError::ShuttingDown);
+        }
+        // Approximation is a double opt-in: the request flag only passes
+        // on a server deliberately built with a prune budget. Refusing up
+        // front means an exact deployment can never serve pruned rows.
+        if req.approximate && self.approx.is_none() {
+            return fail(ServeError::ApproxUnsupported);
         }
         // Validate before any work is enqueued: a bad id must cost a typed
         // rejection, not an out-of-bounds panic inside the router. The
@@ -579,8 +634,13 @@ impl Server {
             if part.is_empty() {
                 continue;
             }
-            let item =
-                WorkItem { req: req.id, part: ch as u32, targets: part, reply: reply_tx.clone() };
+            let item = WorkItem {
+                req: req.id,
+                part: ch as u32,
+                targets: part,
+                approx: req.approximate,
+                reply: reply_tx.clone(),
+            };
             match &self.queues {
                 WorkQueues::PerChannel(qs) => {
                     if qs[ch].send(item).is_err() {
@@ -712,10 +772,15 @@ impl Server {
         // re-spilled under the same budget so the tiered layout is
         // deterministic per epoch.
         let mut state2 = FeatureState::project_all(&plan2, live.channels.max(1));
+        // Re-derive attention scores for the new epoch before the
+        // re-spill (ApproxScores::build requires a resident table); stale
+        // scores would rank against the pre-delta projection.
+        let scores2 = live.approx.map(|_| Arc::new(ApproxScores::build(&plan2, &state2)));
         if let Some(b) = live.mem_budget_bytes {
             state2.spill_to_budget(b).context("re-spill feature table after delta")?;
         }
-        let next = Arc::new(PlanState { plan: plan2, state: state2, epoch: epoch2 });
+        let next =
+            Arc::new(PlanState { plan: plan2, state: state2, epoch: epoch2, scores: scores2 });
         // Publish: slot first, epoch release second. A worker observing
         // the new epoch is guaranteed the slot already holds the new
         // snapshot; a worker observing the old epoch keeps the old
@@ -910,19 +975,58 @@ fn worker_loop_cpu(
                 }
                 FaultAction::None => {}
             }
-            let m = match &mut cache {
-                Some(cache) if !stolen => {
-                    let (m, _reuse, outcome) =
-                        engine.embed_group_tile_cached(&w.targets, cache, &mut scratch);
-                    ctx.metrics.record_tile_outcome(&outcome);
-                    m
-                }
-                other => {
-                    if other.is_some() {
-                        ctx.metrics.record_tile_bypass();
+            let m = if w.approx {
+                // Approximate part: items only carry the flag when the
+                // server was built with a budget, and every published
+                // PlanState on such a server carries pre-spill scores.
+                let budget = ctx.approx.expect("approx item admitted on an exact server");
+                let scores = current
+                    .scores
+                    .as_deref()
+                    .expect("approximate PlanState published without scores");
+                match &mut cache {
+                    Some(cache) if !stolen => {
+                        let (m, _reuse, outcome) = engine.embed_group_tile_cached_mode(
+                            &w.targets,
+                            EngineMode::Approximate(budget),
+                            Some(scores),
+                            cache,
+                            &mut scratch,
+                        );
+                        ctx.metrics.record_tile_outcome(&outcome);
+                        m
                     }
-                    let (m, _reuse) = engine.embed_group_tile_reusing(&w.targets, &mut scratch);
-                    m
+                    other => {
+                        if other.is_some() {
+                            ctx.metrics.record_tile_bypass();
+                        }
+                        let mut m = Matrix::zeros(w.targets.len(), current.plan.hidden());
+                        engine.embed_group_tiled_pruned(
+                            &w.targets,
+                            budget,
+                            scores,
+                            &mut scratch,
+                            &mut m.data,
+                        );
+                        m
+                    }
+                }
+            } else {
+                match &mut cache {
+                    Some(cache) if !stolen => {
+                        let (m, _reuse, outcome) =
+                            engine.embed_group_tile_cached(&w.targets, cache, &mut scratch);
+                        ctx.metrics.record_tile_outcome(&outcome);
+                        m
+                    }
+                    other => {
+                        if other.is_some() {
+                            ctx.metrics.record_tile_bypass();
+                        }
+                        let (m, _reuse) =
+                            engine.embed_group_tile_reusing(&w.targets, &mut scratch);
+                        m
+                    }
                 }
             };
             ctx.metrics.record_block(w.targets.len(), w.targets.len().max(1));

@@ -1,0 +1,588 @@
+//! Approximate mode: attention-disparity pruned aggregation behind an
+//! error-bound verification harness.
+//!
+//! ADE-HGNN (PAPERS.md) observes that most attention mass in HGNN
+//! aggregation concentrates on a few neighbors; on skewed-degree graphs
+//! an exact engine leaves a large speed/memory win on the table. This
+//! module is the repository's first deliberate step outside the bitwise
+//! invariant — and it is **explicitly opt-in**: nothing prunes unless a
+//! caller selects [`EngineMode::Approximate`] with a [`PruneBudget`].
+//! Every exact path is left bitwise-untouched (the regression wall in
+//! `rust/tests/approx.rs` proves it).
+//!
+//! Approximate mode trades the bitwise invariant for the **error-budget
+//! invariant**: every produced row's relative L2 error against the exact
+//! engines (and therefore against `ReferenceEngine`, which is bitwise
+//! equal to them) is at most the configured budget ε. The guarantee is
+//! enforced per vertex, not on average, by construction:
+//!
+//! 1. **Rank.** Per (target, semantic), neighbors are ranked by their
+//!    *drop cost* `β_s · |α_{s,u,t}| · ‖h'_u‖` — fusion weight times the
+//!    unnormalized attention-derived edge weight times the projected-row
+//!    norm. Edge weights come from per-vertex scores precomputed once per
+//!    (plan, state) ([`ApproxScores`]), so ranking never gathers a row.
+//! 2. **Truncate.** The lowest-cost tail is dropped greedily while the
+//!    accumulated cost stays under `SELECT_SAFETY · ε · scale` (a cheap
+//!    a-priori magnitude proxy). The accumulated cost is an **exact upper
+//!    bound** `A_t` on the pre-activation L2 perturbation: dropping
+//!    neighbor `u` of semantic `s` changes the fused pre-activation by
+//!    exactly `β_s · α · h'_u`, and LeakyReLU is 1-Lipschitz, so the
+//!    post-activation error is ≤ `A_t` too.
+//! 3. **Guard.** After aggregation the kernel checks
+//!    `A_t ≤ GUARD_MARGIN · ε · (‖z̃‖ − A_t)` with `‖z̃‖` the pruned row's
+//!    norm; since `‖z_exact‖ ≥ ‖z̃‖ − A_t`, passing the guard proves the
+//!    relative error is ≤ ε. A target that fails the guard is recomputed
+//!    **exactly** (per-target fallback through the ordinary tile kernel),
+//!    so the per-vertex bound holds unconditionally.
+//!
+//! Two corollaries the property suite pins down: a **zero budget keeps
+//! every neighbor**, and the kernel's arithmetic is then bit-for-bit the
+//! exact kernel's (precomputed scores reproduce `edge_weight_rows`
+//! bitwise — same `dot`, same byte-identical rows); and the dropped set
+//! for a tighter budget is a **subset** of the dropped set for a looser
+//! one (the threshold scales linearly with ε over one fixed ranking), so
+//! selections nest monotonically. Selection is a pure function of
+//! (plan, scores, target, ε) — independent of striping, thread count and
+//! steal order — so approximate results are deterministic across runs
+//! and thread counts even though they are not exact.
+//!
+//! Composition: pruning shrinks the distinct-row set each group tile
+//! gathers (the win compounds with PR 4's group tiles and the spilled
+//! storage tier), and pruned tiles ride the cross-request tile cache
+//! under a **mode-discriminated key** — an exact and a pruned tile can
+//! never be confused for one another (`engine::tile_cache`).
+//!
+//! [`ApproxScores`] must be built **before** the feature table spills
+//! (it reads projected rows) and is only valid for the state it was
+//! built from — re-projection or reseeding requires a rebuild, so
+//! approximate mode currently serves single-layer inference.
+
+use super::fused::{FusedEngine, TileScratch};
+use super::plan::{FeatureState, InferencePlan};
+use super::tensor::Matrix;
+use crate::hetgraph::VId;
+use crate::model::ModelKind;
+
+/// Fraction of the budget the greedy selection aims to spend. The
+/// post-aggregation guard enforces the real bound; selecting well below
+/// it keeps exact fallbacks rare without affecting correctness.
+const SELECT_SAFETY: f64 = 0.5;
+
+/// Headroom the acceptance guard keeps below the budget, absorbing the
+/// f32 rounding noise of the kept-sum that the real-arithmetic bound
+/// does not model (~1e-6 relative, against 1% headroom).
+pub(crate) const GUARD_MARGIN: f64 = 0.99;
+
+/// Per-vertex relative-error budget for approximate mode: every produced
+/// row satisfies `‖row − row_exact‖₂ ≤ ε · ‖row_exact‖₂`. Validated at
+/// construction (`0 ≤ ε < 1`, finite); `ε = 0` disables pruning entirely
+/// and is bitwise-exact.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PruneBudget {
+    epsilon: f64,
+}
+
+impl PruneBudget {
+    /// A validated budget. Rejects non-finite, negative, and ≥ 1 values
+    /// (a relative error of 1 means "any row at all").
+    pub fn new(epsilon: f64) -> Result<PruneBudget, String> {
+        if !epsilon.is_finite() || !(0.0..1.0).contains(&epsilon) {
+            return Err(format!("prune budget must be a finite ε in [0, 1), got {epsilon}"));
+        }
+        Ok(PruneBudget { epsilon })
+    }
+
+    /// The ε = 0 budget: approximate plumbing with exact results.
+    pub fn zero() -> PruneBudget {
+        PruneBudget { epsilon: 0.0 }
+    }
+
+    /// The configured per-vertex relative-error bound.
+    #[inline]
+    pub fn epsilon(&self) -> f64 {
+        self.epsilon
+    }
+}
+
+/// Which kernel family an execution runs: the default bitwise-exact
+/// paths, or opt-in pruned aggregation under a [`PruneBudget`]. The mode
+/// is part of every tile-cache key ([`EngineMode::cache_tag`]), so tiles
+/// materialized under different modes (or different budgets) can never
+/// serve one another.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum EngineMode {
+    /// Bitwise-exact execution (every pre-existing path).
+    #[default]
+    Exact,
+    /// Pruned aggregation under a per-vertex relative-error budget.
+    Approximate(PruneBudget),
+}
+
+impl EngineMode {
+    /// Whether this mode is the exact one.
+    #[inline]
+    pub fn is_exact(&self) -> bool {
+        matches!(self, EngineMode::Exact)
+    }
+
+    /// The budget, for approximate modes.
+    #[inline]
+    pub fn budget(&self) -> Option<PruneBudget> {
+        match self {
+            EngineMode::Exact => None,
+            EngineMode::Approximate(b) => Some(*b),
+        }
+    }
+
+    /// Deterministic tag folded into every tile-cache key, so exact and
+    /// pruned tiles (and pruned tiles of different budgets) occupy
+    /// disjoint key spaces. Collisions remain safe regardless — cached
+    /// entries store their mode and compare it on lookup.
+    pub fn cache_tag(&self) -> u64 {
+        match self {
+            EngineMode::Exact => 0,
+            // Non-zero marker even for ε = 0 (to_bits(0.0) == 0).
+            EngineMode::Approximate(b) => 0x5052_554E_4544_B11Du64 ^ b.epsilon.to_bits(),
+        }
+    }
+}
+
+/// Per-vertex scores precomputed once per (plan, state), from which the
+/// selection pass ranks neighbors and bounds errors **without gathering
+/// a single feature row**:
+///
+/// * `‖h'_u‖₂` for every vertex (f64);
+/// * for RGAT, `dot(a_l, h'_u)` and `dot(a_r, h'_v)` per semantic —
+///   computed by the same shared `dot` kernel the exact engines use, so
+///   [`ModelParams::edge_weight_scores`] reproduces
+///   [`ModelParams::edge_weight_rows`] bit-for-bit (RGCN/NARS weights are
+///   degree-only and need no score tables).
+///
+/// [`ModelParams::edge_weight_scores`]: super::plan::ModelParams::edge_weight_scores
+/// [`ModelParams::edge_weight_rows`]: super::plan::ModelParams::edge_weight_rows
+#[derive(Debug)]
+pub struct ApproxScores {
+    /// Projected-row L2 norm per vertex.
+    norms: Vec<f64>,
+    /// `dot(a_l, h'_u)` per `[semantic][vertex]` (RGAT only, else empty).
+    source: Vec<Vec<f32>>,
+    /// `dot(a_r, h'_v)` per `[semantic][vertex]` (RGAT only, else empty).
+    target: Vec<Vec<f32>>,
+}
+
+impl ApproxScores {
+    /// Precompute scores for `(plan, state)`. Must run **before** the
+    /// feature table spills: scores read projected rows directly.
+    pub fn build(plan: &InferencePlan, state: &FeatureState) -> ApproxScores {
+        assert!(
+            !state.is_spilled(),
+            "ApproxScores must be built before the feature table is spilled"
+        );
+        let n = plan.num_vertices();
+        let p = &state.projected;
+        assert_eq!(p.rows, n, "state does not cover the plan's vertex space");
+        let mut norms = vec![0.0f64; n];
+        for (v, norm) in norms.iter_mut().enumerate() {
+            let mut s = 0.0f64;
+            for &x in p.row(v) {
+                s += (x as f64) * (x as f64);
+            }
+            *norm = s.sqrt();
+        }
+        let (mut source, mut target) = (Vec::new(), Vec::new());
+        if plan.params.m.kind == ModelKind::Rgat {
+            for s in 0..plan.params.fusion_w.len() {
+                let mut src = vec![0.0f32; n];
+                let mut tgt = vec![0.0f32; n];
+                for v in 0..n {
+                    let row = p.row(v);
+                    src[v] = plan.params.source_score(s, row);
+                    tgt[v] = plan.params.target_score(s, row);
+                }
+                source.push(src);
+                target.push(tgt);
+            }
+        }
+        ApproxScores { norms, source, target }
+    }
+
+    /// `dot(a_l, h'_u)` for semantic `sem` (0 for non-attention models).
+    #[inline]
+    pub(crate) fn source_of(&self, sem: usize, u: VId) -> f32 {
+        self.source.get(sem).map_or(0.0, |v| v[u.idx()])
+    }
+
+    /// `dot(a_r, h'_v)` for semantic `sem` (0 for non-attention models).
+    #[inline]
+    pub(crate) fn target_of(&self, sem: usize, v: VId) -> f32 {
+        self.target.get(sem).map_or(0.0, |t| t[v.idx()])
+    }
+
+    /// Rank-and-truncate for one target: append one keep flag per
+    /// (entry, neighbor) of `t` — in adjacency walk order — to `kept`,
+    /// and return `(dropped_count, bound)` where `bound` is the exact
+    /// upper bound `A_t` on the pre-activation L2 perturbation of the
+    /// dropped set. `cand` is caller-held scratch. Deterministic: a pure
+    /// function of (plan, scores, t, ε), with ties broken by walk
+    /// position — independent of striping, threads, and steal order.
+    pub(crate) fn select_into(
+        &self,
+        plan: &InferencePlan,
+        t: VId,
+        epsilon: f64,
+        kept: &mut Vec<u8>,
+        cand: &mut Vec<(f64, u32)>,
+    ) -> (usize, f64) {
+        let fused = plan.adjacency();
+        let entries = fused.entries_of(t);
+        let base = kept.len();
+        let total: usize = entries.iter().map(|e| e.degree()).sum();
+        kept.resize(base + total, 1u8);
+        // ε = 0 keeps everything (bitwise-exact by construction): the
+        // early return also protects zero-cost neighbors, which a `≤ 0.0`
+        // threshold walk would otherwise happily drop.
+        if epsilon <= 0.0 || total == 0 {
+            return (0, 0.0);
+        }
+        cand.clear();
+        let mut beta_sum = 0.0f64;
+        let mut mass = 0.0f64;
+        let mut flat = 0u32;
+        for e in entries {
+            let s = e.semantic.0 as usize;
+            let beta = plan.params.fusion_w[s] as f64;
+            beta_sum += beta;
+            let deg = e.degree();
+            let sv = self.target_of(s, t);
+            for &u in fused.neighbors(e) {
+                let a = plan.params.edge_weight_scores(self.source_of(s, u), sv, deg);
+                let cost = beta * (a.abs() as f64) * self.norms[u.idx()];
+                cand.push((cost, flat));
+                mass += cost;
+                flat += 1;
+            }
+        }
+        // A-priori magnitude proxy for ‖z_t‖: the target's own projection
+        // (it seeds every semantic's partial) plus the total neighbor
+        // mass. The guard re-checks against the *actual* pruned norm, so
+        // this only has to be a decent heuristic, never a proof.
+        let threshold = SELECT_SAFETY * epsilon * (beta_sum * self.norms[t.idx()] + mass);
+        if threshold <= 0.0 {
+            return (0, 0.0);
+        }
+        cand.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let mut dropped = 0usize;
+        let mut bound = 0.0f64;
+        for &(cost, idx) in cand.iter() {
+            if bound + cost > threshold {
+                break;
+            }
+            bound += cost;
+            kept[base + idx as usize] = 0;
+            dropped += 1;
+        }
+        (dropped, bound)
+    }
+
+    /// The dropped (entry, neighbor) walk positions for one target — the
+    /// selection alone, for tests that pin determinism and monotone
+    /// nesting without running the kernel.
+    pub fn dropped_positions(&self, plan: &InferencePlan, t: VId, epsilon: f64) -> Vec<usize> {
+        let mut kept = Vec::new();
+        let mut cand = Vec::new();
+        self.select_into(plan, t, epsilon, &mut kept, &mut cand);
+        kept.iter().enumerate().filter(|(_, &k)| k == 0).map(|(i, _)| i).collect()
+    }
+}
+
+/// Aggregate counters of one approximate run (the deterministic "speed"
+/// proxy the report and bench record alongside wall-clock: fewer kept
+/// edges and fewer gathered tile rows are the win, independent of host
+/// noise).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ApproxStats {
+    /// Targets embedded.
+    pub targets: u64,
+    /// Neighbor edges before pruning.
+    pub total_edges: u64,
+    /// Neighbor edges kept by selection.
+    pub kept_edges: u64,
+    /// Distinct rows actually gathered into group tiles (pruned).
+    pub tile_rows: u64,
+    /// Targets recomputed exactly because the acceptance guard failed.
+    pub fallbacks: u64,
+}
+
+impl ApproxStats {
+    pub fn merge(&mut self, o: &ApproxStats) {
+        self.targets += o.targets;
+        self.total_edges += o.total_edges;
+        self.kept_edges += o.kept_edges;
+        self.tile_rows += o.tile_rows;
+        self.fallbacks += o.fallbacks;
+    }
+
+    /// Fraction of edges that survived pruning (1.0 when nothing to do).
+    pub fn kept_fraction(&self) -> f64 {
+        if self.total_edges == 0 {
+            return 1.0;
+        }
+        self.kept_edges as f64 / self.total_edges as f64
+    }
+
+    /// Fraction of targets that fell back to the exact kernel.
+    pub fn fallback_fraction(&self) -> f64 {
+        if self.targets == 0 {
+            return 0.0;
+        }
+        self.fallbacks as f64 / self.targets as f64
+    }
+}
+
+/// Pruned-vs-reference comparison: per-row relative L2 error against an
+/// exact matrix, with the per-vertex budget check the harness (and the
+/// CLI exit code) gates on.
+#[derive(Debug, Clone)]
+pub struct ErrorReport {
+    /// The budget the run claimed to satisfy.
+    pub budget: f64,
+    /// Rows compared.
+    pub rows: usize,
+    /// Worst per-row relative L2 error.
+    pub max_rel_err: f64,
+    /// Mean per-row relative L2 error.
+    pub mean_rel_err: f64,
+    /// Rows whose relative error exceeds the budget — **must be 0**.
+    pub violations: usize,
+    /// Rows that are bit-for-bit identical to the exact matrix.
+    pub bitwise_rows: usize,
+    /// Row index of `max_rel_err`, when any row differs.
+    pub worst_row: Option<usize>,
+}
+
+impl ErrorReport {
+    /// Compare a pruned result against the exact matrix row by row
+    /// (f64 accumulation). A zero-norm exact row counts as error 0 when
+    /// reproduced exactly and as a violation otherwise.
+    pub fn compare(budget: PruneBudget, approx: &Matrix, exact: &Matrix) -> ErrorReport {
+        assert_eq!(approx.rows, exact.rows, "row count mismatch");
+        assert_eq!(approx.cols, exact.cols, "column count mismatch");
+        let mut r = ErrorReport {
+            budget: budget.epsilon(),
+            rows: approx.rows,
+            max_rel_err: 0.0,
+            mean_rel_err: 0.0,
+            violations: 0,
+            bitwise_rows: 0,
+            worst_row: None,
+        };
+        let mut sum = 0.0f64;
+        for i in 0..approx.rows {
+            let (a, e) = (approx.row(i), exact.row(i));
+            if a.iter().zip(e).all(|(x, y)| x.to_bits() == y.to_bits()) {
+                r.bitwise_rows += 1;
+                continue;
+            }
+            let mut num = 0.0f64;
+            let mut den = 0.0f64;
+            for (&x, &y) in a.iter().zip(e) {
+                let d = x as f64 - y as f64;
+                num += d * d;
+                den += (y as f64) * (y as f64);
+            }
+            let rel = if den == 0.0 { f64::INFINITY } else { (num.sqrt()) / den.sqrt() };
+            sum += rel;
+            if rel > r.max_rel_err {
+                r.max_rel_err = rel;
+                r.worst_row = Some(i);
+            }
+            if rel > budget.epsilon() {
+                r.violations += 1;
+            }
+        }
+        if r.rows > 0 {
+            r.mean_rel_err = sum / r.rows as f64;
+        }
+        r
+    }
+
+    /// The error-budget invariant held on every row.
+    pub fn within_budget(&self) -> bool {
+        self.violations == 0
+    }
+
+    /// One-line human summary (CLI / report output).
+    pub fn summary(&self) -> String {
+        format!(
+            "budget={:.4} rows={} max_rel_err={:.3e} mean_rel_err={:.3e} bitwise={} violations={}",
+            self.budget, self.rows, self.max_rel_err, self.mean_rel_err, self.bitwise_rows,
+            self.violations,
+        )
+    }
+}
+
+impl<'a> FusedEngine<'a> {
+    /// Striped approximate embedding: the pruned mirror of
+    /// [`FusedEngine::embed_semantics_complete`], with identical
+    /// striping. Every row satisfies the per-vertex error budget (module
+    /// docs), and the output is bitwise-deterministic across runs and
+    /// thread counts — at ε = 0 it is bitwise-equal to the exact paths.
+    pub fn embed_approximate(
+        &self,
+        order: &[VId],
+        threads: usize,
+        budget: PruneBudget,
+        scores: &ApproxScores,
+    ) -> (Matrix, ApproxStats) {
+        let h = self.plan().params.hidden;
+        let mut out = Matrix::zeros(order.len(), h);
+        let mut stats = ApproxStats::default();
+        if order.is_empty() || h == 0 {
+            return (out, stats);
+        }
+        let threads = threads.clamp(1, order.len());
+        if threads == 1 {
+            let mut scratch = TileScratch::default();
+            let (_, _, s) =
+                self.embed_group_tiled_pruned(order, budget, scores, &mut scratch, &mut out.data);
+            stats.merge(&s);
+            return (out, stats);
+        }
+        let chunk = order.len().div_ceil(threads);
+        let stripe_stats: Vec<ApproxStats> = std::thread::scope(|sc| {
+            let handles: Vec<_> = order
+                .chunks(chunk)
+                .zip(out.data.chunks_mut(chunk * h))
+                .map(|(targets, stripe)| {
+                    sc.spawn(move || {
+                        let mut scratch = TileScratch::default();
+                        let (_, _, s) = self.embed_group_tiled_pruned(
+                            targets, budget, scores, &mut scratch, stripe,
+                        );
+                        s
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|hd| hd.join().expect("approx worker panicked")).collect()
+        });
+        for s in &stripe_stats {
+            stats.merge(s);
+        }
+        (out, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::Dataset;
+    use crate::engine::{FeatureState, InferencePlan, ReferenceEngine};
+    use crate::model::{ModelConfig, ModelKind};
+
+    #[test]
+    fn budget_validates_its_range() {
+        assert!(PruneBudget::new(0.0).is_ok());
+        assert!(PruneBudget::new(0.25).is_ok());
+        for bad in [-0.01, 1.0, 1.5, f64::NAN, f64::INFINITY] {
+            assert!(PruneBudget::new(bad).is_err(), "{bad} must be rejected");
+        }
+        assert_eq!(PruneBudget::zero().epsilon(), 0.0);
+    }
+
+    #[test]
+    fn cache_tags_discriminate_modes_and_budgets() {
+        let exact = EngineMode::Exact;
+        let a0 = EngineMode::Approximate(PruneBudget::zero());
+        let a5 = EngineMode::Approximate(PruneBudget::new(0.05).unwrap());
+        let a10 = EngineMode::Approximate(PruneBudget::new(0.10).unwrap());
+        assert!(exact.is_exact() && !a0.is_exact());
+        assert_ne!(exact.cache_tag(), a0.cache_tag(), "ε=0 approx is still not exact mode");
+        assert_ne!(a5.cache_tag(), a10.cache_tag(), "budgets key separately");
+        assert_eq!(a5.cache_tag(), a5.cache_tag());
+        assert_eq!(EngineMode::default(), EngineMode::Exact);
+    }
+
+    #[test]
+    fn error_report_measures_rows_and_flags_violations() {
+        let exact = Matrix::from_fn(3, 4, |r, c| (r * 4 + c) as f32 + 1.0);
+        let mut approx = exact.clone();
+        // Row 0 untouched (bitwise); row 1 tiny perturbation; row 2 huge.
+        approx.row_mut(1)[0] += 1e-4;
+        approx.row_mut(2)[0] += 100.0;
+        let b = PruneBudget::new(0.01).unwrap();
+        let r = ErrorReport::compare(b, &approx, &exact);
+        assert_eq!(r.rows, 3);
+        assert_eq!(r.bitwise_rows, 1);
+        assert_eq!(r.violations, 1, "only the huge row violates a 1% budget");
+        assert_eq!(r.worst_row, Some(2));
+        assert!(!r.within_budget());
+        assert!(r.max_rel_err > 1.0);
+        assert!(!r.summary().is_empty());
+        let clean = ErrorReport::compare(b, &exact, &exact);
+        assert!(clean.within_budget());
+        assert_eq!(clean.bitwise_rows, 3);
+        assert_eq!(clean.max_rel_err, 0.0);
+    }
+
+    #[test]
+    fn zero_budget_is_bitwise_exact_and_prunes_nothing() {
+        let g = Dataset::Acm.load(0.03);
+        for kind in ModelKind::ALL {
+            let plan = InferencePlan::build(&g, ModelConfig::new(kind), 24);
+            let state = FeatureState::project_all(&plan, 2);
+            let scores = ApproxScores::build(&plan, &state);
+            let f = FusedEngine::over(&plan, &state);
+            let order = g.target_vertices();
+            let want = f.embed_semantics_complete(&order, 2);
+            let (got, stats) = f.embed_approximate(&order, 2, PruneBudget::zero(), &scores);
+            assert_eq!(want.max_abs_diff(&got), 0.0, "{kind:?}: ε=0 must be bitwise");
+            assert_eq!(stats.kept_edges, stats.total_edges, "{kind:?}: ε=0 keeps everything");
+            assert_eq!(stats.fallbacks, 0);
+        }
+    }
+
+    #[test]
+    fn selection_is_deterministic_and_nests_across_budgets() {
+        let g = Dataset::Acm.load(0.04);
+        let plan = InferencePlan::build(&g, ModelConfig::new(ModelKind::Rgat), 24);
+        let state = FeatureState::project_all(&plan, 1);
+        let scores = ApproxScores::build(&plan, &state);
+        let mut any_dropped = false;
+        for &t in g.target_vertices().iter().take(64) {
+            let tight = scores.dropped_positions(&plan, t, 0.02);
+            let loose = scores.dropped_positions(&plan, t, 0.2);
+            assert_eq!(tight, scores.dropped_positions(&plan, t, 0.02), "replay must agree");
+            for p in &tight {
+                assert!(loose.contains(p), "tighter budget dropped {p} that looser kept");
+            }
+            assert!(scores.dropped_positions(&plan, t, 0.0).is_empty(), "ε=0 drops nothing");
+            any_dropped |= !loose.is_empty();
+        }
+        assert!(any_dropped, "a 20% budget must actually prune something on ACM");
+    }
+
+    #[test]
+    fn error_stays_within_budget_against_the_reference() {
+        let g = Dataset::Acm.load(0.04);
+        let order = g.target_vertices();
+        for kind in ModelKind::ALL {
+            let plan = InferencePlan::build(&g, ModelConfig::new(kind), 24);
+            let state = FeatureState::project_all(&plan, 2);
+            let scores = ApproxScores::build(&plan, &state);
+            let f = FusedEngine::over(&plan, &state);
+            let e = ReferenceEngine::new(&g, ModelConfig::new(kind), 24);
+            let want = e.embed_semantics_complete(&order);
+            for eps in [0.01, 0.05, 0.2] {
+                let b = PruneBudget::new(eps).unwrap();
+                let (got, _) = f.embed_approximate(&order, 4, b, &scores);
+                let r = ErrorReport::compare(b, &got, &want);
+                assert!(
+                    r.within_budget(),
+                    "{kind:?} ε={eps}: {} rows over budget (max {:.3e})",
+                    r.violations,
+                    r.max_rel_err
+                );
+            }
+        }
+    }
+}

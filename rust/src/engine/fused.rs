@@ -45,6 +45,7 @@
 //! [`embed_scheduled`]: FusedEngine::embed_scheduled
 
 use super::access::TileReuse;
+use super::approx::{ApproxScores, ApproxStats, PruneBudget, GUARD_MARGIN};
 use super::functional::{ReferenceEngine, LEAKY_SLOPE};
 use super::plan::{FeatureState, InferencePlan};
 use super::schedule::{GroupSchedule, WorkerPlan};
@@ -80,6 +81,15 @@ pub struct TileScratch {
     pub(super) tile: Vec<f32>,
     /// The per-target partial (Algorithm 1's register).
     pub(super) partial: Vec<f32>,
+    /// Approximate mode only: one keep flag per (entry, neighbor) of the
+    /// group, in adjacency walk order (empty on the exact path).
+    pub(super) kept: Vec<u8>,
+    /// Approximate mode only: per-target pre-activation error bound `A_t`
+    /// from the pruning selection (empty on the exact path).
+    pub(super) bounds: Vec<f64>,
+    /// Approximate mode only: (drop cost, walk position) candidate buffer
+    /// reused across selection calls.
+    pub(super) cand: Vec<(f64, u32)>,
 }
 
 impl<'a> FusedEngine<'a> {
@@ -319,11 +329,25 @@ impl<'a> FusedEngine<'a> {
         let fused = self.plan.adjacency();
         debug_assert_eq!(out.len(), targets.len() * h);
 
-        let TileScratch { slot_of, tile_ids, edge_slots, target_slots, tile, partial } = scratch;
+        let TileScratch {
+            slot_of,
+            tile_ids,
+            edge_slots,
+            target_slots,
+            tile,
+            partial,
+            kept,
+            bounds,
+            cand: _,
+        } = scratch;
         slot_of.clear();
         tile_ids.clear();
         edge_slots.clear();
         target_slots.clear();
+        // Exact groups carry no pruning payload: keep the scratch coherent
+        // so a cache admit after this kernel stores empty kept/bounds.
+        kept.clear();
+        bounds.clear();
 
         // Pass 1: index.
         {
@@ -420,6 +444,208 @@ impl<'a> FusedEngine<'a> {
         }
         debug_assert_eq!(cursor, edge_slots.len());
     }
+
+    /// Pruned mirror of [`aggregate_from_tile`](Self::aggregate_from_tile):
+    /// identical op order per target, but neighbors whose keep flag is 0
+    /// are skipped (their tile slots were never claimed, so `edge_slots`
+    /// holds kept neighbors only while `kept` walks the *full* adjacency).
+    /// Edge weights come from the precomputed score halves with the
+    /// **full** degree — a kept neighbor's weight is the same value the
+    /// exact kernel would compute, so at ε = 0 (all flags set) this is
+    /// bit-for-bit [`aggregate_from_tile`](Self::aggregate_from_tile).
+    pub(crate) fn aggregate_from_tile_pruned(
+        &self,
+        targets: &[VId],
+        view: PrunedTileView<'_>,
+        scores: &ApproxScores,
+        partial: &mut Vec<f32>,
+        out: &mut [f32],
+    ) {
+        let h = self.plan.params.hidden;
+        let params = &self.plan.params;
+        let fused = self.plan.adjacency();
+        let PrunedTileView { tile, edge_slots, target_slots, kept } = view;
+        debug_assert_eq!(out.len(), targets.len() * h);
+        partial.resize(h, 0.0);
+        let mut cursor = 0usize; // kept-edge cursor into `edge_slots`
+        let mut flat = 0usize; // full-adjacency cursor into `kept`
+        for (i, &t) in targets.iter().enumerate() {
+            let ts = target_slots[i] as usize * h;
+            let z = &mut out[i * h..(i + 1) * h];
+            let entries = fused.entries_of(t);
+            if entries.is_empty() {
+                z.copy_from_slice(&tile[ts..ts + h]);
+            } else {
+                z.fill(0.0);
+                for e in entries {
+                    partial.copy_from_slice(&tile[ts..ts + h]);
+                    let s = e.semantic.0 as usize;
+                    let deg = e.degree();
+                    let sv = scores.target_of(s, t);
+                    for &u in fused.neighbors(e) {
+                        let keep = kept[flat] != 0;
+                        flat += 1;
+                        if !keep {
+                            continue;
+                        }
+                        let us = edge_slots[cursor] as usize * h;
+                        cursor += 1;
+                        let a = params.edge_weight_scores(scores.source_of(s, u), sv, deg);
+                        axpy(partial, &tile[us..us + h], a);
+                    }
+                    axpy(z, partial, params.fusion_w[s]);
+                }
+            }
+            leaky_relu(z, LEAKY_SLOPE);
+        }
+        debug_assert_eq!(cursor, edge_slots.len());
+        debug_assert_eq!(flat, kept.len());
+    }
+
+    /// Post-aggregation acceptance guard of approximate mode: for each
+    /// target with a nonzero selection bound `A_t`, accept the pruned row
+    /// iff `A_t ≤ GUARD_MARGIN · ε · (‖z̃‖ − A_t)` (since
+    /// `‖z_exact‖ ≥ ‖z̃‖ − A_t`, acceptance proves relative error ≤ ε);
+    /// otherwise recompute that row **exactly** through the ordinary tile
+    /// kernel (works for in-RAM and spilled states alike). Decisions are a
+    /// pure function of (row bytes, bounds, ε), so hit-path replays make
+    /// the same calls. Returns the number of exact fallbacks.
+    pub(crate) fn enforce_budget(
+        &self,
+        targets: &[VId],
+        epsilon: f64,
+        bounds: &[f64],
+        out: &mut [f32],
+    ) -> u64 {
+        let h = self.plan.params.hidden;
+        debug_assert_eq!(bounds.len(), targets.len());
+        let mut fallback: Option<TileScratch> = None;
+        let mut fallbacks = 0u64;
+        for (i, &t) in targets.iter().enumerate() {
+            let a = bounds[i];
+            if a <= 0.0 {
+                continue; // nothing dropped: row is exact
+            }
+            let z = &mut out[i * h..(i + 1) * h];
+            let mut q = 0.0f64;
+            for &x in z.iter() {
+                q += (x as f64) * (x as f64);
+            }
+            if a <= GUARD_MARGIN * epsilon * (q.sqrt() - a) {
+                continue;
+            }
+            let s = fallback.get_or_insert_with(TileScratch::default);
+            self.embed_group_tiled(&[t], s, z);
+            fallbacks += 1;
+        }
+        fallbacks
+    }
+
+    /// Approximate-mode group kernel: the pruned mirror of
+    /// [`embed_group_tiled`](Self::embed_group_tiled), with a selection
+    /// pass in front and the acceptance guard behind. Five passes:
+    /// (0) select — rank-and-truncate each target's neighbors under the
+    /// budget, filling `scratch.kept` / `scratch.bounds`; (1) index —
+    /// only *kept* neighbors claim tile slots, which is the memory win:
+    /// the distinct-row set the tile gathers shrinks; (2) gather —
+    /// unchanged; (3) aggregate — the pruned pass 3; (4) guard — per-
+    /// target exact fallback wherever the bound can't prove the budget.
+    /// `scratch.bounds` is left exactly as selection produced it (never
+    /// zeroed on fallback), so a tile-cache admit of this scratch replays
+    /// deterministically. Returns `(distinct, total)` row-load counts
+    /// plus the run's [`ApproxStats`].
+    pub(crate) fn embed_group_tiled_pruned(
+        &self,
+        targets: &[VId],
+        budget: PruneBudget,
+        scores: &ApproxScores,
+        scratch: &mut TileScratch,
+        out: &mut [f32],
+    ) -> (u64, u64, ApproxStats) {
+        let h = self.plan.params.hidden;
+        let projected = &self.state.projected;
+        let fused = self.plan.adjacency();
+        debug_assert_eq!(out.len(), targets.len() * h);
+
+        let TileScratch { slot_of, tile_ids, edge_slots, target_slots, tile, partial, kept, bounds, cand } =
+            scratch;
+        slot_of.clear();
+        tile_ids.clear();
+        edge_slots.clear();
+        target_slots.clear();
+        kept.clear();
+        bounds.clear();
+
+        // Pass 0: selection (pure per-target, independent of striping).
+        let eps = budget.epsilon();
+        for &t in targets {
+            let (_, bound) = scores.select_into(self.plan, t, eps, kept, cand);
+            bounds.push(bound);
+        }
+        let mut stats = ApproxStats {
+            targets: targets.len() as u64,
+            total_edges: kept.len() as u64,
+            kept_edges: kept.iter().map(|&k| k as u64).sum(),
+            ..ApproxStats::default()
+        };
+
+        // Pass 1: index — kept neighbors only.
+        {
+            let mut slot = |v: VId| -> u32 {
+                *slot_of.entry(v).or_insert_with(|| {
+                    tile_ids.push(v);
+                    (tile_ids.len() - 1) as u32
+                })
+            };
+            let mut flat = 0usize;
+            for &t in targets {
+                target_slots.push(slot(t));
+                for e in fused.entries_of(t) {
+                    for &u in fused.neighbors(e) {
+                        if kept[flat] != 0 {
+                            edge_slots.push(slot(u));
+                        }
+                        flat += 1;
+                    }
+                }
+            }
+        }
+
+        // Pass 2: gather — identical to the exact kernel, over the
+        // (smaller) pruned distinct-row set.
+        tile.clear();
+        match self.state.tier() {
+            Some(t) if t.is_spilled() => t.gather_rows(tile_ids, tile),
+            tier => {
+                for &v in tile_ids.iter() {
+                    tile.extend_from_slice(projected.row(v.idx()));
+                }
+                if let Some(t) = tier {
+                    t.record_bypass(tile_ids.len() as u64);
+                }
+            }
+        }
+
+        // Pass 3: pruned aggregation.
+        let view = PrunedTileView { tile, edge_slots, target_slots, kept };
+        self.aggregate_from_tile_pruned(targets, view, scores, partial, out);
+
+        // Pass 4: acceptance guard + exact fallbacks.
+        stats.fallbacks = self.enforce_budget(targets, eps, bounds, out);
+        stats.tile_rows = tile_ids.len() as u64;
+        (tile_ids.len() as u64, (targets.len() + edge_slots.len()) as u64, stats)
+    }
+}
+
+/// Borrowed view of a (possibly cached) pruned tile: the gathered rows,
+/// the kept-only edge slots, per-target slots, and the full-adjacency
+/// keep flags. Groups the pruned pass-3 inputs whether they come from a
+/// fresh scratch or a cache entry.
+pub(crate) struct PrunedTileView<'t> {
+    pub(crate) tile: &'t [f32],
+    pub(crate) edge_slots: &'t [u32],
+    pub(crate) target_slots: &'t [u32],
+    pub(crate) kept: &'t [u8],
 }
 
 #[cfg(test)]

@@ -19,9 +19,12 @@
 //! tier (in-RAM or spilled to an unlinked temp file with a chunk-LRU
 //! resident pool, prefetched by the streaming dispatcher's lookahead);
 //! `multilayer` runs whole stacks on one plan. Every path computes
-//! bitwise-identical embeddings.
+//! bitwise-identical embeddings — except the explicitly opt-in
+//! [`EngineMode::Approximate`] (`approx`), which prunes low-attention
+//! neighbors under a verified per-vertex relative-error budget instead.
 
 pub mod access;
+pub mod approx;
 pub mod batchwise;
 pub mod dispatch;
 pub mod functional;
@@ -37,6 +40,7 @@ pub mod tile_cache;
 pub mod trace;
 
 pub use access::{AccessCounter, AccessReport, TileReuse};
+pub use approx::{ApproxScores, ApproxStats, EngineMode, ErrorReport, PruneBudget};
 pub use batchwise::{
     batched_semantic_passes, walk_per_semantic_batched, walk_per_semantic_batched_fused,
 };

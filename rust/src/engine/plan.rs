@@ -108,6 +108,51 @@ impl ModelParams {
             }
         }
     }
+
+    /// `dot(a_l, row)` for semantic `sem` — the source half of the RGAT
+    /// attention logit (0 for degree-only models). Approximate mode
+    /// precomputes this per vertex ([`ApproxScores`]); it uses the same
+    /// shared `dot` as [`ModelParams::edge_weight_rows`], so recombining
+    /// the halves reproduces the exact weight bit-for-bit.
+    ///
+    /// [`ApproxScores`]: super::approx::ApproxScores
+    #[inline]
+    pub fn source_score(&self, sem: usize, row: &[f32]) -> f32 {
+        match self.m.kind {
+            ModelKind::Rgcn | ModelKind::Nars => 0.0,
+            ModelKind::Rgat => dot(&self.attn[sem].0, row),
+        }
+    }
+
+    /// `dot(a_r, row)` for semantic `sem` — the target half of the RGAT
+    /// attention logit (0 for degree-only models). See
+    /// [`ModelParams::source_score`].
+    #[inline]
+    pub fn target_score(&self, sem: usize, row: &[f32]) -> f32 {
+        match self.m.kind {
+            ModelKind::Rgcn | ModelKind::Nars => 0.0,
+            ModelKind::Rgat => dot(&self.attn[sem].1, row),
+        }
+    }
+
+    /// Edge weight from precomputed score halves: bitwise-identical to
+    /// [`ModelParams::edge_weight_rows`] when `su = dot(a_l, h_u)` and
+    /// `sv = dot(a_r, h_v)` — the sum, LeakyReLU, tanh and degree terms
+    /// are the same operations in the same order. The pruned kernel uses
+    /// this so ranking and aggregation never re-gather rows for scoring.
+    #[inline]
+    pub fn edge_weight_scores(&self, su: f32, sv: f32, deg: usize) -> f32 {
+        match self.m.kind {
+            ModelKind::Rgcn | ModelKind::Nars => 1.0 / deg as f32,
+            ModelKind::Rgat => {
+                let mut e = su + sv;
+                if e < 0.0 {
+                    e *= LEAKY_SLOPE;
+                }
+                (e / deg as f32).tanh() * 0.5 + 1.0 / deg as f32
+            }
+        }
+    }
 }
 
 /// The immutable build-once product of one (graph, model) pair: fused

@@ -24,6 +24,15 @@
 //! untouched and the embeddings are bit-for-bit identical, cache on or
 //! off, under any steal interleaving.
 //!
+//! **Mode discrimination.** Approximate mode (`engine::approx`) caches
+//! *pruned* tiles through the same LRU: the [`EngineMode`]'s
+//! [`cache_tag`](EngineMode::cache_tag) is folded into every key and the
+//! entry stores its mode (plus the pruned payload: keep flags and
+//! per-target error bounds), compared on lookup exactly like the target
+//! sequence — so an exact and a pruned tile, or pruned tiles of two
+//! different budgets, can never serve one another; any collision
+//! degrades to a miss, never a wrong row.
+//!
 //! **Epoch invalidation.** Tiles are only valid against the plan + feature
 //! state they were gathered from. Every plan resolved through the
 //! coordinator's `PlanCache` carries a monotonically increasing *epoch*;
@@ -48,7 +57,8 @@
 //! [`FusedEngine::embed_group_tile_cached`]: FusedEngine::embed_group_tile_cached
 
 use super::access::TileReuse;
-use super::fused::{FusedEngine, TileScratch};
+use super::approx::{ApproxScores, EngineMode};
+use super::fused::{FusedEngine, PrunedTileView, TileScratch};
 use super::tensor::Matrix;
 use crate::hetgraph::VId;
 use rustc_hash::{FxHashMap, FxHasher};
@@ -66,12 +76,24 @@ pub struct CachedTile {
     /// The exact ordered target sequence of the entry — compared in full
     /// on lookup, so hash collisions can only cause misses.
     targets: Vec<VId>,
-    /// Tile slot of every edge source, in aggregation order.
+    /// The engine mode the tile was materialized under — compared on
+    /// lookup like the target sequence, so an exact/pruned key collision
+    /// degrades to a miss, never a wrong row.
+    mode: EngineMode,
+    /// Tile slot of every edge source, in aggregation order (kept
+    /// neighbors only, in approximate mode).
     pub(super) edge_slots: Vec<u32>,
     /// Tile slot of every target, in group order.
     pub(super) target_slots: Vec<u32>,
     /// The gathered tile: one unmodified projected row per distinct VId.
     pub(super) tile: Vec<f32>,
+    /// Approximate mode: keep flag per (entry, neighbor) in adjacency
+    /// walk order (empty for exact tiles).
+    pub(super) kept: Vec<u8>,
+    /// Approximate mode: per-target selection error bounds, so hit-path
+    /// aggregation replays the acceptance guard deterministically (empty
+    /// for exact tiles).
+    pub(super) bounds: Vec<f64>,
     /// LRU recency tick (monotonic per cache).
     tick: u64,
     /// Budget bytes charged for this entry.
@@ -140,10 +162,13 @@ impl TileCache {
         }
     }
 
-    /// Canonical key of a target sequence (FxHash over the VIds + length).
-    /// Collisions are safe: entries verify the full sequence on lookup.
-    pub fn key_of(targets: &[VId]) -> u64 {
+    /// Canonical key of a (mode, target sequence) pair: FxHash over the
+    /// mode's [`cache_tag`](EngineMode::cache_tag), the length, and the
+    /// VIds. Collisions are safe: entries verify both the full sequence
+    /// and the mode on lookup.
+    pub fn key_of(mode: EngineMode, targets: &[VId]) -> u64 {
         let mut h = FxHasher::default();
+        mode.cache_tag().hash(&mut h);
         targets.len().hash(&mut h);
         for t in targets {
             t.0.hash(&mut h);
@@ -193,16 +218,32 @@ impl TileCache {
         self.budget
     }
 
-    fn entry_bytes(targets: usize, edge_slots: usize, target_slots: usize, tile: usize) -> usize {
-        (targets + edge_slots + target_slots + tile) * 4 + TILE_ENTRY_OVERHEAD_BYTES
+    fn entry_bytes(
+        targets: usize,
+        edge_slots: usize,
+        target_slots: usize,
+        tile: usize,
+        kept: usize,
+        bounds: usize,
+    ) -> usize {
+        (targets + edge_slots + target_slots + tile) * 4
+            + kept
+            + bounds * 8
+            + TILE_ENTRY_OVERHEAD_BYTES
     }
 
-    /// Look up the tile for the exact target sequence `targets` under
+    /// Look up the tile for the exact (mode, target sequence) pair under
     /// `key` (= [`TileCache::key_of`]). A hit refreshes LRU recency and
     /// accounts the skipped gather; a mismatch under the same key (hash
-    /// collision) is a miss.
-    pub(crate) fn lookup(&mut self, key: u64, targets: &[VId]) -> Option<&CachedTile> {
-        let hit = matches!(self.entries.get(&key), Some(e) if e.targets == targets);
+    /// collision, or an exact/pruned mode clash) is a miss.
+    pub(crate) fn lookup(
+        &mut self,
+        key: u64,
+        mode: EngineMode,
+        targets: &[VId],
+    ) -> Option<&CachedTile> {
+        let hit =
+            matches!(self.entries.get(&key), Some(e) if e.mode == mode && e.targets == targets);
         if !hit {
             self.stats.misses += 1;
             return None;
@@ -219,14 +260,24 @@ impl TileCache {
     }
 
     /// Admit the tile the scratch currently holds (just materialized for
-    /// `targets` by `embed_group_tiled`), evicting LRU entries until it
-    /// fits. Oversized tiles (and every tile, at budget zero) are rejected.
-    pub(crate) fn admit(&mut self, key: u64, targets: &[VId], scratch: &TileScratch) -> AdmitOutcome {
+    /// `targets` by `embed_group_tiled` or its pruned mirror — the exact
+    /// kernel leaves `kept`/`bounds` empty, so the payload follows the
+    /// mode), evicting LRU entries until it fits. Oversized tiles (and
+    /// every tile, at budget zero) are rejected.
+    pub(crate) fn admit(
+        &mut self,
+        key: u64,
+        mode: EngineMode,
+        targets: &[VId],
+        scratch: &TileScratch,
+    ) -> AdmitOutcome {
         let bytes = Self::entry_bytes(
             targets.len(),
             scratch.edge_slots.len(),
             scratch.target_slots.len(),
             scratch.tile.len(),
+            scratch.kept.len(),
+            scratch.bounds.len(),
         );
         let mut out = AdmitOutcome::default();
         if bytes > self.budget {
@@ -255,9 +306,12 @@ impl TileCache {
         self.tick += 1;
         let entry = CachedTile {
             targets: targets.to_vec(),
+            mode,
             edge_slots: scratch.edge_slots.clone(),
             target_slots: scratch.target_slots.clone(),
             tile: scratch.tile.clone(),
+            kept: scratch.kept.clone(),
+            bounds: scratch.bounds.clone(),
             tick: self.tick,
             bytes,
         };
@@ -301,6 +355,25 @@ impl<'a> FusedEngine<'a> {
         cache: &mut TileCache,
         scratch: &mut TileScratch,
     ) -> (Matrix, TileReuse, TileCacheOutcome) {
+        self.embed_group_tile_cached_mode(targets, EngineMode::Exact, None, cache, scratch)
+    }
+
+    /// Mode-discriminated cached group embed: the exact mode is the
+    /// bitwise path above; [`EngineMode::Approximate`] materializes (and
+    /// serves) *pruned* tiles under mode-tagged keys. On an approximate
+    /// hit the cached keep flags + selection bounds replay the pruned
+    /// aggregation and the acceptance guard — guard decisions are pure
+    /// functions of the replayed rows and bounds, so a hit returns
+    /// bit-for-bit what the miss that admitted the entry returned.
+    /// `scores` must be `Some` for approximate modes.
+    pub fn embed_group_tile_cached_mode(
+        &self,
+        targets: &[VId],
+        mode: EngineMode,
+        scores: Option<&ApproxScores>,
+        cache: &mut TileCache,
+        scratch: &mut TileScratch,
+    ) -> (Matrix, TileReuse, TileCacheOutcome) {
         let h = self.plan().params.hidden;
         let mut out = Matrix::zeros(targets.len(), h);
         let mut reuse = TileReuse::default();
@@ -308,24 +381,53 @@ impl<'a> FusedEngine<'a> {
         if targets.is_empty() || h == 0 {
             return (out, reuse, outcome);
         }
-        let key = TileCache::key_of(targets);
-        if let Some(entry) = cache.lookup(key, targets) {
+        let key = TileCache::key_of(mode, targets);
+        if let Some(entry) = cache.lookup(key, mode, targets) {
             outcome.hit = true;
             outcome.gather_bytes_saved = entry.tile_bytes() as u64;
-            self.aggregate_from_tile(
-                targets,
-                &entry.tile,
-                &entry.edge_slots,
-                &entry.target_slots,
-                &mut scratch.partial,
-                &mut out.data,
-            );
+            match mode {
+                EngineMode::Exact => {
+                    self.aggregate_from_tile(
+                        targets,
+                        &entry.tile,
+                        &entry.edge_slots,
+                        &entry.target_slots,
+                        &mut scratch.partial,
+                        &mut out.data,
+                    );
+                }
+                EngineMode::Approximate(budget) => {
+                    let scores = scores.expect("approximate cached embed requires scores");
+                    let view = PrunedTileView {
+                        tile: &entry.tile,
+                        edge_slots: &entry.edge_slots,
+                        target_slots: &entry.target_slots,
+                        kept: &entry.kept,
+                    };
+                    self.aggregate_from_tile_pruned(
+                        targets,
+                        view,
+                        scores,
+                        &mut scratch.partial,
+                        &mut out.data,
+                    );
+                    self.enforce_budget(targets, budget.epsilon(), &entry.bounds, &mut out.data);
+                }
+            }
             reuse.record_group(0, (targets.len() + entry.edge_slots.len()) as u64);
             return (out, reuse, outcome);
         }
-        let (distinct, total) = self.embed_group_tiled(targets, scratch, &mut out.data);
+        let (distinct, total) = match mode {
+            EngineMode::Exact => self.embed_group_tiled(targets, scratch, &mut out.data),
+            EngineMode::Approximate(budget) => {
+                let scores = scores.expect("approximate cached embed requires scores");
+                let (d, t, _) =
+                    self.embed_group_tiled_pruned(targets, budget, scores, scratch, &mut out.data);
+                (d, t)
+            }
+        };
         reuse.record_group(distinct, total);
-        let admit = cache.admit(key, targets, scratch);
+        let admit = cache.admit(key, mode, targets, scratch);
         outcome.inserted_bytes = admit.inserted_bytes;
         outcome.evicted = admit.evicted;
         outcome.evicted_bytes = admit.evicted_bytes;
@@ -359,19 +461,19 @@ mod tests {
         let a = vids(0..4);
         let mut b = a.clone();
         b.reverse();
-        assert_eq!(TileCache::key_of(&a), TileCache::key_of(&a));
-        assert_ne!(TileCache::key_of(&a), TileCache::key_of(&b));
-        assert_ne!(TileCache::key_of(&a), TileCache::key_of(&a[..3]));
+        assert_eq!(TileCache::key_of(EngineMode::Exact, &a), TileCache::key_of(EngineMode::Exact, &a));
+        assert_ne!(TileCache::key_of(EngineMode::Exact, &a), TileCache::key_of(EngineMode::Exact, &b));
+        assert_ne!(TileCache::key_of(EngineMode::Exact, &a), TileCache::key_of(EngineMode::Exact, &a[..3]));
     }
 
     #[test]
     fn lookup_hits_after_admit_and_misses_cold() {
         let mut c = TileCache::new(1 << 20, 1);
         let t = vids(0..8);
-        let key = TileCache::key_of(&t);
-        assert!(c.lookup(key, &t).is_none());
-        c.admit(key, &t, &scratch_for(&t, 16, 4));
-        assert!(c.lookup(key, &t).is_some());
+        let key = TileCache::key_of(EngineMode::Exact, &t);
+        assert!(c.lookup(key, EngineMode::Exact, &t).is_none());
+        c.admit(key, EngineMode::Exact, &t, &scratch_for(&t, 16, 4));
+        assert!(c.lookup(key, EngineMode::Exact, &t).is_some());
         assert_eq!(c.stats.hits, 1);
         assert_eq!(c.stats.misses, 1);
         assert!(c.stats.gather_bytes_saved >= 16 * 4 * 4);
@@ -382,16 +484,16 @@ mod tests {
         let mut c = TileCache::new(1 << 20, 1);
         let a = vids(0..4);
         let b = vids(10..14);
-        let key = TileCache::key_of(&a);
-        c.admit(key, &a, &scratch_for(&a, 8, 4));
+        let key = TileCache::key_of(EngineMode::Exact, &a);
+        c.admit(key, EngineMode::Exact, &a, &scratch_for(&a, 8, 4));
         // Deliberately reuse a's key for b's sequence: must miss.
-        assert!(c.lookup(key, &b).is_none());
+        assert!(c.lookup(key, EngineMode::Exact, &b).is_none());
         assert_eq!(c.stats.hits, 0);
         // And admitting b under the same key replaces a, never coexists.
-        c.admit(key, &b, &scratch_for(&b, 8, 4));
+        c.admit(key, EngineMode::Exact, &b, &scratch_for(&b, 8, 4));
         assert_eq!(c.len(), 1);
-        assert!(c.lookup(key, &a).is_none());
-        assert!(c.lookup(key, &b).is_some());
+        assert!(c.lookup(key, EngineMode::Exact, &a).is_none());
+        assert!(c.lookup(key, EngineMode::Exact, &b).is_some());
     }
 
     #[test]
@@ -399,23 +501,23 @@ mod tests {
         // Each entry: 8 targets+slots*3... compute real size via admit.
         let h = 4;
         let mk = |base: u32| vids(base..base + 4);
-        let one = TileCache::entry_bytes(4, 8, 4, 8 * h);
+        let one = TileCache::entry_bytes(4, 8, 4, 8 * h, 0, 0);
         // Budget fits exactly two entries.
         let mut c = TileCache::new(2 * one, 1);
         let (a, b, d) = (mk(0), mk(100), mk(200));
-        let (ka, kb, kd) = (TileCache::key_of(&a), TileCache::key_of(&b), TileCache::key_of(&d));
-        c.admit(ka, &a, &scratch_for(&a, 8, h));
-        c.admit(kb, &b, &scratch_for(&b, 8, h));
+        let (ka, kb, kd) = (TileCache::key_of(EngineMode::Exact, &a), TileCache::key_of(EngineMode::Exact, &b), TileCache::key_of(EngineMode::Exact, &d));
+        c.admit(ka, EngineMode::Exact, &a, &scratch_for(&a, 8, h));
+        c.admit(kb, EngineMode::Exact, &b, &scratch_for(&b, 8, h));
         assert_eq!(c.len(), 2);
         assert!(c.bytes() <= c.budget());
         // Touch `a` so `b` becomes the LRU victim.
-        assert!(c.lookup(ka, &a).is_some());
-        let out = c.admit(kd, &d, &scratch_for(&d, 8, h));
+        assert!(c.lookup(ka, EngineMode::Exact, &a).is_some());
+        let out = c.admit(kd, EngineMode::Exact, &d, &scratch_for(&d, 8, h));
         assert_eq!(out.evicted, 1);
         assert_eq!(c.len(), 2);
-        assert!(c.lookup(ka, &a).is_some(), "recently-touched entry survived");
-        assert!(c.lookup(kb, &b).is_none(), "LRU entry evicted");
-        assert!(c.lookup(kd, &d).is_some());
+        assert!(c.lookup(ka, EngineMode::Exact, &a).is_some(), "recently-touched entry survived");
+        assert!(c.lookup(kb, EngineMode::Exact, &b).is_none(), "LRU entry evicted");
+        assert!(c.lookup(kd, EngineMode::Exact, &d).is_some());
         assert!(c.bytes() <= c.budget());
         assert_eq!(c.stats.evictions, 1);
     }
@@ -423,14 +525,14 @@ mod tests {
     #[test]
     fn oversized_tiles_are_rejected_and_zero_budget_disables() {
         let t = vids(0..4);
-        let key = TileCache::key_of(&t);
+        let key = TileCache::key_of(EngineMode::Exact, &t);
         let mut small = TileCache::new(64, 1);
-        let out = small.admit(key, &t, &scratch_for(&t, 1024, 16));
+        let out = small.admit(key, EngineMode::Exact, &t, &scratch_for(&t, 1024, 16));
         assert_eq!(out.inserted_bytes, 0);
         assert_eq!(small.len(), 0);
         assert_eq!(small.stats.rejected, 1);
         let mut off = TileCache::new(0, 1);
-        off.admit(key, &t, &scratch_for(&t, 2, 2));
+        off.admit(key, EngineMode::Exact, &t, &scratch_for(&t, 2, 2));
         assert_eq!(off.len(), 0);
         assert_eq!(off.stats.rejected, 1);
     }
@@ -439,8 +541,8 @@ mod tests {
     fn epoch_move_drops_everything_and_is_idempotent() {
         let mut c = TileCache::new(1 << 20, 7);
         let t = vids(0..8);
-        let key = TileCache::key_of(&t);
-        c.admit(key, &t, &scratch_for(&t, 8, 4));
+        let key = TileCache::key_of(EngineMode::Exact, &t);
+        c.admit(key, EngineMode::Exact, &t, &scratch_for(&t, 8, 4));
         assert_eq!(c.len(), 1);
         c.set_epoch(7); // same epoch: no-op
         assert_eq!(c.len(), 1);
@@ -450,7 +552,7 @@ mod tests {
         assert_eq!(c.bytes(), 0);
         assert_eq!(c.epoch(), 8);
         assert_eq!(c.stats.epoch_invalidations, 1);
-        assert!(c.lookup(key, &t).is_none(), "stale tile must not survive an epoch move");
+        assert!(c.lookup(key, EngineMode::Exact, &t).is_none(), "stale tile must not survive an epoch move");
     }
 
     #[test]
@@ -520,5 +622,55 @@ mod tests {
         assert_eq!(reuse.groups, 0);
         assert!(!o.hit);
         assert_eq!(cache.stats.hits + cache.stats.misses, 0);
+    }
+
+    #[test]
+    fn mode_is_part_of_the_key_and_a_mode_clash_is_a_miss() {
+        use crate::engine::approx::PruneBudget;
+        let t = vids(0..8);
+        let approx = EngineMode::Approximate(PruneBudget::new(0.05).unwrap());
+        assert_ne!(
+            TileCache::key_of(EngineMode::Exact, &t),
+            TileCache::key_of(approx, &t),
+            "same targets under different modes must key differently"
+        );
+        // Even if the keys collided, the stored mode degrades the lookup
+        // to a miss: admit an exact tile and probe it under the approx
+        // mode with the *exact* key.
+        let mut c = TileCache::new(1 << 20, 1);
+        let key = TileCache::key_of(EngineMode::Exact, &t);
+        c.admit(key, EngineMode::Exact, &t, &scratch_for(&t, 8, 4));
+        assert!(c.lookup(key, approx, &t).is_none(), "exact tile must never serve approx");
+        assert!(c.lookup(key, EngineMode::Exact, &t).is_some());
+        assert_eq!(c.stats.misses, 1);
+        assert_eq!(c.stats.hits, 1);
+    }
+
+    #[test]
+    fn approximate_cached_embed_hits_replay_the_miss_bitwise() {
+        use crate::engine::approx::{ApproxScores, PruneBudget};
+        let g = Dataset::Acm.load(0.03);
+        let plan = InferencePlan::build(&g, ModelConfig::new(ModelKind::Rgat), 24);
+        let state = FeatureState::project_all(&plan, 2);
+        let scores = ApproxScores::build(&plan, &state);
+        let f = FusedEngine::over(&plan, &state);
+        let order = g.target_vertices();
+        let mode = EngineMode::Approximate(PruneBudget::new(0.05).unwrap());
+        let mut cache = TileCache::new(64 << 20, 1);
+        let mut scratch = TileScratch::default();
+        let (cold, _, o1) =
+            f.embed_group_tile_cached_mode(&order, mode, Some(&scores), &mut cache, &mut scratch);
+        assert!(!o1.hit);
+        let (warm, _, o2) =
+            f.embed_group_tile_cached_mode(&order, mode, Some(&scores), &mut cache, &mut scratch);
+        assert!(o2.hit, "identical approximate request must hit");
+        assert_eq!(cold.max_abs_diff(&warm), 0.0, "approx hit must replay the miss bitwise");
+        // The exact path through the same cache is untouched by the
+        // approximate entry and stays bitwise.
+        let e = ReferenceEngine::new(&g, ModelConfig::new(ModelKind::Rgat), 24);
+        let want = e.embed_semantics_complete(&order);
+        let (exact, _, o3) = f.embed_group_tile_cached(&order, &mut cache, &mut scratch);
+        assert!(!o3.hit, "exact request must not hit the pruned tile");
+        assert_eq!(want.max_abs_diff(&exact), 0.0);
     }
 }

@@ -887,6 +887,39 @@ mod tests {
     }
 
     #[test]
+    fn trace_is_independent_of_thread_and_client_counts() {
+        // The trace is drawn from one sequential SmallRng stream seeded by
+        // `cfg.seed` alone, so execution-side knobs — client threads,
+        // server channels (not even inputs here), deadlines, memory
+        // budgets — must not perturb a single draw. This is what makes
+        // cache-on vs cache-off (and every chaos/mutation harness) replay
+        // *identical* traffic at any parallelism.
+        let targets: Vec<VId> = (0..150).map(VId).collect();
+        let base = LoadConfig { requests: 400, unique: 24, batch: 6, ..LoadConfig::default() };
+        let reference = build_trace(&targets, &base);
+        for concurrency in [1, 2, 8, 64] {
+            let cfg = LoadConfig {
+                concurrency,
+                deadline_ms: Some(concurrency as u64), // also execution-only
+                mem_budget_bytes: Some(concurrency * 1024),
+                ..base.clone()
+            };
+            assert_eq!(
+                build_trace(&targets, &cfg),
+                reference,
+                "trace diverged at concurrency {concurrency}"
+            );
+        }
+        // And the Zipf sampler itself replays bit-for-bit from a seed.
+        let z = Zipf::new(targets.len(), base.skew);
+        let draws = |seed: u64| -> Vec<usize> {
+            let mut rng = SmallRng::seed_from_u64(seed);
+            (0..1000).map(|_| z.sample(&mut rng)).collect()
+        };
+        assert_eq!(draws(base.seed), draws(base.seed));
+    }
+
+    #[test]
     fn comparison_is_bitwise_clean_and_the_cache_hits() {
         let g = Arc::new(Dataset::Acm.load(0.03));
         let cfg = LoadConfig {

@@ -10,15 +10,23 @@
 //! group   <dataset> [--scale S]            grouping quality report
 //! engine  <dataset> [--model M] [--threads N] [--dispatch static|streaming|both]
 //!         [--mem-budget-mb N]              host engine: striped vs static
-//!                                          LPT schedule vs streaming
+//!         [--approx-budget E]              LPT schedule vs streaming
 //!                                          work-stealing dispatch; with a
-//!                                          budget, replay out-of-core too
+//!                                          budget, replay out-of-core too;
+//!                                          with an approx budget, run the
+//!                                          pruned path and verify every
+//!                                          row against the exact baseline
+//!                                          (exit 1 on budget violation)
 //! compare <dataset> [--model M]            TLV vs A100 vs HiHGNN
-//! bench-table <fig2|fig7|fig8|fig9|table3|table4|reuse|serving|budget>  paper table
+//! bench-table <fig2|fig7|fig8|fig9|table3|table4|reuse|serving|budget|approx>  paper table
 //! serve   [--model M] [--scale S] [--cpu]  demo serving loop (PJRT needs
 //!         [--cache-mb N] [--no-cache]      artifacts; --cpu needs none);
 //!         [--deadline-ms N] [--mem-budget-mb N] --mutate N applies N live
-//!         [--mutate N]                     graph deltas between requests
+//!         [--mutate N] [--approx-budget E] graph deltas between requests;
+//!                                          --approx-budget builds the
+//!                                          server approximate (CPU only)
+//!                                          and demos opt-in pruned
+//!                                          requests next to exact ones
 //! loadgen <dataset> [--model M] [--scale S] closed-loop Zipfian load vs
 //!         [--requests N] [--concurrency C]  `serve --cpu`, cache-on vs
 //!         [--skew S] [--batch B]            cache-off on the identical
@@ -52,7 +60,10 @@ use std::time::Instant;
 use tlv_hgnn::baselines::{run_a100, run_hihgnn, GpuConfig, HiHgnnConfig};
 use tlv_hgnn::datasets::Dataset;
 use tlv_hgnn::energy::{tlv_energy, EnergyTable};
-use tlv_hgnn::engine::{FeatureState, FusedEngine, GroupSchedule, InferencePlan, ScheduleMode};
+use tlv_hgnn::engine::{
+    ApproxScores, ErrorReport, FeatureState, FusedEngine, GroupSchedule, InferencePlan,
+    PruneBudget, ScheduleMode,
+};
 use tlv_hgnn::grouping::{default_n_max, group_overlap_driven, OverlapHypergraph};
 use tlv_hgnn::hetgraph::stats;
 use tlv_hgnn::model::{ModelConfig, ModelKind};
@@ -65,8 +76,9 @@ fn usage() -> ! {
         "usage: tlv-hgnn <stats|sim|ablate|group|engine|compare|bench-table|serve|loadgen> [args]\n\
          datasets: acm imdb dblp am fb | models: rgcn rgat nars\n\
          modes: -B -S -P -O | flags: --scale S --model M --mode X --threads N --cpu\n\
-         \x20       --dispatch static|streaming|both --mem-budget-mb N (engine)\n\
-         \x20       --cache-mb N --no-cache --deadline-ms N --mem-budget-mb N (serve)\n\
+         \x20       --dispatch static|streaming|both --mem-budget-mb N --approx-budget E (engine)\n\
+         \x20       --cache-mb N --no-cache --deadline-ms N --mem-budget-mb N\n\
+         \x20       --approx-budget E (serve, CPU only)\n\
          \x20       loadgen: --requests N --concurrency C --skew S --batch B --unique U\n\
          \x20       --seed X --channels N --verify --min-hit-rate F --json PATH\n\
          \x20       --deadline-ms N --faults panic:R,delay:R,error:R,delay_ms:D,seed:S\n\
@@ -371,6 +383,46 @@ fn main() {
                 );
                 failed |= diff != 0.0 || b_order != order;
             }
+            // Approximate-mode verification: --approx-budget E runs the
+            // pruned path and checks every row against the exact striped
+            // baseline. Any per-vertex budget violation is a nonzero exit
+            // — this is the CI smoke gate for the error-budget invariant.
+            if let Some(spec) = flag(rest, "--approx-budget") {
+                let budget = match spec
+                    .parse::<f64>()
+                    .map_err(|e| e.to_string())
+                    .and_then(PruneBudget::new)
+                {
+                    Ok(b) => b,
+                    Err(e) => {
+                        eprintln!("bad --approx-budget: {e}");
+                        usage()
+                    }
+                };
+                let scores = ApproxScores::build(&plan, &state);
+                let t4 = Instant::now();
+                let (approx, stats) = engine.embed_approximate(&order, threads, budget, &scores);
+                let approx_t = t4.elapsed();
+                let report = ErrorReport::compare(budget, &approx, &striped);
+                println!(
+                    "  approx embed         {approx_t:.2?} ({:.2}x vs striped)",
+                    striped_t.as_secs_f64() / approx_t.as_secs_f64()
+                );
+                println!(
+                    "  pruning              kept {} of edges, {} fallbacks ({} of targets)",
+                    pct(stats.kept_fraction()),
+                    stats.fallbacks,
+                    pct(stats.fallback_fraction()),
+                );
+                println!("  approx error         {}", report.summary());
+                if !report.within_budget() {
+                    println!(
+                        "  approx budget        FAIL ({} per-vertex violations)",
+                        report.violations
+                    );
+                    failed = true;
+                }
+            }
             if failed {
                 exit(1);
             }
@@ -426,6 +478,7 @@ fn main() {
                 Some("table4") => println!("{}", report::table4_area_power().render()),
                 Some("reuse") => println!("{}", report::reuse_table().render()),
                 Some("budget") => println!("{}", report::budget_sweep_table().render()),
+                Some("approx") => println!("{}", report::approx_sweep_table().render()),
                 Some("serving") => {
                     // Small verified demo of the hot-tile cache comparison;
                     // the `loadgen` subcommand exposes the full knob set.
@@ -484,6 +537,20 @@ fn main() {
             // allowed) spills the projected table to the file-backed tier
             // when it exceeds the budget; results stay bitwise-identical.
             cfg.mem_budget_bytes = mem_budget_bytes(rest);
+            // Approximate serving: --approx-budget E builds the server in
+            // approximate mode (CPU executor only — Server::start refuses
+            // the combination with PJRT). Requests still default to exact;
+            // only submissions flagged approximate take the pruned path.
+            if let Some(spec) = flag(rest, "--approx-budget") {
+                match spec.parse::<f64>().map_err(|e| e.to_string()).and_then(PruneBudget::new) {
+                    Ok(b) => cfg.approx = Some(b),
+                    Err(e) => {
+                        eprintln!("bad --approx-budget: {e}");
+                        usage()
+                    }
+                }
+            }
+            let approx_on = cfg.approx.is_some();
             let server = match tlv_hgnn::coordinator::Server::start(
                 std::sync::Arc::clone(&g),
                 cfg,
@@ -498,6 +565,17 @@ fn main() {
             for chunk in targets.chunks(32).take(8) {
                 let r = server.submit(chunk.to_vec()).expect("request");
                 println!("req {}: {} embeddings in {:?}", r.id, r.embeddings.len(), r.latency);
+            }
+            if approx_on {
+                for chunk in targets.chunks(32).take(4) {
+                    let r = server.submit_approx(chunk.to_vec()).expect("approx request");
+                    println!(
+                        "approx req {}: {} embeddings in {:?}",
+                        r.id,
+                        r.embeddings.len(),
+                        r.latency
+                    );
+                }
             }
             // Live mutation demo: --mutate N applies N seeded deltas
             // through Server::apply_delta (CPU executor only) and serves

@@ -10,8 +10,8 @@ use crate::energy::{
     EnergyTable,
 };
 use crate::engine::{
-    measure_reuse, walk_per_semantic, FeatureState, FusedEngine, InferencePlan, MemoryTracker,
-    StorageStats,
+    measure_reuse, walk_per_semantic, ApproxScores, ErrorReport, FeatureState, FusedEngine,
+    InferencePlan, MemoryTracker, PruneBudget, StorageStats,
 };
 use crate::grouping::{default_n_max, group_overlap_driven, OverlapHypergraph};
 use crate::hetgraph::stats;
@@ -390,6 +390,109 @@ pub fn budget_sweep_table() -> Table {
     t
 }
 
+/// One point of the approximate-mode accuracy/speed curve: the pruned
+/// path at one error budget, verified row-by-row against the exact
+/// striped baseline (`engine::approx`).
+#[derive(Debug, Clone)]
+pub struct ApproxPoint {
+    /// Per-vertex relative-error budget ε.
+    pub epsilon: f64,
+    /// Wall time of the pruned embed at this budget.
+    pub elapsed_ms: f64,
+    /// Wall time of the exact striped baseline (shared across points).
+    pub exact_ms: f64,
+    /// Fraction of edges the selection kept — the deterministic work
+    /// proxy (wall clock is machine-dependent; this is not).
+    pub kept_fraction: f64,
+    /// Fraction of targets whose guard rejected the pruned row and fell
+    /// back to exact aggregation.
+    pub fallback_fraction: f64,
+    /// Largest per-vertex relative L2 error vs the exact baseline.
+    pub max_rel_err: f64,
+    /// Mean relative L2 error over non-bitwise rows.
+    pub mean_rel_err: f64,
+    /// Rows bitwise-identical to the exact baseline (nothing was pruned
+    /// for them, or everything pruned had zero weight).
+    pub bitwise_rows: usize,
+    /// Every row inside budget — must be true (this is the invariant the
+    /// verification harness enforces; a false here is a release blocker).
+    pub within_budget: bool,
+}
+
+/// Run the pruned path at several error budgets and verify every row
+/// against the exact striped baseline. The accuracy/speed curve behind
+/// `bench-table approx` and the `approx_sweep` bench section.
+pub fn run_approx_sweep(
+    d: Dataset,
+    kind: ModelKind,
+    scale: f64,
+    threads: usize,
+    budgets: &[f64],
+) -> Vec<ApproxPoint> {
+    let g = d.load(scale);
+    let plan = InferencePlan::build(&g, ModelConfig::new(kind), 64);
+    let state = FeatureState::project_all(&plan, threads);
+    let engine = FusedEngine::over(&plan, &state);
+    let scores = ApproxScores::build(&plan, &state);
+    let h = OverlapHypergraph::build(&g, 0.01);
+    let n_max = default_n_max(g.target_vertices().len(), threads);
+    let grouping = group_overlap_driven(&h, n_max, threads);
+    let order = grouping.flat_order();
+    let t0 = std::time::Instant::now();
+    let exact = engine.embed_semantics_complete(&order, threads);
+    let exact_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    budgets
+        .iter()
+        .map(|&eps| {
+            let budget = PruneBudget::new(eps).expect("sweep budget in range");
+            let t1 = std::time::Instant::now();
+            let (approx, stats) = engine.embed_approximate(&order, threads, budget, &scores);
+            let elapsed_ms = t1.elapsed().as_secs_f64() * 1e3;
+            let report = ErrorReport::compare(budget, &approx, &exact);
+            ApproxPoint {
+                epsilon: eps,
+                elapsed_ms,
+                exact_ms,
+                kept_fraction: stats.kept_fraction(),
+                fallback_fraction: stats.fallback_fraction(),
+                max_rel_err: report.max_rel_err,
+                mean_rel_err: report.mean_rel_err,
+                bitwise_rows: report.bitwise_rows,
+                within_budget: report.within_budget(),
+            }
+        })
+        .collect()
+}
+
+/// Approximate-mode accuracy/speed curves as a rendered table (the
+/// `bench-table approx` CLI arm): RGAT on two datasets across widening
+/// budgets, with kept-edge fraction as the machine-independent work axis
+/// and a per-point budget verdict.
+pub fn approx_sweep_table() -> Table {
+    let mut t = Table::new(&[
+        "dataset", "eps", "kept%", "fallback%", "max_err", "mean_err", "bitwise", "time_ms",
+        "exact_ms", "ok",
+    ]);
+    for d in [Dataset::Acm, Dataset::Imdb] {
+        for p in run_approx_sweep(d, ModelKind::Rgat, 0.1, 4, &[0.01, 0.05, 0.1, 0.2]) {
+            t.row(&[
+                d.name().into(),
+                format!("{:.2}", p.epsilon),
+                pct(p.kept_fraction),
+                pct(p.fallback_fraction),
+                format!("{:.2e}", p.max_rel_err),
+                format!("{:.2e}", p.mean_rel_err),
+                p.bitwise_rows.to_string(),
+                f2(p.elapsed_ms),
+                f2(p.exact_ms),
+                if p.within_budget { "in-budget".into() } else { "VIOLATION".into() },
+            ]);
+        }
+    }
+    t
+}
+
 /// Serving-side reuse: the hot-tile cache comparison (`loadgen`) as a
 /// two-row table — cache-on vs cache-off under the identical Zipfian
 /// trace. The interesting columns are hit %, gather bytes saved, and the
@@ -487,6 +590,22 @@ mod tests {
             points[1].stats.prefetch_hits + points[1].stats.prefetch_misses > 0,
             "spilled run must gather through the tier"
         );
+    }
+
+    #[test]
+    fn approx_sweep_is_within_budget_at_test_scale() {
+        // One tight and one loose point; the full curve runs in benches
+        // and `bench-table approx`.
+        let points = run_approx_sweep(Dataset::Acm, ModelKind::Rgat, 0.05, 2, &[0.02, 0.2]);
+        assert_eq!(points.len(), 2);
+        for p in &points {
+            assert!(p.within_budget, "eps {:.2} violated its budget", p.epsilon);
+            assert!(p.kept_fraction > 0.0 && p.kept_fraction <= 1.0);
+            assert!((0.0..=1.0).contains(&p.fallback_fraction));
+        }
+        // Selection thresholds nest: a looser budget never keeps more.
+        assert!(points[1].kept_fraction <= points[0].kept_fraction);
+        assert!(points[1].kept_fraction < 1.0, "20% budget must drop some attention tail");
     }
 
     #[test]

@@ -4,7 +4,8 @@
 pub mod experiments;
 
 pub use experiments::{
-    budget_sweep_table, fig2a_memory_expansion, fig2b_redundancy, fig7a_speedup, fig7b_dram,
-    fig8_energy, fig9_ablation, geomean, reuse_table, run_budget_sweep, run_platforms,
-    serving_table, table3_expansion, table4_area_power, BudgetPoint, PlatformRow,
+    approx_sweep_table, budget_sweep_table, fig2a_memory_expansion, fig2b_redundancy,
+    fig7a_speedup, fig7b_dram, fig8_energy, fig9_ablation, geomean, reuse_table, run_approx_sweep,
+    run_budget_sweep, run_platforms, serving_table, table3_expansion, table4_area_power,
+    ApproxPoint, BudgetPoint, PlatformRow,
 };

@@ -1,0 +1,318 @@
+//! Integration + property suite for the opt-in approximate mode
+//! (`engine::approx`): attention-disparity pruned aggregation behind an
+//! error-bound verification harness.
+//!
+//! The harness is the point — the pruned path ships only because every
+//! claim below is machine-checked against the serial `ReferenceEngine`:
+//!
+//! * **Error within budget.** On random heterogeneous graphs, across
+//!   budgets and thread counts, every target row's relative L2 error vs
+//!   the exact oracle stays within the per-vertex budget ε.
+//! * **ε = 0 collapses to bitwise-exact.** A zero budget prunes nothing
+//!   and reproduces the exact bits, edge for edge.
+//! * **Monotone nesting.** A tighter budget's dropped neighbor set is a
+//!   subset of a looser budget's — tightening can never increase error.
+//! * **Determinism.** The pruned neighbor selection and the output bits
+//!   are identical across runs and thread counts.
+//! * **Exact-mode regression wall.** With the mode enum plumbed through
+//!   engine, tile cache, and server, every pre-existing exact path is
+//!   bitwise-untouched, and an exact server refuses approximate requests
+//!   with a typed error.
+
+use std::sync::Arc;
+use tlv_hgnn::coordinator::{ServeError, Server, ServerConfig};
+use tlv_hgnn::datasets::Dataset;
+use tlv_hgnn::engine::{
+    ApproxScores, EngineMode, ErrorReport, FeatureState, FusedEngine, InferencePlan, PruneBudget,
+    ReferenceEngine, TileCache, TileScratch,
+};
+use tlv_hgnn::hetgraph::{GraphDelta, VId};
+use tlv_hgnn::model::{ModelConfig, ModelKind};
+use tlv_hgnn::util::prop::{check, gen};
+
+/// Relative L2 error of one served row against the oracle row (the same
+/// definition `ErrorReport` uses, f64 accumulation).
+fn rel_l2(got: &[f32], want: &[f32]) -> f64 {
+    assert_eq!(got.len(), want.len());
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (a, b) in got.iter().zip(want) {
+        let d = f64::from(*a) - f64::from(*b);
+        num += d * d;
+        den += f64::from(*b) * f64::from(*b);
+    }
+    if den == 0.0 {
+        if num == 0.0 {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        (num / den).sqrt()
+    }
+}
+
+#[test]
+fn prop_error_stays_within_budget_on_random_graphs() {
+    // The headline property: random graph x budget x thread count, every
+    // row within its per-vertex budget against the serial oracle.
+    check("approx-error-within-budget", 10, |rng| {
+        let g = gen::hetgraph(rng);
+        let order = g.target_vertices();
+        let kind = [ModelKind::Rgat, ModelKind::Rgcn, ModelKind::Nars][rng.gen_index(3)];
+        let plan = InferencePlan::build(&g, ModelConfig::new(kind), 16);
+        let state = FeatureState::project_all(&plan, 1);
+        let engine = FusedEngine::over(&plan, &state);
+        let scores = ApproxScores::build(&plan, &state);
+        let exact =
+            ReferenceEngine::new(&g, ModelConfig::new(kind), 16).embed_semantics_complete(&order);
+        for eps in [0.005, 0.02, 0.1] {
+            let budget = PruneBudget::new(eps).unwrap();
+            for threads in [1usize, 2, 8] {
+                let (approx, stats) = engine.embed_approximate(&order, threads, budget, &scores);
+                let report = ErrorReport::compare(budget, &approx, &exact);
+                assert!(
+                    report.within_budget(),
+                    "{kind:?} eps={eps} t={threads}: {}",
+                    report.summary()
+                );
+                assert_eq!(report.rows, order.len());
+                assert!(stats.kept_edges <= stats.total_edges);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_zero_budget_is_bitwise_exact() {
+    // ε = 0 must not be "approximately exact": it keeps every edge and
+    // reproduces the reference bits, at any thread count.
+    check("approx-zero-budget-bitwise", 8, |rng| {
+        let g = gen::hetgraph(rng);
+        let order = g.target_vertices();
+        let kind = [ModelKind::Rgat, ModelKind::Rgcn, ModelKind::Nars][rng.gen_index(3)];
+        let plan = InferencePlan::build(&g, ModelConfig::new(kind), 16);
+        let state = FeatureState::project_all(&plan, 1);
+        let engine = FusedEngine::over(&plan, &state);
+        let scores = ApproxScores::build(&plan, &state);
+        let want =
+            ReferenceEngine::new(&g, ModelConfig::new(kind), 16).embed_semantics_complete(&order);
+        for threads in [1usize, 3] {
+            let (out, stats) =
+                engine.embed_approximate(&order, threads, PruneBudget::zero(), &scores);
+            assert_eq!(want.max_abs_diff(&out), 0.0, "{kind:?} t={threads}: ε=0 not bitwise");
+            assert_eq!(stats.kept_edges, stats.total_edges, "ε=0 must prune nothing");
+            assert_eq!(stats.fallbacks, 0, "nothing pruned, nothing to guard");
+        }
+    });
+}
+
+#[test]
+fn prop_selection_is_deterministic_and_nests_across_budgets() {
+    // Selection-level monotonicity: over one fixed ranking the drop
+    // threshold is linear in ε, so a tighter budget's dropped set must be
+    // a subset of a looser budget's — and every selection must replay
+    // identically (it is a pure function of (plan, scores, target, ε)).
+    check("approx-selection-nesting", 10, |rng| {
+        let g = gen::hetgraph(rng);
+        let order = g.target_vertices();
+        let plan = InferencePlan::build(&g, ModelConfig::new(ModelKind::Rgat), 16);
+        let state = FeatureState::project_all(&plan, 1);
+        let scores = ApproxScores::build(&plan, &state);
+        for &t in order.iter().take(24) {
+            assert!(
+                scores.dropped_positions(&plan, t, 0.0).is_empty(),
+                "ε=0 must drop nothing at {t}"
+            );
+            let mut prev: Vec<usize> = Vec::new();
+            for eps in [0.002, 0.01, 0.05, 0.2] {
+                let dropped = scores.dropped_positions(&plan, t, eps);
+                assert_eq!(
+                    dropped,
+                    scores.dropped_positions(&plan, t, eps),
+                    "selection must replay identically at {t} eps={eps}"
+                );
+                assert!(
+                    prev.iter().all(|p| dropped.contains(p)),
+                    "tighter budget dropped a neighbor the looser one kept at {t} eps={eps}"
+                );
+                prev = dropped;
+            }
+        }
+    });
+}
+
+#[test]
+fn approx_output_is_bitwise_deterministic_across_runs_and_threads() {
+    // Per-target selection and arithmetic are independent of striping, so
+    // the approximate output (unlike its error, which only has to stay
+    // within budget) is itself bitwise-reproducible at any parallelism.
+    let g = Dataset::Acm.load(0.04);
+    let order = g.target_vertices();
+    let plan = InferencePlan::build(&g, ModelConfig::new(ModelKind::Rgat), 64);
+    let state = FeatureState::project_all(&plan, 4);
+    let engine = FusedEngine::over(&plan, &state);
+    let scores = ApproxScores::build(&plan, &state);
+    let budget = PruneBudget::new(0.05).unwrap();
+    let (a, sa) = engine.embed_approximate(&order, 1, budget, &scores);
+    let (a2, _) = engine.embed_approximate(&order, 1, budget, &scores);
+    assert_eq!(a.max_abs_diff(&a2), 0.0, "same thread count must replay bitwise");
+    for threads in [2usize, 4, 7] {
+        let (b, sb) = engine.embed_approximate(&order, threads, budget, &scores);
+        assert_eq!(a.max_abs_diff(&b), 0.0, "thread count {threads} changed approximate bits");
+        assert_eq!(sa.kept_edges, sb.kept_edges, "pruned set must not depend on striping");
+        assert_eq!(sa.total_edges, sb.total_edges);
+        assert_eq!(sa.fallbacks, sb.fallbacks, "guard decisions must not depend on striping");
+    }
+    // Non-vacuity: a loose budget on the attention model actually prunes.
+    let loose = PruneBudget::new(0.2).unwrap();
+    let (_, sl) = engine.embed_approximate(&order, 4, loose, &scores);
+    assert!(sl.kept_edges < sl.total_edges, "20% budget must drop some attention tail");
+}
+
+#[test]
+fn exact_mode_regression_wall() {
+    // Mode plumbing must leave every pre-existing exact path untouched:
+    // striped embed, group-tile embed, and the cached path — both through
+    // the legacy exact entry point and through the mode-dispatched one
+    // with `EngineMode::Exact` — all bitwise vs the reference.
+    assert!(EngineMode::default().is_exact(), "exact must remain the default mode");
+    assert_eq!(EngineMode::Exact.budget(), None);
+    for d in [Dataset::Acm, Dataset::Imdb] {
+        let g = d.load(0.03);
+        let order = g.target_vertices();
+        for kind in ModelKind::ALL {
+            let e = ReferenceEngine::new(&g, ModelConfig::new(kind), 24);
+            let f = FusedEngine::new(&e);
+            let want = e.embed_semantics_complete(&order);
+            for threads in [1usize, 4] {
+                let got = f.embed_semantics_complete(&order, threads);
+                assert_eq!(
+                    want.max_abs_diff(&got),
+                    0.0,
+                    "{} {kind:?} t={threads}: striped exact path regressed",
+                    d.name()
+                );
+            }
+            let (tiled, _) = f.embed_group_tile(&order);
+            assert_eq!(
+                want.max_abs_diff(&tiled),
+                0.0,
+                "{} {kind:?}: group-tile exact path regressed",
+                d.name()
+            );
+            let mut cache = TileCache::new(8 << 20, 0);
+            let mut scratch = TileScratch::default();
+            let (cold, _, o_cold) = f.embed_group_tile_cached(&order, &mut cache, &mut scratch);
+            let (warm, _, o_warm) = f.embed_group_tile_cached(&order, &mut cache, &mut scratch);
+            assert!(!o_cold.hit && o_warm.hit);
+            assert_eq!(want.max_abs_diff(&cold), 0.0, "{} {kind:?}: cached cold", d.name());
+            assert_eq!(want.max_abs_diff(&warm), 0.0, "{} {kind:?}: cached warm", d.name());
+            // The mode-dispatched entry point with Exact is the identity
+            // wrapper — same cache, same bits, still hitting.
+            let (via_mode, _, o_mode) = f.embed_group_tile_cached_mode(
+                &order,
+                EngineMode::Exact,
+                None,
+                &mut cache,
+                &mut scratch,
+            );
+            assert!(o_mode.hit, "exact mode-dispatched lookup must hit the exact entry");
+            assert_eq!(want.max_abs_diff(&via_mode), 0.0, "{} {kind:?}: mode wrapper", d.name());
+        }
+    }
+}
+
+#[test]
+fn approximate_server_serves_within_budget_and_replays_bitwise() {
+    // End to end: a server built with a budget serves opt-in approximate
+    // requests whose rows stay within ε of the oracle — on the cold
+    // (miss) round and the warm (cache-hit) round, which must replay the
+    // cold rows bitwise. Exact requests on the same server stay bitwise.
+    let g = Arc::new(Dataset::Acm.load(0.03));
+    let order = g.target_vertices();
+    let eps = 0.05;
+    let mut cfg = ServerConfig {
+        channels: 2,
+        tile_cache_bytes: 16 << 20,
+        ..ServerConfig::cpu(ModelKind::Rgat)
+    };
+    cfg.approx = Some(PruneBudget::new(eps).unwrap());
+    let server = Server::start(Arc::clone(&g), cfg).unwrap();
+    let want = ReferenceEngine::new(&g, ModelConfig::new(ModelKind::Rgat), 64)
+        .embed_semantics_complete(&order);
+
+    // Exact traffic on an approximate server: still bitwise.
+    let exact_resp = server.submit(order.clone()).unwrap();
+    for (i, &t) in order.iter().enumerate() {
+        assert_eq!(
+            exact_resp.embedding_of(t).expect("missing exact row"),
+            want.row(i),
+            "exact request on an approximate server must stay bitwise at {t}"
+        );
+    }
+
+    let mut cold_rows: Vec<Vec<f32>> = Vec::new();
+    for round in 0..2 {
+        let resp = server.submit_approx(order.clone()).unwrap();
+        for (i, &t) in order.iter().enumerate() {
+            let got = resp.embedding_of(t).expect("missing approx row");
+            let err = rel_l2(got, want.row(i));
+            assert!(err <= eps, "round {round} target {t}: rel err {err:.3e} > ε={eps}");
+            if round == 0 {
+                cold_rows.push(got.to_vec());
+            } else {
+                assert_eq!(
+                    got, &cold_rows[i][..],
+                    "warm (cached) round must replay the cold round bitwise at {t}"
+                );
+            }
+        }
+    }
+    server.shutdown();
+}
+
+#[test]
+fn approximate_budget_survives_a_live_delta() {
+    // A live graph delta republishes plan, state, AND attention scores;
+    // post-swap approximate traffic must satisfy the budget against a
+    // from-scratch oracle over the mutated graph.
+    let g = Arc::new(Dataset::Acm.load(0.03));
+    let eps = 0.05;
+    let mut cfg = ServerConfig { channels: 2, ..ServerConfig::cpu(ModelKind::Rgat) };
+    cfg.approx = Some(PruneBudget::new(eps).unwrap());
+    let server = Server::start(Arc::clone(&g), cfg).unwrap();
+    let delta = GraphDelta::seeded(&g, 7, 48);
+    let swap = server.apply_delta(&delta).unwrap();
+    let g2 = swap.graph;
+    let order = g2.target_vertices();
+    let want = ReferenceEngine::new(&g2, ModelConfig::new(ModelKind::Rgat), 64)
+        .embed_semantics_complete(&order);
+    let resp = server.submit_approx(order.clone()).unwrap();
+    for (i, &t) in order.iter().enumerate() {
+        let err = rel_l2(resp.embedding_of(t).expect("missing row"), want.row(i));
+        assert!(err <= eps, "post-delta target {t}: rel err {err:.3e} > ε={eps}");
+    }
+    server.shutdown();
+}
+
+#[test]
+fn exact_server_refuses_approximate_requests() {
+    // Double opt-in: without `ServerConfig::approx` the request flag is a
+    // typed, up-front rejection — an exact deployment can never silently
+    // serve pruned rows — and the server keeps serving exact afterwards.
+    let g = Arc::new(Dataset::Acm.load(0.03));
+    let server = Server::start(
+        Arc::clone(&g),
+        ServerConfig { channels: 1, ..ServerConfig::cpu(ModelKind::Rgcn) },
+    )
+    .unwrap();
+    let targets: Vec<VId> = g.target_vertices().into_iter().take(8).collect();
+    let err = server.submit_approx(targets.clone()).unwrap_err();
+    assert_eq!(err, ServeError::ApproxUnsupported);
+    assert_eq!(err.class(), "approx_unsupported");
+    let resp = server.submit(targets.clone()).unwrap();
+    assert_eq!(resp.embeddings.len(), targets.len(), "exact service must survive the refusal");
+    assert!(server.metrics.summary().contains("approx_rejected=1"));
+    server.shutdown();
+}

@@ -8,8 +8,9 @@
 use std::sync::Arc;
 use tlv_hgnn::datasets::Dataset;
 use tlv_hgnn::engine::{
-    walk_semantics_complete, walk_semantics_complete_unfused, AccessCounter, FeatureState,
-    FusedEngine, InferencePlan, MemoryTracker, ReferenceEngine,
+    walk_semantics_complete, walk_semantics_complete_unfused, AccessCounter, EngineMode,
+    FeatureState, FusedEngine, InferencePlan, MemoryTracker, ReferenceEngine, TileCache,
+    TileScratch,
 };
 use tlv_hgnn::grouping::{default_n_max, group_overlap_driven, OverlapHypergraph};
 use tlv_hgnn::hetgraph::{FusedAdjacency, VId};
@@ -68,6 +69,41 @@ fn fused_engine_deterministic_across_runs_and_threads() {
     assert_eq!(a.max_abs_diff(&b), 0.0, "same thread count must be deterministic");
     let c = f.embed_semantics_complete(&order, 7);
     assert_eq!(a.max_abs_diff(&c), 0.0, "thread count must not change bits");
+}
+
+#[test]
+fn exact_mode_is_the_default_and_stays_bitwise() {
+    // PR 10 regression wall (engine side): introducing `EngineMode` must
+    // not perturb any exact path. Exact is the default, and the
+    // mode-dispatched cached entry point under `EngineMode::Exact` is
+    // bitwise the reference, for every model and target order, cold and
+    // warm.
+    assert!(EngineMode::default().is_exact(), "exact must remain the default mode");
+    let g = Dataset::Acm.load(0.04);
+    for kind in ModelKind::ALL {
+        let e = ReferenceEngine::new(&g, ModelConfig::new(kind), 24);
+        let f = FusedEngine::new(&e);
+        for (name, order) in orders(&g) {
+            let want = e.embed_semantics_complete(&order);
+            let mut cache = TileCache::new(16 << 20, 0);
+            let mut scratch = TileScratch::default();
+            for round in 0..2 {
+                let (got, _, outcome) = f.embed_group_tile_cached_mode(
+                    &order,
+                    EngineMode::Exact,
+                    None,
+                    &mut cache,
+                    &mut scratch,
+                );
+                assert_eq!(outcome.hit, round > 0, "{kind:?} {name} round={round}");
+                assert_eq!(
+                    want.max_abs_diff(&got),
+                    0.0,
+                    "{kind:?} {name} round={round}: exact mode-dispatched path regressed"
+                );
+            }
+        }
+    }
 }
 
 #[test]

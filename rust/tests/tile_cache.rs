@@ -8,7 +8,8 @@ use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use tlv_hgnn::coordinator::{PlanCache, Server, ServerConfig};
 use tlv_hgnn::engine::{
-    FeatureState, FusedEngine, ReferenceEngine, TileCache, TileScratch,
+    ApproxScores, EngineMode, ErrorReport, FeatureState, FusedEngine, InferencePlan, PruneBudget,
+    ReferenceEngine, TileCache, TileScratch,
 };
 use tlv_hgnn::hetgraph::{HetGraph, HetGraphBuilder, VId};
 use tlv_hgnn::model::{ModelConfig, ModelKind};
@@ -175,6 +176,54 @@ fn epoch_bump_never_serves_a_stale_tile() {
         let (want, _) = engine2.embed_group_tile(&targets);
         assert_eq!(want.max_abs_diff(&got), 0.0, "post-bump bits must be fresh");
     });
+}
+
+#[test]
+fn exact_and_pruned_tiles_never_collide_in_one_cache() {
+    // PR 10 regression: the engine mode is part of the tile-cache key. The
+    // same target set materialized under `Exact` and `Approximate(ε)`
+    // occupies two distinct entries — a cross-mode lookup degrades to a
+    // miss (recompute), never to a wrong row — and distinct budgets are
+    // likewise distinct keys.
+    let g = Arc::new(graph(31));
+    let targets: Vec<VId> = (0..100).map(VId).collect();
+    let m = ModelConfig::new(ModelKind::Rgat);
+    let plan = InferencePlan::build(&g, m.clone(), 64);
+    let state = FeatureState::project_all(&plan, 1);
+    let engine = FusedEngine::over(&plan, &state);
+    let scores = ApproxScores::build(&plan, &state);
+    let budget = PruneBudget::new(0.2).unwrap();
+    let pruned = EngineMode::Approximate(budget);
+    let want = ReferenceEngine::new(&g, m, 64).embed_semantics_complete(&targets);
+    let mut cache = TileCache::new(32 << 20, 0);
+    let mut scratch = TileScratch::default();
+    let mut run = |mode: EngineMode, s: Option<&ApproxScores>| {
+        engine.embed_group_tile_cached_mode(&targets, mode, s, &mut cache, &mut scratch)
+    };
+
+    // Pruned admission first...
+    let (approx_cold, _, oa) = run(pruned, Some(&scores));
+    assert!(!oa.hit);
+    // ...then the same targets exactly: must MISS (distinct key) and
+    // produce reference bits — a pruned tile can never answer it.
+    let (exact_cold, _, oe) = run(EngineMode::Exact, None);
+    assert!(!oe.hit, "an exact lookup must never hit a pruned tile");
+    assert_eq!(want.max_abs_diff(&exact_cold), 0.0, "exact bits after a pruned admission");
+    // Both entries now coexist: each mode hits its own and replays its own
+    // bits, so the exact admission did not clobber the pruned entry.
+    let (exact_warm, _, oe2) = run(EngineMode::Exact, None);
+    assert!(oe2.hit, "exact entry must hit on repeat");
+    assert_eq!(exact_cold.max_abs_diff(&exact_warm), 0.0);
+    let (approx_warm, _, oa2) = run(pruned, Some(&scores));
+    assert!(oa2.hit, "pruned entry must survive the exact admission");
+    assert_eq!(approx_cold.max_abs_diff(&approx_warm), 0.0, "pruned hit must replay bitwise");
+    // A different budget is a different key.
+    let other = EngineMode::Approximate(PruneBudget::new(0.01).unwrap());
+    let (_, _, ob) = run(other, Some(&scores));
+    assert!(!ob.hit, "a different budget must be a different key");
+    // And the pruned rows obeyed the budget throughout.
+    let report = ErrorReport::compare(budget, &approx_cold, &want);
+    assert!(report.within_budget(), "{}", report.summary());
 }
 
 #[test]
